@@ -1,0 +1,52 @@
+"""Paper Eqs. 4 & 8: selection-phase cache load ratios, measured exactly.
+
+FIER: (1 + 32/g)/16 of the bf16 key bytes.  Quest: 2/L.  The benchmark
+measures the actual bytes of the metadata structures this repo builds and
+asserts they equal the formulas (this is also where the paper's
+"g=32 ↔ p=16 both 1/8" pairing is verified).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import quantize as qz, quest
+
+from .common import emit
+
+
+def run():
+    B, S, H, D = 1, 4096, 4, 64
+    K = jax.random.normal(jax.random.PRNGKey(0), (B, S, H, D))
+    full_bytes = S * H * D * 2  # bf16 keys per batch row
+
+    for g in (32, 64, 128, 256):
+        qk = qz.quantize(K, g)
+        measured = (
+            qk.codes.nbytes + qk.scale.nbytes + qk.zero.nbytes
+        ) / B
+        formula = qz.load_ratio(g)
+        assert abs(measured / full_bytes - formula) < 1e-9, (g, measured)
+        emit(f"load_ratio_fier_g{g}", 0.0,
+             f"measured={measured / full_bytes:.6f} formula={formula:.6f}")
+
+    for p in (8, 16, 32):
+        meta = quest.build_page_meta(K, p)
+        measured = (meta.kmax.nbytes + meta.kmin.nbytes) / B
+        formula = 2.0 / p
+        assert abs(measured / full_bytes - formula) < 1e-9, (p, measured)
+        emit(f"load_ratio_quest_p{p}", 0.0,
+             f"measured={measured / full_bytes:.6f} formula={formula:.6f}")
+
+    # the paper's fairness pairing
+    assert abs(qz.load_ratio(32) - 2.0 / 16) < 1e-12
+    emit("load_ratio_pairing_g32_p16", 0.0, "both=0.125")
+
+
+def main():
+    run()
+
+
+if __name__ == "__main__":
+    main()

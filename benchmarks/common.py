@@ -1,0 +1,85 @@
+"""Shared benchmark substrate: tiny trained models (cached across benches),
+policy bundles, timing, CSV emission."""
+from __future__ import annotations
+
+import dataclasses
+import os
+import pickle
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import reduced_config
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.core.policy import PolicyConfig
+from repro.data.passkey import make_passkey_batch
+from repro.data.pipeline import make_train_batch
+from repro.launch.steps import TrainHParams, init_train_state, make_train_step
+from repro.models import build_model
+
+CACHE_DIR = os.environ.get("REPRO_BENCH_CACHE", "/tmp/repro_bench_cache")
+
+
+def bench_model_cfg(seq: int = 256) -> ModelConfig:
+    """Benchmark LM: big enough to learn the tasks, small enough for CPU."""
+    return dataclasses.replace(
+        reduced_config("olmo-1b"),
+        n_layers=4, d_model=128, n_heads=4, n_kv_heads=4, d_head=32,
+        d_ff=256, vocab=512,
+    )
+
+
+def train_tiny_lm(kind: str = "lm", steps: int = 300, seq: int = 256,
+                  batch: int = 16, seed: int = 0):
+    """Train (or load cached) the benchmark model.  kind: lm | passkey."""
+    os.makedirs(CACHE_DIR, exist_ok=True)
+    cfg = bench_model_cfg(seq)
+    tag = f"{kind}_s{steps}_q{seq}_b{batch}_{seed}"
+    path = os.path.join(CACHE_DIR, f"params_{tag}.pkl")
+    bundle = build_model(cfg)
+    if os.path.exists(path):
+        with open(path, "rb") as f:
+            return cfg, pickle.load(f)
+    hp = TrainHParams(peak_lr=1e-3, warmup=20, total_steps=steps)
+    state = init_train_state(bundle, jax.random.PRNGKey(seed), hp)
+    step_jit = jax.jit(make_train_step(bundle, hp))
+    shape = ShapeConfig("bench", seq, batch, "train")
+    for s in range(steps):
+        if kind == "passkey":
+            # pure passkey curriculum (a 4-layer model needs the focus)
+            batch_data, _ = make_passkey_batch(cfg, batch, seq, seed=seed, step=s)
+        else:
+            batch_data = make_train_batch(cfg, shape, s, seed=seed)
+        state, metrics = step_jit(state, batch_data)
+        if s % 100 == 0:
+            print(f"  [{tag}] step {s}: loss={float(metrics['loss']):.3f}")
+    params = jax.tree.map(np.asarray, state["params"])
+    with open(path, "wb") as f:
+        pickle.dump(params, f)
+    return cfg, params
+
+
+def policy_bundle(cfg, kind: str, budget: int, group: int = 8, page: int = 8,
+                  skip: int = 1):
+    pol = None if kind == "full" else PolicyConfig(
+        kind=kind, budget=budget, group=group, page=page, skip_layers=skip
+    )
+    return build_model(cfg, pol)
+
+
+def timeit(fn, *args, reps: int = 5, warmup: int = 2) -> float:
+    """Median wall-time per call in µs (after jit warmup)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts) * 1e6)
+
+
+def emit(name: str, us: float, derived: str = "") -> None:
+    print(f"{name},{us:.1f},{derived}")

@@ -1,0 +1,130 @@
+"""Scan-aware jaxpr FLOP counter.
+
+XLA's ``compiled.cost_analysis()`` counts every loop body exactly once
+(verified in tests/test_flopcount.py) — useless for scan-over-layers
+models.  This counter walks the jaxpr instead, multiplying scan bodies by
+their trip count and shard_map bodies by their manual-axis device count,
+so the result is the true *global* executed FLOPs (remat recomputation
+included, since the post-autodiff jaxpr contains the recomputed ops).
+
+Conventions (matching XLA's cost model):
+    dot_general:   2·B·M·N·K
+    conv:          2·out_elems·K_spatial·C_in/groups
+    elementwise:   1 flop per output element (transcendentals too)
+    reductions:    1 flop per input element
+Everything else (layout, slicing, gathers) counts 0 flops.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import numpy as np
+
+ELEMENTWISE_1 = {
+    "add", "sub", "mul", "div", "max", "min", "pow", "rem", "and", "or",
+    "xor", "not", "neg", "sign", "floor", "ceil", "round", "abs", "exp",
+    "log", "log1p", "expm1", "tanh", "logistic", "sqrt", "rsqrt", "cbrt",
+    "sin", "cos", "tan", "erf", "erf_inv", "erfc", "atan2", "square",
+    "integer_pow", "select_n", "clamp", "nextafter",
+}
+REDUCTIONS = {
+    "reduce_sum", "reduce_max", "reduce_min", "reduce_prod", "reduce_and",
+    "reduce_or", "argmax", "argmin", "reduce_precision", "cumsum",
+    "cumlogsumexp", "cummax", "cummin", "cumprod",
+}
+CALL_PRIMS = {
+    "pjit", "closed_call", "core_call", "custom_jvp_call", "custom_vjp_call",
+    "custom_vjp_call_jaxpr", "remat", "checkpoint", "remat2", "custom_lin",
+}
+
+
+def _avals_size(avals) -> int:
+    return sum(int(np.prod(a.shape)) for a in avals if hasattr(a, "shape"))
+
+
+def _dot_flops(eqn) -> float:
+    (lc, rc), (lb, rb) = eqn.params["dimension_numbers"]
+    lhs, rhs = (v.aval for v in eqn.invars[:2])
+    K = math.prod(lhs.shape[i] for i in lc)
+    Bd = math.prod(lhs.shape[i] for i in lb)
+    M = math.prod(
+        d for i, d in enumerate(lhs.shape) if i not in lc and i not in lb
+    )
+    N = math.prod(
+        d for i, d in enumerate(rhs.shape) if i not in rc and i not in rb
+    )
+    return 2.0 * Bd * M * N * K
+
+
+def _conv_flops(eqn) -> float:
+    out = eqn.outvars[0].aval
+    rhs = eqn.invars[1].aval
+    groups = eqn.params.get("feature_group_count", 1)
+    k_elems = math.prod(rhs.shape[2:]) if len(rhs.shape) > 2 else 1
+    cin = rhs.shape[1]
+    return 2.0 * math.prod(out.shape) * k_elems * cin / max(groups, 1)
+
+
+def _subjaxprs(eqn):
+    for k in ("jaxpr", "call_jaxpr", "fun_jaxpr", "cond_jaxpr", "body_jaxpr"):
+        if k in eqn.params:
+            yield eqn.params[k]
+    for k in ("branches",):
+        if k in eqn.params:
+            yield from eqn.params[k]
+
+
+def _as_jaxpr(j):
+    return j.jaxpr if hasattr(j, "jaxpr") else j
+
+
+def count_jaxpr(jaxpr, scale: float = 1.0) -> float:
+    flops = 0.0
+    for eqn in jaxpr.eqns:
+        name = eqn.primitive.name
+        if name == "dot_general":
+            flops += scale * _dot_flops(eqn)
+        elif name == "conv_general_dilated":
+            flops += scale * _conv_flops(eqn)
+        elif name == "scan":
+            inner = _as_jaxpr(eqn.params["jaxpr"])
+            flops += count_jaxpr(inner, scale * eqn.params["length"])
+        elif name == "while":
+            # we never emit unbounded whiles; count once and flag
+            for j in _subjaxprs(eqn):
+                flops += count_jaxpr(_as_jaxpr(j), scale)
+        elif name == "cond":
+            branches = [count_jaxpr(_as_jaxpr(b), scale) for b in eqn.params["branches"]]
+            flops += max(branches) if branches else 0.0
+        elif name == "shard_map":
+            mesh = eqn.params.get("mesh")
+            manual = eqn.params.get("manual_axes", getattr(mesh, "axis_names", ()))
+            n = 1
+            for a in manual:
+                try:
+                    n *= dict(zip(mesh.axis_names, mesh.axis_sizes))[a]
+                except Exception:
+                    n *= mesh.shape[a]
+            inner = _as_jaxpr(eqn.params["jaxpr"])
+            flops += count_jaxpr(inner, scale * n)
+        elif name in ELEMENTWISE_1:
+            flops += scale * _avals_size([v.aval for v in eqn.outvars])
+        elif name in REDUCTIONS or name.startswith("reduce_"):
+            flops += scale * _avals_size([v.aval for v in eqn.invars[:1]])
+        elif name == "custom_vjp_call" or name in CALL_PRIMS or name.endswith("_call"):
+            for j in _subjaxprs(eqn):
+                flops += count_jaxpr(_as_jaxpr(j), scale)
+        else:
+            # layout/data-movement ops: 0 flops; but recurse into any
+            # embedded jaxprs (e.g. checkpoint variants)
+            for j in _subjaxprs(eqn):
+                flops += count_jaxpr(_as_jaxpr(j), scale)
+    return flops
+
+
+def count_fn_flops(fn, *args) -> float:
+    """Global FLOPs of ``fn(*args)`` (args may be ShapeDtypeStructs)."""
+    closed = jax.make_jaxpr(fn)(*args)
+    return count_jaxpr(closed.jaxpr)

@@ -1,0 +1,30 @@
+"""FIER core: 1-bit key quantization, token-level KV retrieval, baselines.
+
+Public surface:
+    quantize      — 1-bit group RTN quantize / pack / dequantize
+    retrieval     — approx scores, top-k select, sparse attention (Alg. 1)
+    quest         — Quest page-level baseline
+    eviction      — H2O / StreamingLLM / SnapKV / TOVA baselines
+    policy        — PolicyConfig + registry used by models & serving
+    distributed   — sequence-sharded FIER with log-sum-exp merge
+"""
+from . import distributed, eviction, quantize, quest, retrieval
+from .policy import POLICIES, PolicyConfig, build_metadata, decode_attention, update_metadata
+from .quantize import QuantizedKeys, dequantize, load_ratio, quantize as quantize_keys
+
+__all__ = [
+    "POLICIES",
+    "PolicyConfig",
+    "QuantizedKeys",
+    "build_metadata",
+    "decode_attention",
+    "dequantize",
+    "distributed",
+    "eviction",
+    "load_ratio",
+    "quantize",
+    "quantize_keys",
+    "quest",
+    "retrieval",
+    "update_metadata",
+]

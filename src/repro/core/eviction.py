@@ -1,0 +1,155 @@
+"""KV eviction baselines: StreamingLLM, H2O, TOVA, SnapKV.
+
+These *permanently drop* tokens (the failure mode FIER fixes — dropped
+tokens cannot be recalled).  They are implemented as an alive-mask over the
+cache slab plus per-policy state, updated once per decode step.  Used by the
+quality benchmarks (bench_passkey / bench_pg19 / bench_longbench_proxy); the
+serving fast path only ships full/fier/quest.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .retrieval import NEG_INF
+
+
+class EvictionState(NamedTuple):
+    """alive: bool[B,Hkv,S]; acc: f32[B,Hkv,S] cumulative scores (H2O only)."""
+
+    alive: jax.Array
+    acc: jax.Array
+
+
+def masked_attention_decode(
+    q: jax.Array, K: jax.Array, V: jax.Array, alive: jax.Array
+) -> tuple[jax.Array, jax.Array]:
+    """Dense decode attention restricted to alive tokens.
+
+    Returns (out [B,Hq,D], probs [B,Hkv,S] mean over the query group) — the
+    probs feed H2O/TOVA state updates.
+    """
+    B, Hq, D = q.shape
+    S, Hkv = K.shape[1], K.shape[2]
+    rep = Hq // Hkv
+    scale = 1.0 / jnp.sqrt(jnp.asarray(D, jnp.float32))
+    qf = q.astype(jnp.float32).reshape(B, Hkv, rep, D)
+    s = jnp.einsum("bhrd,bshd->bhrs", qf, K.astype(jnp.float32)) * scale
+    s = jnp.where(alive[:, :, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhrs,bshd->bhrd", p, V.astype(jnp.float32))
+    return out.reshape(B, Hq, D).astype(q.dtype), p.mean(axis=2)
+
+
+def init_state(B: int, Hkv: int, S: int, length: jax.Array) -> EvictionState:
+    """All prefill tokens alive; acc zeroed."""
+    pos = jnp.arange(S, dtype=jnp.int32)
+    alive = jnp.broadcast_to(pos[None, :] < length[:, None], (B, S))
+    alive = jnp.broadcast_to(alive[:, None, :], (B, Hkv, S))
+    return EvictionState(alive, jnp.zeros((B, Hkv, S), jnp.float32))
+
+
+# ---------------------------------------------------------------- StreamingLLM
+def streaming_llm_mask(
+    S: int, length: jax.Array, budget: int, sink: int = 4
+) -> jax.Array:
+    """sink ∪ recent window of (budget - sink).  → bool[B, S] (head-agnostic)."""
+    pos = jnp.arange(S, dtype=jnp.int32)
+    recent = budget - sink
+    is_sink = pos[None, :] < jnp.minimum(sink, length[:, None])
+    is_recent = (pos[None, :] >= length[:, None] - recent) & (
+        pos[None, :] < length[:, None]
+    )
+    return is_sink | is_recent
+
+
+def streaming_llm_state(
+    B: int, Hkv: int, S: int, length: jax.Array, budget: int, sink: int = 4
+) -> EvictionState:
+    m = streaming_llm_mask(S, length, budget, sink)
+    alive = jnp.broadcast_to(m[:, None, :], (B, Hkv, S))
+    return EvictionState(alive, jnp.zeros((B, Hkv, S), jnp.float32))
+
+
+# ------------------------------------------------------------------------ H2O
+def h2o_step(
+    state: EvictionState,
+    probs: jax.Array,
+    length: jax.Array,
+    budget: int,
+    recent: int = 32,
+) -> EvictionState:
+    """Accumulate scores; evict the lowest-acc alive non-recent token if over
+    budget.  One token arrives per decode step → at most one eviction."""
+    acc = state.acc + probs
+    pos = jnp.arange(acc.shape[-1], dtype=jnp.int32)
+    protected = pos[None, None, :] >= (length[:, None, None] - recent)
+    evictable = state.alive & ~protected
+    score = jnp.where(evictable, acc, jnp.inf)
+    victim = jnp.argmin(score, axis=-1)  # [B,Hkv]
+    over = state.alive.sum(axis=-1) > budget  # [B,Hkv]
+    kill = jax.nn.one_hot(victim, acc.shape[-1], dtype=bool) & over[..., None]
+    return EvictionState(state.alive & ~kill, acc)
+
+
+# ----------------------------------------------------------------------- TOVA
+def tova_step(
+    state: EvictionState, probs: jax.Array, length: jax.Array, budget: int
+) -> EvictionState:
+    """Evict the alive token with the lowest *current* attention weight."""
+    score = jnp.where(state.alive, probs, jnp.inf)
+    victim = jnp.argmin(score, axis=-1)
+    over = state.alive.sum(axis=-1) > budget
+    kill = jax.nn.one_hot(victim, probs.shape[-1], dtype=bool) & over[..., None]
+    return EvictionState(state.alive & ~kill, state.acc)
+
+
+# --------------------------------------------------------------------- SnapKV
+def snapkv_state(
+    q_window: jax.Array,
+    K: jax.Array,
+    length: jax.Array,
+    budget: int,
+    *,
+    window: int = 32,
+    pool: int = 7,
+) -> EvictionState:
+    """One-shot prefill selection from the last ``window`` queries' attention,
+    max-pooled over ``pool`` neighbouring positions (clustering), plus the
+    observation window itself.  Selected set is fixed afterwards.
+
+    q_window: [B, Hq, window, D] (last prefill queries)
+    """
+    B, Hq, W, D = q_window.shape
+    S, Hkv = K.shape[1], K.shape[2]
+    rep = Hq // Hkv
+    scale = 1.0 / jnp.sqrt(jnp.asarray(D, jnp.float32))
+    qf = q_window.astype(jnp.float32).reshape(B, Hkv, rep, W, D)
+    s = jnp.einsum("bhrwd,bshd->bhrws", qf, K.astype(jnp.float32)) * scale
+    pos = jnp.arange(S, dtype=jnp.int32)
+    valid = pos[None, None, None, None, :] < length[:, None, None, None, None]
+    s = jnp.where(valid, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1).sum(axis=(2, 3))  # vote: [B,Hkv,S]
+    # cluster votes with a max-pool along the sequence
+    pooled = jax.lax.reduce_window(
+        p, -jnp.inf, jax.lax.max, (1, 1, pool), (1, 1, 1), "SAME"
+    )
+    in_window = (pos[None, None, :] >= length[:, None, None] - window) & (
+        pos[None, None, :] < length[:, None, None]
+    )
+    pooled = jnp.where(in_window, jnp.inf, jnp.where(valid[:, :, 0, 0], pooled, -jnp.inf))
+    k = max(budget, window)
+    _, idx = jax.lax.top_k(pooled, k)
+    alive = jnp.zeros((B, Hkv, S), bool)
+    alive = jax.vmap(jax.vmap(lambda a, i: a.at[i].set(True)))(alive, idx)
+    alive &= valid[:, :, 0, 0]
+    return EvictionState(alive, jnp.zeros((B, Hkv, S), jnp.float32))
+
+
+def append_alive(state: EvictionState, length: jax.Array) -> EvictionState:
+    """Mark the token just written at position ``length`` alive (all heads)."""
+    S = state.alive.shape[-1]
+    onehot = jax.nn.one_hot(length, S, dtype=bool)[:, None, :]
+    return EvictionState(state.alive | onehot, state.acc)

@@ -1,0 +1,135 @@
+"""Cache-policy registry: pluggable decode-attention policies.
+
+``full`` / ``fier`` / ``quest`` are the serving fast paths (stateless
+selection + static metadata, jit-friendly); eviction baselines live in
+``eviction.py`` and are wired directly by the quality benchmarks.
+
+The serving engine and the model zoo only see this interface:
+    meta  = build_metadata(K, cfg)            # after prefill
+    meta  = update_metadata(meta, K, pos)     # after each appended token
+    out   = decode_attention(q, K, V, meta, cfg, length, layer)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from . import quantize, quest, retrieval
+
+# full/fier/quest: serving fast paths.  slm: StreamingLLM as a *policy*
+# (sink ∪ recent window — the strongest eviction baseline that needs no
+# per-step state), used by the generation-level quality benchmarks.
+POLICIES = ("full", "fier", "quest", "slm")
+
+
+@dataclasses.dataclass(frozen=True)
+class PolicyConfig:
+    kind: str = "full"
+    budget: int = 1024
+    group: int = 32          # FIER group size g
+    page: int = 16           # Quest page size L
+    group_reduce: str = "max"  # GQA query-group score reduction
+    sink: int = 0            # forced sink tokens (0 = paper-faithful)
+    recent: int = 0          # forced recent window (0 = paper-faithful)
+    skip_layers: int = 2     # full attention on first N layers (paper/Quest setup)
+    use_kernels: bool = False  # Pallas fast path for the score scan
+
+    def __post_init__(self):
+        if self.kind not in POLICIES:
+            raise ValueError(f"unknown policy {self.kind!r}; choose from {POLICIES}")
+
+
+def build_metadata(K: jax.Array, cfg: PolicyConfig) -> Any:
+    """Selection metadata over a (capacity-sized) key slab [B,S,Hkv,D]."""
+    if cfg.kind == "fier":
+        return quantize.quantize(K, cfg.group)
+    if cfg.kind == "quest":
+        return quest.build_page_meta(K, cfg.page)
+    return None
+
+
+def update_metadata(meta: Any, K: jax.Array, pos: jax.Array, cfg: PolicyConfig) -> Any:
+    """Refresh the metadata block containing position ``pos`` (scalar or [B]).
+
+    The cache slab ``K`` already holds the appended token.  Groups/pages are
+    aligned blocks, so only one block per sequence is touched; we recompute
+    it from the slab with a dynamic slice (batch-uniform pos: the serving
+    engine aligns per-request positions; per-request pos uses vmap).
+    """
+    if meta is None:
+        return None
+    B, S, H, D = K.shape
+    if cfg.kind == "fier":
+        g = cfg.group
+        start = (pos // g) * g
+        blk = jax.lax.dynamic_slice_in_dim(K, start, g, axis=1)  # [B,g,H,D]
+        scale, zero = quantize.group_stats(blk, g)  # [B,1,H,D]
+        bits = quantize.sign_bits(blk, zero, g)
+        codes = quantize.pack_bits(bits)  # [B,g//8,H,D]
+        return quantize.QuantizedKeys(
+            jax.lax.dynamic_update_slice_in_dim(meta.codes, codes, start // 8, axis=1),
+            jax.lax.dynamic_update_slice_in_dim(meta.scale, scale, start // g, axis=1),
+            jax.lax.dynamic_update_slice_in_dim(meta.zero, zero, start // g, axis=1),
+            g,
+        )
+    if cfg.kind == "quest":
+        L = cfg.page
+        start = (pos // L) * L
+        blk = jax.lax.dynamic_slice_in_dim(K, start, L, axis=1)
+        kmax = blk.max(axis=1, keepdims=True).astype(jnp.bfloat16)
+        kmin = blk.min(axis=1, keepdims=True).astype(jnp.bfloat16)
+        return quest.PageMeta(
+            jax.lax.dynamic_update_slice_in_dim(meta.kmax, kmax, start // L, axis=1),
+            jax.lax.dynamic_update_slice_in_dim(meta.kmin, kmin, start // L, axis=1),
+            L,
+        )
+    return meta
+
+
+def decode_attention(
+    q: jax.Array,
+    K: jax.Array,
+    V: jax.Array,
+    meta: Any,
+    cfg: PolicyConfig,
+    length: jax.Array,
+    layer: int | jax.Array = 0,
+) -> jax.Array:
+    """Policy-dispatched decode attention.  Static dispatch on cfg.kind;
+    ``layer < skip_layers`` and ``length <= budget`` fall back to full."""
+    if cfg.kind == "slm":
+        # eviction baseline: fixed sink + recent window, no metadata
+        B, Hq, _ = q.shape
+        Hkv = K.shape[2]
+        sink = max(cfg.sink, 4)
+        zeros = jnp.zeros((B, Hkv, K.shape[1]), jnp.float32)
+        idx = retrieval.select_topk(
+            zeros, cfg.budget, length, sink=sink, recent=cfg.budget - sink
+        )
+        Ksel, Vsel = retrieval.gather_kv(K, V, idx)
+        return retrieval.sparse_attention(q, Ksel, Vsel, idx, length)
+
+    if cfg.kind == "full" or meta is None:
+        return retrieval.full_attention_decode(q, K, V, length)
+
+    if cfg.kind == "fier":
+        sparse = retrieval.fier_attention_decode(
+            q, K, V, meta, cfg.budget, length,
+            group_reduce=cfg.group_reduce, sink=cfg.sink, recent=cfg.recent,
+            use_kernels=cfg.use_kernels,
+        )
+    else:
+        sparse = quest.quest_attention_decode(
+            q, K, V, meta, cfg.budget, length, group_reduce=cfg.group_reduce
+        )
+
+    if isinstance(layer, int):
+        if layer < cfg.skip_layers:
+            return retrieval.full_attention_decode(q, K, V, length)
+        return sparse
+    # traced layer index (scan-over-layers): select at runtime
+    full = retrieval.full_attention_decode(q, K, V, length)
+    return jnp.where(layer < cfg.skip_layers, full, sparse)

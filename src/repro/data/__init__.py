@@ -1,0 +1,9 @@
+from .pipeline import make_train_batch, make_prefill_batch
+from .passkey import make_passkey_batch, passkey_answer_tokens
+
+__all__ = [
+    "make_passkey_batch",
+    "make_prefill_batch",
+    "make_train_batch",
+    "passkey_answer_tokens",
+]

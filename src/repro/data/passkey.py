@@ -1,0 +1,76 @@
+"""Passkey-retrieval task generator (Peng et al., 2023 setup, Tab. 2).
+
+A K-digit passkey is hidden at a random depth inside filler text; the
+prompt ends with a query marker and the model must emit the digits.  The
+token space is carved from the model's own vocab:
+
+    [0, 10)          digit tokens
+    MARK_OPEN/CLOSE  passkey delimiters
+    QUERY            "what is the passkey?" marker
+    [16, vocab)      filler (drawn from the bigram stream for naturalness)
+
+This is the benchmark where eviction (H2O/SLM/TOVA) structurally fails —
+once the passkey tokens are evicted they cannot be recalled — while
+retrieval (Quest/FIER) succeeds, reproducing the paper's Tab. 2 contrast.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+
+MARK_OPEN, MARK_CLOSE, QUERY = 10, 11, 12
+N_DIGITS = 3
+RESERVED = 16
+
+
+def make_passkey_batch(
+    cfg: ModelConfig,
+    B: int,
+    S: int,
+    *,
+    seed: int = 0,
+    step: int = 0,
+    depth: float | None = None,
+) -> tuple[dict, jax.Array]:
+    """Returns (train-style batch over full sequences, answers [B, N_DIGITS]).
+
+    Layout per row: [filler ... MARK_OPEN d0..d4 MARK_CLOSE ... filler
+    QUERY d0..d4].  The loss mask covers only the answer positions, so the
+    same batch trains and evaluates passkey retrieval.
+    """
+    from .pipeline import lm_tokens
+
+    rng = np.random.default_rng(seed * 100003 + step)
+    filler = np.asarray(
+        lm_tokens(seed ^ 0xF1, step, B, S, cfg.vocab - RESERVED)
+    )[:, :S] + RESERVED
+    toks = filler.copy()
+    answers = rng.integers(0, 10, (B, N_DIGITS))
+    tail = N_DIGITS + 1  # QUERY + digits
+    for b in range(B):
+        if depth is None:
+            pos = int(rng.integers(1, S - tail - N_DIGITS - 3))
+        else:
+            pos = max(1, min(int(depth * S), S - tail - N_DIGITS - 3))
+        toks[b, pos] = MARK_OPEN
+        toks[b, pos + 1 : pos + 1 + N_DIGITS] = answers[b]
+        toks[b, pos + 1 + N_DIGITS] = MARK_CLOSE
+        toks[b, S - tail] = QUERY
+        toks[b, S - N_DIGITS :] = answers[b]
+    toks = jnp.asarray(toks, jnp.int32)
+    targets = jnp.concatenate([toks[:, 1:], toks[:, :1] * 0], axis=1)
+    mask = np.zeros((B, S), np.float32)
+    mask[:, S - tail : S - 1] = 1.0  # positions predicting the digits
+    return (
+        {"tokens": toks, "targets": targets, "loss_mask": jnp.asarray(mask)},
+        jnp.asarray(answers, jnp.int32),
+    )
+
+
+def passkey_answer_tokens(batch: dict) -> jax.Array:
+    """Prompt prefix for generation eval: everything up to and incl. QUERY."""
+    toks = batch["tokens"]
+    return toks[:, : toks.shape[1] - N_DIGITS]

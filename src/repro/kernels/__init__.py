@@ -1,0 +1,13 @@
+"""Pallas TPU kernels for the paper's compute hot-spots (FIER §4.4 uses a
+Triton group-quantization kernel + CUDA top-k; the TPU adaptation is in
+DESIGN.md §2/§6):
+
+    fier_score      — packed 1-bit approximate-score scan (decode hot spot)
+    sparse_attention — exact decode attention over the selected tokens
+    pack_quantize   — prefill-time group quantize + bit-pack
+
+``ops``: jit'd wrappers (interpret=True off-TPU).  ``ref``: jnp oracles.
+"""
+from . import ops, ref
+
+__all__ = ["ops", "ref"]

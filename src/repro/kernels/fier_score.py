@@ -1,0 +1,100 @@
+"""Pallas TPU kernel: FIER 1-bit approximate score scan (the decode hot spot).
+
+The paper's Triton kernel reads 1-bit quantized keys and computes
+approximate attention scores.  TPU adaptation (DESIGN.md §2): the win is
+HBM *bytes*, not popcount arithmetic — packed codes stream HBM→VMEM at
+1/16 the bf16 key bytes, unpack to ±1 inside VREGs, and the MXU computes
+the two small matmuls
+
+    s̃[t, r] = Σ_d (codes±1[t,d] · s[t,d]) · q[r,d]  +  Σ_d z[t,d] · q[r,d]
+
+with the group-broadcast of (s, z) done in-register (scale/zero add
+2·16/g bits per weight bit — Eq. 8's load ratio, measured exactly in
+bench_load_ratio).
+
+Layout: the kernel works on head-major views [B, Hkv, ...] so the seq
+scan is the innermost contiguous stream; ``ops.fier_score`` adapts from
+the seq-major cache layout.
+
+Grid: (B·Hkv, S/blk_s).  VMEM per step ≈ blk_s·D/8 (codes) +
+2·(blk_s/g)·D·2 (s,z) + rep·D·4 (q) + blk_s·rep·4 (out) bytes —
+blk_s=512, D=128, g=32: 8 KiB + 16 KiB + ~4 KiB + 16·rep KiB ≪ VMEM;
+block shapes are (8,128)-aligned for the VPU/MXU.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(q_ref, codes_ref, scale_ref, zero_ref, out_ref, *, group: int):
+    """One (batch·kv-head, seq-block) step.
+
+    q_ref:     [rep, D]       f32/bf16 — queries of this kv head's group
+    codes_ref: [blk_s/8, D]   uint8 packed sign bits (seq-major bit order)
+    scale_ref: [blk_s/g, D]   bf16 group scales
+    zero_ref:  [blk_s/g, D]   bf16 group zeros
+    out_ref:   [rep, blk_s]   f32 scores
+    """
+    codes = codes_ref[...]
+    n8, D = codes.shape
+    blk_s = n8 * 8
+    # unpack: bit t of byte i is token 8i+t
+    shifts = jax.lax.broadcasted_iota(jnp.uint8, (n8, 8, D), 1)
+    bits = (codes[:, None, :] >> shifts) & jnp.uint8(1)
+    # bf16 operands, f32 MXU accumulation (±1 and the stored (s, z) are
+    # exact in bf16) — matches the jnp reference's numerics
+    pm1 = bits.reshape(blk_s, D).astype(jnp.bfloat16) * 2.0 - 1.0
+
+    ng = scale_ref.shape[0]
+    scale = jnp.broadcast_to(
+        scale_ref[...].astype(jnp.bfloat16)[:, None, :], (ng, group, D)
+    ).reshape(blk_s, D)
+    zero = jnp.broadcast_to(
+        zero_ref[...].astype(jnp.bfloat16)[:, None, :], (ng, group, D)
+    ).reshape(blk_s, D)
+
+    q = q_ref[...].astype(jnp.bfloat16)  # [rep, D]
+    a = pm1 * scale + zero               # = dequantized keys, in-register
+    out_ref[...] = jax.lax.dot_general(
+        q, a, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("group", "blk_s", "interpret"))
+def fier_score_hm(
+    q: jax.Array,
+    codes: jax.Array,
+    scale: jax.Array,
+    zero: jax.Array,
+    *,
+    group: int,
+    blk_s: int = 512,
+    interpret: bool = True,
+) -> jax.Array:
+    """Head-major score scan.
+
+    q [BH, rep, D], codes [BH, S/8, D] uint8, scale/zero [BH, S/g, D]
+    → scores f32 [BH, rep, S].
+    """
+    BH, rep, D = q.shape
+    S = codes.shape[1] * 8
+    blk_s = min(blk_s, S)
+    assert S % blk_s == 0 and blk_s % group == 0 and blk_s % 8 == 0
+    grid = (BH, S // blk_s)
+    return pl.pallas_call(
+        functools.partial(_kernel, group=group),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((None, rep, D), lambda b, i: (b, 0, 0)),
+            pl.BlockSpec((None, blk_s // 8, D), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((None, blk_s // group, D), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((None, blk_s // group, D), lambda b, i: (b, i, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, rep, blk_s), lambda b, i: (b, 0, i)),
+        out_shape=jax.ShapeDtypeStruct((BH, rep, S), jnp.float32),
+        interpret=interpret,
+    )(q, codes, scale, zero)

@@ -1,0 +1,105 @@
+"""jit'd wrappers adapting cache layouts to the head-major Pallas kernels.
+
+On CPU (this container) kernels run in ``interpret=True`` mode — the
+kernel body executes as Python/jnp, validating the exact code that
+compiles for TPU.  On a TPU backend ``interpret`` flips off automatically.
+
+Layout note: the cache is seq-major [B, S, H, D] (sequence sharding);
+kernels want head-major [B·H, S, D] so the scan streams contiguously.
+The transposes below are the *baseline*; the §Perf layout iteration
+measures a head-major cache variant that removes them (EXPERIMENTS.md).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quantize import QuantizedKeys
+from repro.core.retrieval import NEG_INF
+
+from . import fier_score as _fs
+from . import pack_quantize as _pq
+from . import sparse_attention as _sa
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def fier_score(q: jax.Array, qk: QuantizedKeys, *, blk_s: int = 512) -> jax.Array:
+    """Packed 1-bit score scan.  q [B,Hq,D], qk seq-major → f32 [B,Hq,S]."""
+    B, Hq, D = q.shape
+    Hkv = qk.codes.shape[2]
+    rep = Hq // Hkv
+    S = qk.codes.shape[1] * 8
+    qhm = q.reshape(B, Hkv, rep, D).reshape(B * Hkv, rep, D)
+    to_hm = lambda a: jnp.moveaxis(a, 2, 1).reshape(B * Hkv, a.shape[1], D)
+    out = _fs.fier_score_hm(
+        qhm, to_hm(qk.codes), to_hm(qk.scale), to_hm(qk.zero),
+        group=qk.group, blk_s=min(blk_s, S), interpret=_interpret(),
+    )
+    return out.reshape(B, Hkv, rep, S).reshape(B, Hq, S)
+
+
+def sparse_attention(
+    q: jax.Array,
+    k_sel: jax.Array,
+    v_sel: jax.Array,
+    idx: jax.Array,
+    length: jax.Array | None,
+    *,
+    blk_k: int = 1024,
+) -> jax.Array:
+    """Decode attention over selected tokens.
+
+    q [B,Hq,D]; k_sel/v_sel [B,k,Hkv,D]; idx [B,Hkv,k]; length [B]
+    → [B,Hq,D] (q.dtype).
+    """
+    B, Hq, D = q.shape
+    k = k_sel.shape[1]
+    Hkv = k_sel.shape[2]
+    rep = Hq // Hkv
+    qhm = q.reshape(B, Hkv, rep, D).reshape(B * Hkv, rep, D)
+    khm = jnp.moveaxis(k_sel, 2, 1).reshape(B * Hkv, k, D)
+    vhm = jnp.moveaxis(v_sel, 2, 1).reshape(B * Hkv, k, D)
+    if length is not None:
+        valid = idx < length[:, None, None]
+    else:
+        valid = jnp.ones_like(idx, dtype=bool)
+    mask = valid.reshape(B * Hkv, 1, k).astype(jnp.int8)
+    out = _sa.sparse_attention_hm(
+        qhm, khm, vhm, mask, blk_k=min(blk_k, k), interpret=_interpret()
+    )
+    return out.reshape(B, Hkv, rep, D).reshape(B, Hq, D).astype(q.dtype)
+
+
+def pack_quantize(k: jax.Array, group: int, *, blk_s: int = 512) -> QuantizedKeys:
+    """Quantize+pack a seq-major key slab [B,S,Hkv,D] → QuantizedKeys."""
+    B, S, H, D = k.shape
+    khm = jnp.moveaxis(k, 2, 1).reshape(B * H, S, D)
+    codes, scale, zero = _pq.pack_quantize_hm(
+        khm, group=group, blk_s=min(blk_s, S), interpret=_interpret()
+    )
+    back = lambda a: jnp.moveaxis(a.reshape(B, H, a.shape[1], D), 1, 2)
+    return QuantizedKeys(back(codes), back(scale), back(zero), group)
+
+
+def fier_attention_decode(
+    q: jax.Array,
+    K: jax.Array,
+    V: jax.Array,
+    qk: QuantizedKeys,
+    budget: int,
+    length: jax.Array | None = None,
+    *,
+    group_reduce: str = "max",
+) -> jax.Array:
+    """Kernel-path end-to-end FIER decode (Alg. 1 steps 2–4)."""
+    from repro.core import retrieval
+
+    Hkv = K.shape[2]
+    scores = fier_score(q, qk)
+    kv_scores = retrieval.reduce_over_query_group(scores, Hkv, group_reduce)
+    idx = retrieval.select_topk(kv_scores, budget, length)
+    k_sel, v_sel = retrieval.gather_kv(K, V, idx)
+    return sparse_attention(q, k_sel, v_sel, idx, length)

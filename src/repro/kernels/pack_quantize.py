@@ -1,0 +1,67 @@
+"""Pallas TPU kernel: prefill-time 1-bit group quantize + bit-pack.
+
+One pass over the key slab: per (seq-group, channel) min/max → (scale,
+zero), sign-compare, pack 8 seq-consecutive bits per byte.  Runs once per
+prefill (and per appended block at decode via the incremental update), so
+it is bandwidth-bound on reading K — the kernel streams [blk_s, D] tiles.
+
+Grid: (B·Hkv, S/blk_s); blk_s a multiple of the group size g (group stats
+never straddle blocks).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(k_ref, codes_ref, scale_ref, zero_ref, *, group: int):
+    """k [blk_s, D] → codes [blk_s/8, D] u8, scale/zero [blk_s/g, D] bf16."""
+    k = k_ref[...].astype(jnp.float32)
+    blk_s, D = k.shape
+    ng = blk_s // group
+    kg = k.reshape(ng, group, D)
+    kmax = kg.max(axis=1)
+    kmin = kg.min(axis=1)
+    zero = (kmax + kmin) * 0.5
+    scale = (kmax - kmin) * 0.5
+    # compare against the *stored* (bf16-rounded) zero so codes match what
+    # the score scan will dequantize with (and the jnp oracle)
+    zb = zero.astype(jnp.bfloat16).astype(jnp.float32)
+    zfull = jnp.broadcast_to(zb[:, None, :], (ng, group, D)).reshape(blk_s, D)
+    bits = (k >= zfull).astype(jnp.uint8)
+    shifts = jax.lax.broadcasted_iota(jnp.uint8, (blk_s // 8, 8, D), 1)
+    packed = jnp.sum(bits.reshape(blk_s // 8, 8, D) << shifts, axis=1)
+    codes_ref[...] = packed.astype(jnp.uint8)
+    scale_ref[...] = scale.astype(jnp.bfloat16)
+    zero_ref[...] = zero.astype(jnp.bfloat16)
+
+
+@functools.partial(jax.jit, static_argnames=("group", "blk_s", "interpret"))
+def pack_quantize_hm(
+    k: jax.Array, *, group: int, blk_s: int = 512, interpret: bool = True
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Head-major quantize+pack: k [BH, S, D] → (codes [BH,S/8,D] u8,
+    scale [BH,S/g,D] bf16, zero [BH,S/g,D] bf16)."""
+    BH, S, D = k.shape
+    blk_s = min(blk_s, S)
+    assert S % blk_s == 0 and blk_s % group == 0 and blk_s % 8 == 0
+    grid = (BH, S // blk_s)
+    return pl.pallas_call(
+        functools.partial(_kernel, group=group),
+        grid=grid,
+        in_specs=[pl.BlockSpec((None, blk_s, D), lambda b, i: (b, i, 0))],
+        out_specs=[
+            pl.BlockSpec((None, blk_s // 8, D), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((None, blk_s // group, D), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((None, blk_s // group, D), lambda b, i: (b, i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((BH, S // 8, D), jnp.uint8),
+            jax.ShapeDtypeStruct((BH, S // group, D), jnp.bfloat16),
+            jax.ShapeDtypeStruct((BH, S // group, D), jnp.bfloat16),
+        ],
+        interpret=interpret,
+    )(k)

@@ -1,0 +1,34 @@
+"""Pure-jnp oracles for every Pallas kernel (single source of truth: the
+reference implementations in ``repro.core``).
+
+Each function mirrors the layout of its ``ops.py`` counterpart exactly, so
+tests can sweep shapes/dtypes and ``assert_allclose`` kernel-vs-oracle.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import quantize as qz
+from repro.core import retrieval
+
+
+def fier_score(q: jax.Array, qk: qz.QuantizedKeys) -> jax.Array:
+    """[B,Hq,D] × QuantizedKeys([B,S/8,Hkv,D]) → f32 [B,Hq,S]."""
+    return retrieval.approx_scores(q, qk)
+
+
+def sparse_attention(
+    q: jax.Array,
+    k_sel: jax.Array,
+    v_sel: jax.Array,
+    idx: jax.Array,
+    length: jax.Array | None,
+) -> jax.Array:
+    """[B,Hq,D] × selected [B,k,Hkv,D] → [B,Hq,D]."""
+    return retrieval.sparse_attention(q, k_sel, v_sel, idx, length)
+
+
+def pack_quantize(k: jax.Array, group: int) -> qz.QuantizedKeys:
+    """[B,S,Hkv,D] → QuantizedKeys (codes/scale/zero, seq-major layout)."""
+    return qz.quantize(k, group)

@@ -1,0 +1,101 @@
+"""Pallas TPU kernel: exact decode attention over the FIER-selected tokens.
+
+After top-k selection gathers K'/V' (budget rows, full precision), decode
+attention is a single-query softmax over ``budget`` keys per kv head —
+small enough that one VMEM block holds a whole (kv-head, budget) tile:
+budget=4096, D=128 bf16 → 1 MiB K + 1 MiB V.  Larger budgets tile over
+the budget dim with an online-softmax carry.
+
+Grid: (B·Hkv, budget/blk_k).  Invalid slots (selection padding when
+budget > length) arrive as an int8 mask.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, mask_ref, out_ref, m_ref, d_ref, *, scale):
+    """Online-softmax step over one budget block.
+
+    q [rep, D]; k/v [blk_k, D]; mask int8 [1, blk_k]; out [rep, D] f32;
+    m/d [rep, 128] f32 carries (lane-padded scalars).
+    """
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, -jnp.inf)
+        d_ref[...] = jnp.zeros_like(d_ref)
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    q = q_ref[...].astype(jnp.float32)
+    k = k_ref[...].astype(jnp.float32)
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * scale                                            # [rep, blk_k]
+    valid = mask_ref[...] > 0                            # [1, blk_k]
+    s = jnp.where(valid, s, NEG_INF)
+
+    m_prev = m_ref[..., 0]                               # [rep]
+    m_new = jnp.maximum(m_prev, s.max(axis=-1))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new[:, None])
+    p = jnp.where(valid, p, 0.0)
+    v = v_ref[...].astype(jnp.float32)
+    out_ref[...] = out_ref[...] * alpha[:, None] + jax.lax.dot(
+        p, v, preferred_element_type=jnp.float32
+    )
+    d_ref[..., 0] = d_ref[..., 0] * alpha + p.sum(axis=-1)
+    m_ref[..., 0] = m_new
+
+
+@functools.partial(jax.jit, static_argnames=("blk_k", "interpret"))
+def sparse_attention_hm(
+    q: jax.Array,
+    k_sel: jax.Array,
+    v_sel: jax.Array,
+    mask: jax.Array,
+    *,
+    blk_k: int = 1024,
+    interpret: bool = True,
+) -> jax.Array:
+    """Head-major sparse decode attention.
+
+    q [BH, rep, D]; k_sel/v_sel [BH, budget, D]; mask int8 [BH, 1, budget]
+    → out f32 [BH, rep, D].
+    """
+    BH, rep, D = q.shape
+    budget = k_sel.shape[1]
+    blk_k = min(blk_k, budget)
+    assert budget % blk_k == 0
+    grid = (BH, budget // blk_k)
+    scale = 1.0 / (D**0.5)
+    out, m, d = pl.pallas_call(
+        functools.partial(_kernel, scale=scale),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((None, rep, D), lambda b, j: (b, 0, 0)),
+            pl.BlockSpec((None, blk_k, D), lambda b, j: (b, j, 0)),
+            pl.BlockSpec((None, blk_k, D), lambda b, j: (b, j, 0)),
+            pl.BlockSpec((None, 1, blk_k), lambda b, j: (b, 0, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((None, rep, D), lambda b, j: (b, 0, 0)),
+            pl.BlockSpec((None, rep, 128), lambda b, j: (b, 0, 0)),
+            pl.BlockSpec((None, rep, 128), lambda b, j: (b, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((BH, rep, D), jnp.float32),
+            jax.ShapeDtypeStruct((BH, rep, 128), jnp.float32),
+            jax.ShapeDtypeStruct((BH, rep, 128), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k_sel, v_sel, mask)
+    den = jnp.maximum(d[..., 0], 1e-30)
+    return out / den[..., None]

@@ -1,0 +1,3 @@
+from .cache import append_kv, append_token_metadata, init_layer_cache
+
+__all__ = ["append_kv", "append_token_metadata", "init_layer_cache"]

@@ -1,0 +1,172 @@
+"""KV-cache containers and append primitives.
+
+Caches are plain pytrees (dicts of stacked arrays) owned by each model
+family's ``init_cache``; this module provides the shared primitives:
+fixed-capacity slabs, per-sequence append (continuous batching — every
+sequence has its own write position), and incremental policy-metadata
+refresh (only the group/page containing the written slot is recomputed).
+
+Capacity slabs are bf16; positions beyond ``length`` hold garbage that is
+masked by every consumer (policy select / flash attention bias_mask).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.policy import PolicyConfig
+
+
+def init_layer_cache(
+    n_layers: int,
+    B: int,
+    capacity: int,
+    n_kv: int,
+    d_head: int,
+    cfg: PolicyConfig | None,
+    dtype=jnp.bfloat16,
+) -> dict[str, Any]:
+    """Stacked [L, B, S, Hkv, D] K/V slabs (+ policy metadata side-car)."""
+    kv = dict(
+        k=jnp.zeros((n_layers, B, capacity, n_kv, d_head), dtype),
+        v=jnp.zeros((n_layers, B, capacity, n_kv, d_head), dtype),
+    )
+    if cfg is not None and cfg.kind == "fier":
+        from repro.core.quantize import QuantizedKeys
+
+        g = cfg.group
+        kv["meta"] = QuantizedKeys(
+            jnp.zeros((n_layers, B, capacity // 8, n_kv, d_head), jnp.uint8),
+            jnp.zeros((n_layers, B, capacity // g, n_kv, d_head), jnp.bfloat16),
+            jnp.zeros((n_layers, B, capacity // g, n_kv, d_head), jnp.bfloat16),
+            g,
+        )
+    elif cfg is not None and cfg.kind == "quest":
+        from repro.core.quest import PageMeta
+
+        L = cfg.page
+        kv["meta"] = PageMeta(
+            jnp.zeros((n_layers, B, capacity // L, n_kv, d_head), jnp.bfloat16),
+            jnp.zeros((n_layers, B, capacity // L, n_kv, d_head), jnp.bfloat16),
+            L,
+        )
+    return kv
+
+
+def append_kv(
+    k_cache: jax.Array,
+    v_cache: jax.Array,
+    k_new: jax.Array,
+    v_new: jax.Array,
+    length: jax.Array,
+) -> tuple[jax.Array, jax.Array]:
+    """Write one (or more) new tokens at each sequence's own position.
+
+    k_cache [B,S,H,D], k_new [B,T,H,D], length [B] → updated slabs.
+    """
+    upd = jax.vmap(
+        lambda c, n, i: jax.lax.dynamic_update_slice_in_dim(c, n, i, axis=0)
+    )
+    return upd(k_cache, k_new.astype(k_cache.dtype), length), upd(
+        v_cache, v_new.astype(v_cache.dtype), length
+    )
+
+
+def append_token_metadata(
+    meta: Any,
+    k_slab: jax.Array,
+    length: jax.Array,
+    cfg: PolicyConfig,
+    commit_mask: jax.Array | None = None,
+) -> Any:
+    """Per-sequence incremental metadata refresh after a 1-token append.
+
+    Each sequence may sit in a different group/page, so the single-sequence
+    refresh is vmapped over the batch.  Only the block containing the
+    written slot is recomputed from the slab; when ``commit_mask`` [B] is
+    given, non-committing rows rewrite their OLD block (the select happens
+    on the block, never the whole side-car — no slab-wide copies).
+    """
+    if meta is None or cfg.kind == "full":
+        return meta
+    if cfg.kind == "fier":
+        from repro.core.quantize import QuantizedKeys
+
+        g = cfg.group
+
+        def one(codes, scale, zero, k, pos, ok):
+            # unbatched: codes [S/8,H,D], scale/zero [S/g,H,D], k [S,H,D]
+            start = (pos // g) * g
+            blk = jax.lax.dynamic_slice_in_dim(k, start, g, axis=0)  # [g,H,D]
+            kmax, kmin = blk.max(0), blk.min(0)
+            z, s = (kmax + kmin) * 0.5, (kmax - kmin) * 0.5
+            bits = (blk >= z[None].astype(blk.dtype)).astype(jnp.uint8)
+            shifts = jnp.arange(8, dtype=jnp.uint8).reshape(1, 8, 1, 1)
+            packed = jnp.sum(
+                bits.reshape(g // 8, 8, *bits.shape[1:]) << shifts, axis=1
+            ).astype(jnp.uint8)
+            new_c = packed
+            new_s = s[None].astype(scale.dtype)
+            new_z = z[None].astype(zero.dtype)
+            if ok is not None:
+                old_c = jax.lax.dynamic_slice_in_dim(codes, start // 8, g // 8, 0)
+                old_s = jax.lax.dynamic_slice_in_dim(scale, start // g, 1, 0)
+                old_z = jax.lax.dynamic_slice_in_dim(zero, start // g, 1, 0)
+                new_c = jnp.where(ok, new_c, old_c)
+                new_s = jnp.where(ok, new_s, old_s)
+                new_z = jnp.where(ok, new_z, old_z)
+            return (
+                jax.lax.dynamic_update_slice_in_dim(codes, new_c, start // 8, 0),
+                jax.lax.dynamic_update_slice_in_dim(scale, new_s, start // g, 0),
+                jax.lax.dynamic_update_slice_in_dim(zero, new_z, start // g, 0),
+            )
+
+        cm = commit_mask if commit_mask is not None else None
+        if cm is None:
+            codes, scale, zero = jax.vmap(
+                lambda c, s_, z_, k, p: one(c, s_, z_, k, p, None)
+            )(meta.codes, meta.scale, meta.zero, k_slab, length)
+        else:
+            codes, scale, zero = jax.vmap(one)(
+                meta.codes, meta.scale, meta.zero, k_slab, length, cm
+            )
+        return QuantizedKeys(codes, scale, zero, g)
+
+    if cfg.kind == "quest":
+        from repro.core.quest import PageMeta
+
+        L = cfg.page
+
+        def one(kmax_c, kmin_c, k, pos, ok):
+            start = (pos // L) * L
+            blk = jax.lax.dynamic_slice_in_dim(k, start, L, axis=0)
+            new_mx = blk.max(0, keepdims=True).astype(kmax_c.dtype)
+            new_mn = blk.min(0, keepdims=True).astype(kmin_c.dtype)
+            if ok is not None:
+                old_mx = jax.lax.dynamic_slice_in_dim(kmax_c, start // L, 1, 0)
+                old_mn = jax.lax.dynamic_slice_in_dim(kmin_c, start // L, 1, 0)
+                new_mx = jnp.where(ok, new_mx, old_mx)
+                new_mn = jnp.where(ok, new_mn, old_mn)
+            return (
+                jax.lax.dynamic_update_slice_in_dim(kmax_c, new_mx, start // L, 0),
+                jax.lax.dynamic_update_slice_in_dim(kmin_c, new_mn, start // L, 0),
+            )
+
+        if commit_mask is None:
+            kmax, kmin = jax.vmap(lambda a, b, k, p: one(a, b, k, p, None))(
+                meta.kmax, meta.kmin, k_slab, length
+            )
+        else:
+            kmax, kmin = jax.vmap(one)(
+                meta.kmax, meta.kmin, k_slab, length, commit_mask
+            )
+        return PageMeta(kmax, kmin, L)
+    raise ValueError(cfg.kind)
+
+
+def valid_mask(capacity: int, length: jax.Array) -> jax.Array:
+    """bool[B, capacity] — True for written slots."""
+    pos = jnp.arange(capacity, dtype=jnp.int32)
+    return pos[None, :] < length[:, None]

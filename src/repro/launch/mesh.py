@@ -1,0 +1,39 @@
+"""Production meshes.  Functions, not module constants — importing this
+module never touches jax device state (the dry-run sets
+XLA_FLAGS=--xla_force_host_platform_device_count=512 *before* first init).
+
+Topology: TPU v5e, 16×16 = 256 chips per pod; 2 pods = 512 chips over DCN.
+Axis meanings:
+    pod    — data parallel across pods (gradient all-reduce over DCN)
+    data   — data parallel / FSDP within a pod
+    model  — tensor/expert parallel + decode-time KV sequence sharding
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_local_mesh(model_axis: int = 1):
+    """Whatever devices exist (tests / single host): (data, model)."""
+    n = len(jax.devices())
+    assert n % model_axis == 0
+    return jax.make_mesh((n // model_axis, model_axis), ("data", "model"))
+
+
+def batch_axes(mesh) -> tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def fsdp_axes(mesh, param_bytes: float) -> tuple[str, ...]:
+    """FSDP policy: everything shards over 'data'; >50 GB param trees also
+    shard over 'pod' (ZeRO-3 across pods, paid in inter-pod all-gathers —
+    quantified in EXPERIMENTS.md §Roofline)."""
+    if param_bytes > 50e9 and "pod" in mesh.axis_names:
+        return ("pod", "data")
+    return ("data",)

@@ -1,0 +1,181 @@
+"""Sharding plan: param/optimizer/cache/batch PartitionSpecs by tree path.
+
+Megatron-style TP on the flattened head·d_head / d_ff / padded-vocab dims
+over 'model'; FSDP (ZeRO-3) over 'data' (+'pod' for ≥50 GB trees); MoE
+experts over 'model' (EP); decode KV caches sharded over batch×sequence
+(the distributed-FIER axes).  Rules match on path substrings and apply to
+the *trailing* dims, so layer-stacked ([L, ...]) and superblock-stacked
+([n_apps, E, ...]) params resolve automatically.
+
+Divisibility: vocab is padded to 256 (configs.padded_vocab); all model
+dims in the assigned archs divide the 16-way model axis on their
+*flattened* projections (verified in tests/test_sharding.py) — per-head
+reshapes for non-divisible head counts (minicpm 36H, whisper 12H) are
+left to GSPMD, which inserts resharding there (visible in the roofline
+collective term; see DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import re
+from typing import Any
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# rule: (path regex, trailing-dims spec builder given (fsdp, model))
+_RULES: list[tuple[str, Any]] = [
+    (r"moe/w1$|moe/w3$", lambda f, m: (m, f, None)),   # [E, d, ff] → EP
+    (r"moe/w2$", lambda f, m: (m, None, f)),           # [E, ff, d]
+    (r"moe/router$", lambda f, m: (None, None)),
+    (r"embed$", lambda f, m: (m, f)),                  # [Vp, d]
+    (r"lm_head$", lambda f, m: (f, m)),                # [d, Vp]
+    (r"pos_dec$", lambda f, m: (None, f)),
+    (r"wq$|wk$|wv$", lambda f, m: (f, m)),             # [d, H·Dh]
+    (r"wo$", lambda f, m: (m, f)),                     # [H·Dh, d]
+    (r"w1$|w3$", lambda f, m: (f, m)),                 # [d, ff]
+    (r"w2$", lambda f, m: (m, f)),                     # [ff, d]
+    (r"bq$|bk$|bv$", lambda f, m: (m,)),
+    (r"in_proj$", lambda f, m: (f, m)),                # [d, 2di+2N+H]
+    (r"out_proj$", lambda f, m: (m, f)),               # [di, d]
+    (r"conv_w$|conv_b$", lambda f, m: None),           # small, replicate
+    (r"norm_w$|A_log$|D$|dt_bias$", lambda f, m: None),
+]
+
+
+def _path_str(path) -> str:
+    return "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+
+
+def param_pspec(path_str: str, ndim: int, fsdp, model: str = "model") -> P:
+    f = fsdp if fsdp else None
+    for pat, builder in _RULES:
+        if re.search(pat, path_str):
+            tail = builder(f, model)
+            if tail is None:
+                return P()
+            pad = ndim - len(tail)
+            if pad < 0:  # param smaller than rule (e.g. un-stacked bias)
+                tail = tail[-ndim:]
+                pad = 0
+            return P(*([None] * pad + list(tail)))
+    return P()  # norms, scalars → replicated
+
+
+def param_shardings(
+    params_shape: Any,
+    mesh: Mesh,
+    fsdp: tuple[str, ...] | None,
+    strategy: str = "tp",
+) -> Any:
+    """Pytree of NamedShardings matching a params shape-tree.
+
+    strategy="tp": Megatron TP over 'model' + FSDP over ``fsdp`` (default).
+    strategy="fsdp_pure": no tensor parallelism — every ≥2D param shards
+    its first divisible dim over ALL of ``fsdp`` (ZeRO-3); batch then
+    spans the whole mesh.  §Perf iteration 9: for ≤8B dense archs this
+    trades per-layer TP/SP collectives for one weight all-gather."""
+    f = tuple(fsdp) if fsdp else None
+
+    if strategy == "fsdp_pure":
+        n = 1
+        axis_sizes = dict(zip(mesh.axis_names, mesh.shape.values() if hasattr(mesh.shape, "values") else mesh.axis_sizes))
+        for a in f or ():
+            n *= axis_sizes[a]
+
+        def one_fsdp(path, leaf):
+            if f and len(leaf.shape) >= 2:
+                for dim, d in enumerate(leaf.shape):
+                    if d % n == 0 and d >= n:
+                        spec = [None] * len(leaf.shape)
+                        spec[dim] = f
+                        return NamedSharding(mesh, P(*spec))
+            return NamedSharding(mesh, P())
+
+        return jax.tree_util.tree_map_with_path(one_fsdp, params_shape)
+
+    def one(path, leaf):
+        spec = param_pspec(_path_str(path), len(leaf.shape), f)
+        return NamedSharding(mesh, spec)
+
+    return jax.tree_util.tree_map_with_path(one, params_shape)
+
+
+def opt_shardings(opt_shape: Any, params_sh: Any, mesh: Mesh) -> Any:
+    """AdamW moments shard exactly like their params; step is replicated."""
+    params_flat = jax.tree_util.tree_leaves(params_sh)
+
+    def build(tree):
+        leaves, treedef = jax.tree_util.tree_flatten(tree)
+        return jax.tree_util.tree_unflatten(treedef, params_flat[: len(leaves)])
+
+    from repro.optim.adamw import AdamWState
+
+    return AdamWState(
+        step=NamedSharding(mesh, P()),
+        mu=build(opt_shape.mu),
+        nu=build(opt_shape.nu),
+    )
+
+
+# ------------------------------------------------------------ cache / batch
+
+def cache_batch_axes(init_cache) -> Any:
+    """Discover every cache leaf's batch-axis index by shape-diffing
+    ``init_cache`` at two batch sizes (same trick as serving.Engine)."""
+    c2 = jax.eval_shape(lambda: init_cache(2, 64, 0))
+    c3 = jax.eval_shape(lambda: init_cache(3, 64, 0))
+
+    def axis(a, b):
+        diffs = [i for i, (x, y) in enumerate(zip(a.shape, b.shape)) if x != y]
+        if len(diffs) != 1:
+            raise ValueError(f"ambiguous batch axis: {a.shape} vs {b.shape}")
+        return diffs[0]
+
+    return jax.tree.map(axis, c2, c3)
+
+
+def cache_shardings(
+    cache_shape: Any,
+    mesh: Mesh,
+    batch: tuple[str, ...],
+    seq: tuple[str, ...],
+    batch_axis_tree: Any,
+) -> Any:
+    """Decode-cache shardings: batch dim over ``batch`` axes; for KV slabs
+    and their metadata side-cars, the sequence dim (= batch dim + 1) over
+    ``seq`` axes (distributed FIER).  Mamba/conv states and cross-attn
+    caches shard on batch only."""
+    b = tuple(batch) if batch else None
+    s = tuple(seq) if seq else None
+
+    def one(path, leaf, baxis):
+        ps = _path_str(path)
+        nd = len(leaf.shape)
+        spec = [None] * nd
+        spec[baxis] = b
+        is_slab = (
+            re.search(r"(^|/)(k|v|codes|scale|zero|kmax|kmin)$", ps) or "meta" in ps
+        )
+        if is_slab and "cross" not in ps and nd > baxis + 1:
+            spec[baxis + 1] = s
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree_util.tree_map_with_path(one, cache_shape, batch_axis_tree)
+
+
+def batch_shardings(batch_shape: Any, mesh: Mesh, batch: tuple[str, ...]) -> Any:
+    b = tuple(batch) if batch else None
+
+    def one(leaf):
+        spec = [None] * len(leaf.shape)
+        if spec:
+            spec[0] = b
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree.map(one, batch_shape)
+
+
+def tree_bytes(shape_tree: Any) -> int:
+    return sum(
+        int(l.size) * l.dtype.itemsize for l in jax.tree_util.tree_leaves(shape_tree)
+    )

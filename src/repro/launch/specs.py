@@ -1,0 +1,207 @@
+"""Dry-run cell construction: (arch × shape × mesh) → step fn + sharded
+ShapeDtypeStruct arguments.  No arrays are ever allocated — everything is
+``jax.eval_shape`` + ``ShapeDtypeStruct(..., sharding=...)``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import SHAPES, get_config
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.core.policy import PolicyConfig
+from repro.data.pipeline import make_train_batch
+from repro.models import DistConfig, build_model
+from repro.optim.adamw import adamw_init
+
+from . import sharding as shard
+from .mesh import batch_axes as mesh_batch_axes
+from .mesh import fsdp_axes as mesh_fsdp_axes
+from .steps import TrainHParams, init_train_state, make_serve_step, make_train_step
+
+
+@dataclasses.dataclass
+class Cell:
+    arch: str
+    shape: str
+    kind: str                 # train | prefill | decode
+    fn: Callable              # the step to lower
+    args: tuple               # sharded ShapeDtypeStructs
+    cfg: ModelConfig
+    mesh: Any
+    notes: str = ""
+    tuning: dict = dataclasses.field(default_factory=dict)
+
+
+def _struct(tree_shape: Any, tree_shard: Any) -> Any:
+    return jax.tree.map(
+        lambda l, s: jax.ShapeDtypeStruct(l.shape, l.dtype, sharding=s),
+        tree_shape,
+        tree_shard,
+    )
+
+
+def decode_policy(cfg: ModelConfig, budget: int = 4096, use_kernels: bool = False) -> PolicyConfig | None:
+    if cfg.attention_free:
+        return None  # FIER inapplicable (DESIGN.md §5)
+    return PolicyConfig(
+        kind="fier", budget=budget, group=32, skip_layers=2, use_kernels=use_kernels
+    )
+
+
+def seq_axes_for(shape: ShapeConfig, mesh) -> tuple[str, ...]:
+    """KV sequence sharding at decode: 'model' normally; for batch=1
+    long-context everything shards the sequence."""
+    if shape.global_batch == 1:
+        return tuple(mesh.axis_names)  # ('pod',)? + ('data','model')
+    return ("model",)
+
+
+def build_cell(
+    arch: str,
+    shape_name: str,
+    mesh,
+    *,
+    policy_kind: str = "fier",
+    budget: int = 4096,
+    hp: TrainHParams | None = None,
+    remat: bool = True,
+    dist_mode: str = "local",
+    cost_depth: int | None = None,
+    cost_depth_enc: int | None = None,
+    strategy: str = "tp",
+) -> Cell:
+    """``cost_depth``: roofline depth-extrapolation mode — rebuild the arch
+    at 1–2 (super)layers with the layer scan UNROLLED (XLA cost_analysis
+    counts loop bodies once; see benchmarks/flopcount.py), microbatches=1,
+    skip_layers=0.  Two depths give exact per-layer bytes/collectives."""
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    cell_tuning: dict = {}
+    if cost_depth is not None:
+        depth = (
+            cost_depth * cfg.attn_every if cfg.family == "hybrid" else cost_depth
+        )
+        repl = {"n_layers": depth}
+        if cfg.family == "encdec":
+            repl["n_enc_layers"] = cost_depth_enc or 1
+        cfg = dataclasses.replace(cfg, **repl)
+        hp = hp or TrainHParams(microbatches=1)
+        cell_tuning = {"scan_layers": False}
+    b_axes = mesh_batch_axes(mesh)
+    # param bytes estimate for the FSDP policy
+    itemsize = 2 if cfg.param_dtype == "bfloat16" else 4
+    pbytes = cfg.param_count() * itemsize
+    f_axes = mesh_fsdp_axes(mesh, pbytes)
+    notes = []
+    if strategy == "fsdp_pure":
+        # ZeRO-3 over the whole mesh; batch spans as many axes as divide
+        # the global batch (within-pod at 512 chips — grads AR over 'pod')
+        f_axes = tuple(mesh.axis_names)
+        b_axes = ()
+        n = 1
+        for a in ("data", "model", "pod"):
+            if a in mesh.axis_names and shape.global_batch % (n * mesh.shape[a]) == 0:
+                b_axes += (a,)
+                n *= mesh.shape[a]
+        notes.append("strategy=fsdp_pure")
+
+    if shape.kind == "train":
+        if hp is None:
+            # 100B+ cells: gradient accumulation + bf16 accumulator to fit
+            # v5e HBM; hybrid (Zamba2) microbatches for its SSD intra-chunk
+            # transients (see EXPERIMENTS.md §Dry-run memory table).
+            # fsdp_pure: tokens/chip are already minimal (batch spans the
+            # mesh) and each microbatch would re-gather every weight — mb=1.
+            big = pbytes > 50e9
+            mb = 8 if big else (4 if cfg.family == "hybrid" else 1)
+            if strategy == "fsdp_pure":
+                mb = 1
+            hp = TrainHParams(
+                schedule="wsd" if "minicpm" in arch else "cosine",
+                microbatches=mb,
+                accum_dtype="bfloat16" if big else "float32",
+            )
+        dcfg = DistConfig(
+            mesh=mesh, batch_axes=b_axes, ep_axis="model" if cfg.family == "moe" else None,
+            fsdp_axes=f_axes if cfg.family == "moe" else (),
+        )
+        max_pos = shape.seq_len if cfg.family == "encdec" else None
+        bundle = build_model(cfg, None, dcfg, remat=remat, max_positions=max_pos)
+        step_fn = make_train_step(bundle, hp)
+        params_shape = jax.eval_shape(bundle.init, jax.random.key(0))
+        params_sh = shard.param_shardings(params_shape, mesh, f_axes, strategy)
+        opt_shape = jax.eval_shape(adamw_init, params_shape)
+        opt_sh = shard.opt_shardings(opt_shape, params_sh, mesh)
+        state_struct = {
+            "params": _struct(params_shape, params_sh),
+            "opt": _struct(opt_shape, opt_sh),
+        }
+        batch_shape = jax.eval_shape(
+            lambda: make_train_batch(cfg, shape, 0, batch_override=shape.global_batch)
+        )
+        batch_sh = shard.batch_shardings(batch_shape, mesh, b_axes)
+        batch_struct = _struct(batch_shape, batch_sh)
+        return Cell(arch, shape_name, "train", step_fn, (state_struct, batch_struct),
+                    cfg, mesh, "; ".join(notes), tuning=cell_tuning)
+
+    pol = decode_policy(cfg, budget) if policy_kind == "fier" else (
+        None if policy_kind == "full" or cfg.attention_free
+        else PolicyConfig(kind=policy_kind, budget=budget, skip_layers=2)
+    )
+    if cost_depth is not None and pol is not None:
+        pol = dataclasses.replace(pol, skip_layers=0)
+    # a batch of 1 (long_500k) cannot shard its batch dim — everything
+    # shards the sequence instead
+    cell_b_axes = b_axes if shape.global_batch > 1 else ()
+    s_axes = seq_axes_for(shape, mesh) if shape.kind == "decode" else ("model",)
+    dcfg = DistConfig(
+        mesh=mesh, seq_axes=s_axes if shape.kind == "decode" else (),
+        mode=dist_mode, batch_axes=cell_b_axes,
+        ep_axis="model" if cfg.family == "moe" else None,
+        fsdp_axes=f_axes if cfg.family == "moe" else (),
+    )
+    max_pos = shape.seq_len if cfg.family == "encdec" else None
+    bundle = build_model(cfg, pol, dcfg, remat=remat, max_positions=max_pos)
+    params_shape = jax.eval_shape(bundle.init, jax.random.key(0))
+    # serving: no optimizer — params shard TP over model + FSDP over data
+    params_sh = shard.param_shardings(params_shape, mesh, f_axes)
+    params_struct = _struct(params_shape, params_sh)
+
+    if shape.kind == "prefill":
+        B, S = shape.global_batch, shape.seq_len
+        from repro.data.pipeline import make_prefill_batch
+
+        if cfg.family == "ssm":
+            # uniform-length fast path: static conv-tail slice (§Perf it. 11)
+            step_fn = lambda params, batch: bundle.prefill(
+                params, batch, capacity=S, uniform_full=True)
+        else:
+            step_fn = lambda params, batch: bundle.prefill(params, batch, capacity=S)
+        batch_shape = jax.eval_shape(lambda: make_prefill_batch(cfg, B, _text_len(cfg, S)))
+        batch_sh = shard.batch_shardings(batch_shape, mesh, cell_b_axes)
+        return Cell(arch, shape_name, "prefill", step_fn,
+                    (params_struct, _struct(batch_shape, batch_sh)), cfg, mesh,
+                    tuning=cell_tuning)
+
+    # decode: cache at capacity seq_len, one new token
+    B, S = shape.global_batch, shape.seq_len
+    step_fn = make_serve_step(bundle)
+    cache_shape = jax.eval_shape(lambda: bundle.init_cache(B, S, S - 1))
+    baxes_tree = shard.cache_batch_axes(bundle.init_cache)
+    cache_sh = shard.cache_shardings(cache_shape, mesh, cell_b_axes, s_axes, baxes_tree)
+    token_struct = jax.ShapeDtypeStruct(
+        (B,), jnp.int32,
+        sharding=NamedSharding(mesh, P(tuple(cell_b_axes) if cell_b_axes else None)),
+    )
+    return Cell(arch, shape_name, "decode", step_fn,
+                (params_struct, token_struct, _struct(cache_shape, cache_sh)),
+                cfg, mesh, tuning=cell_tuning)
+
+
+def _text_len(cfg: ModelConfig, S: int) -> int:
+    return S - cfg.n_vision_tokens if cfg.family == "vlm" else S

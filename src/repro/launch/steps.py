@@ -1,0 +1,110 @@
+"""train_step / serve_step builders — the functions the launcher jits and
+the dry-run lowers."""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.model_zoo import ModelBundle
+from repro.optim import (
+    adamw_init,
+    adamw_update,
+    clip_by_global_norm,
+    compress_decompress,
+    cosine_schedule,
+    ef_state_init,
+    wsd_schedule,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainHParams:
+    peak_lr: float = 3e-4
+    warmup: int = 100
+    total_steps: int = 10_000
+    schedule: str = "cosine"          # cosine | wsd (minicpm)
+    grad_clip: float = 1.0
+    weight_decay: float = 0.1
+    compress_grads: bool = False      # 1-bit error-feedback (beyond-paper)
+    microbatches: int = 1             # gradient accumulation (memory / step)
+    accum_dtype: str = "float32"      # grad accumulator (bf16 for 100B+ cells)
+
+
+def make_schedule(hp: TrainHParams) -> Callable:
+    if hp.schedule == "wsd":
+        return partial(
+            wsd_schedule, peak_lr=hp.peak_lr, warmup=hp.warmup, total=hp.total_steps
+        )
+    return partial(
+        cosine_schedule, peak_lr=hp.peak_lr, warmup=hp.warmup, total=hp.total_steps
+    )
+
+
+def make_train_step(bundle: ModelBundle, hp: TrainHParams) -> Callable:
+    """(state, batch) → (state, metrics);
+    state = {params, opt, ef?} — a single pytree so checkpointing and
+    recovery handle one object."""
+    sched = make_schedule(hp)
+
+    def train_step(state, batch):
+        params, opt = state["params"], state["opt"]
+        if hp.microbatches > 1:
+            # gradient accumulation: scan over microbatches — activations
+            # and attention/MoE transients shrink by ×microbatches
+            n = hp.microbatches
+            adt = jnp.bfloat16 if hp.accum_dtype == "bfloat16" else jnp.float32
+            mb = jax.tree.map(
+                lambda x: x.reshape(n, x.shape[0] // n, *x.shape[1:]), batch
+            )
+
+            def mb_body(acc, b):
+                (l, m), g = jax.value_and_grad(bundle.train_loss, has_aux=True)(
+                    params, b
+                )
+                acc = jax.tree.map(lambda a, x: a + x.astype(adt), acc, g)
+                return acc, (l, m)
+
+            zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, adt), params)
+            grads, (losses, ms) = jax.lax.scan(mb_body, zeros, mb)
+            grads = jax.tree.map(lambda g: g / n, grads)
+            loss = losses.mean()
+            metrics = jax.tree.map(lambda x: x.mean(axis=0), ms)
+        else:
+            (loss, metrics), grads = jax.value_and_grad(
+                bundle.train_loss, has_aux=True
+            )(params, batch)
+        grads, gnorm = clip_by_global_norm(grads, hp.grad_clip)
+        if hp.compress_grads:
+            grads, ef = compress_decompress(grads, state["ef"])
+        lr = sched(opt.step)
+        params, opt = adamw_update(
+            grads, opt, params, lr, weight_decay=hp.weight_decay
+        )
+        new_state = dict(state, params=params, opt=opt)
+        if hp.compress_grads:
+            new_state["ef"] = ef
+        metrics = dict(metrics, grad_norm=gnorm, lr=lr, total=loss)
+        return new_state, metrics
+
+    return train_step
+
+
+def init_train_state(bundle: ModelBundle, rng, hp: TrainHParams) -> dict:
+    params = bundle.init(rng)
+    state = {"params": params, "opt": adamw_init(params)}
+    if hp.compress_grads:
+        state["ef"] = ef_state_init(params)
+    return state
+
+
+def make_serve_step(bundle: ModelBundle) -> Callable:
+    """(params, token [B], cache) → (logits, cache) — the decode hot loop."""
+    return bundle.decode_step
+
+
+def make_prefill_step(bundle: ModelBundle, capacity: int) -> Callable:
+    return partial(bundle.prefill, capacity=capacity)

@@ -1,0 +1,107 @@
+"""Training driver: ``python -m repro.launch.train --arch olmo-1b ...``
+
+End-to-end: config → mesh → sharded train_step jit → deterministic data →
+checkpoint/restart (fault-injectable) → metrics log.  Reduced configs run
+on this container's CPU; full configs + production mesh go through
+dryrun.py (and on real pods, this same driver with --mesh production).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import CheckpointManager
+from repro.configs import SHAPES, get_config, reduced_config
+from repro.configs.base import ShapeConfig
+from repro.data.pipeline import make_train_batch
+from repro.launch import sharding as shard
+from repro.launch.mesh import batch_axes, fsdp_axes, make_local_mesh
+from repro.launch.steps import TrainHParams, init_train_state, make_train_step
+from repro.models import DistConfig, build_model
+from repro.runtime import FaultInjector, StragglerMonitor, run_with_recovery
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true",
+                    help="smoke-scale config (CPU-runnable)")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--schedule", default=None, choices=[None, "cosine", "wsd"])
+    ap.add_argument("--compress-grads", action="store_true")
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=20)
+    ap.add_argument("--fail-at", type=int, nargs="*", default=[],
+                    help="inject faults at these steps (fault-tolerance demo)")
+    ap.add_argument("--model-axis", type=int, default=1)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args()
+
+    cfg = reduced_config(args.arch) if args.reduced else get_config(args.arch)
+    mesh = make_local_mesh(model_axis=args.model_axis)
+    b_axes = batch_axes(mesh)
+    f_axes = fsdp_axes(mesh, cfg.param_count() * 4)
+    schedule = args.schedule or ("wsd" if "minicpm" in args.arch else "cosine")
+    hp = TrainHParams(
+        peak_lr=args.lr, warmup=max(args.steps // 10, 1), total_steps=args.steps,
+        schedule=schedule, compress_grads=args.compress_grads,
+    )
+    dcfg = DistConfig(
+        mesh=mesh, batch_axes=b_axes,
+        ep_axis="model" if cfg.family == "moe" and mesh.shape["model"] > 1 else None,
+        fsdp_axes=(),
+    )
+    max_pos = args.seq if cfg.family == "encdec" else None
+    bundle = build_model(cfg, None, dcfg, max_positions=max_pos)
+    train_step = make_train_step(bundle, hp)
+
+    state = init_train_state(bundle, jax.random.PRNGKey(args.seed), hp)
+    params_sh = shard.param_shardings(jax.eval_shape(lambda: state["params"]), mesh, f_axes)
+    state_sh = {
+        "params": params_sh,
+        "opt": shard.opt_shardings(jax.eval_shape(lambda: state["opt"]), params_sh, mesh),
+    }
+    if "ef" in state:
+        state_sh["ef"] = params_sh
+    state = jax.tree.map(jax.device_put, state, state_sh)
+
+    shape = ShapeConfig("cli", args.seq, args.batch, "train")
+    step_jit = jax.jit(train_step, donate_argnums=(0,))
+
+    ckpt = CheckpointManager(args.ckpt_dir, keep_n=2)
+    injector = FaultInjector(args.fail_at)
+    monitor = StragglerMonitor()
+    t_start = time.time()
+
+    def one_step(st, step):
+        injector.maybe_fail(step)
+        batch = make_train_batch(cfg, shape, step, seed=args.seed)
+        monitor.start()
+        st, metrics = step_jit(st, batch)
+        dt = monitor.stop(step)
+        if step % args.log_every == 0 or step == args.steps - 1:
+            m = {k: float(v) for k, v in metrics.items()}
+            print(json.dumps({"step": step, "dt_s": round(dt, 3), **m}))
+        return st
+
+    state, stats = run_with_recovery(
+        one_step, state, args.steps, ckpt, ckpt_every=args.ckpt_every,
+        state_like=state,
+    )
+    print(json.dumps({
+        "done": True, "steps": args.steps, "wall_s": round(time.time() - t_start, 1),
+        "restarts": stats["restarts"], "resumed_from": stats["resumed_from"],
+        "straggler_events": len(monitor.events),
+    }))
+
+
+if __name__ == "__main__":
+    main()

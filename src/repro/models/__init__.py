@@ -1,0 +1,4 @@
+from .attention import DistConfig
+from .model_zoo import ModelBundle, build_model
+
+__all__ = ["DistConfig", "ModelBundle", "build_model"]

@@ -1,0 +1,270 @@
+"""Zamba2-style hybrid: Mamba2 backbone + weight-shared attention blocks.
+
+Every ``attn_every`` Mamba2 layers, ONE shared (single weight copy)
+attention block is applied.  Per the Zamba2 design the shared block reads
+``concat(hidden, original_embedding)`` (width 2·d_model); we route that
+concat through the attention path (q/k/v projections from 2d) while the
+block's MLP consumes the post-attention hidden (width d) — recorded as a
+simplification in DESIGN.md §2.
+
+Each *application point* has its own KV cache (weights shared, activations
+not), so the model has n_apps = n_layers // attn_every attention caches —
+the only KV caches in the model, and exactly where FIER applies
+(DESIGN.md §5).  ``pol.skip_layers`` is ignored here (the first shared
+block already sits ``attn_every`` layers deep).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, padded_vocab
+from repro.core.policy import PolicyConfig, build_metadata
+from repro.kvcache import cache as kvcache
+
+from . import attention as attn
+from .layers import apply_norm, init_embedding, init_mlp, init_norm, mlp_apply, rms_norm, wuse
+from .mamba2 import (
+    init_mamba_block,
+    init_mamba_state,
+    mamba_block_decode,
+    mamba_block_train,
+)
+from .transformer import ModelBundle, _chunked_ce, _masked_logits
+from .tuning import maybe_scan
+
+
+def _n_apps(cfg: ModelConfig) -> tuple[int, int]:
+    n_apps = cfg.n_layers // cfg.attn_every
+    tail = cfg.n_layers - n_apps * cfg.attn_every
+    return n_apps, tail
+
+
+def init_shared_block(rng: jax.Array, cfg: ModelConfig) -> dict:
+    k1, k2 = jax.random.split(rng)
+    return {
+        "norm1": init_norm(cfg.norm, 2 * cfg.d_model),
+        "attn": attn.init_attention(k1, cfg, d_in=2 * cfg.d_model),
+        "norm2": init_norm(cfg.norm, cfg.d_model),
+        "mlp": init_mlp(k2, cfg.d_model, cfg.d_ff, cfg.act),
+    }
+
+
+def shared_block_train(h, x0, sp, cfg):
+    xin = jnp.concatenate([h, x0], axis=-1)
+    a = attn.attention_train(sp["attn"], apply_norm(xin, sp["norm1"], cfg.norm), cfg)
+    h = h + a
+    return h + mlp_apply(apply_norm(h, sp["norm2"], cfg.norm), sp["mlp"], cfg.act)
+
+
+def build(
+    cfg: ModelConfig,
+    pol: PolicyConfig | None = None,
+    dcfg: attn.DistConfig | None = None,
+    *,
+    remat: bool = True,
+    loss_chunk: int = 1024,
+) -> ModelBundle:
+    pol = pol or PolicyConfig(kind="full")
+    Vp = padded_vocab(cfg)
+    cdt = jnp.bfloat16 if cfg.compute_dtype == "bfloat16" else jnp.float32
+    n_apps, tail = _n_apps(cfg)
+    E = cfg.attn_every
+
+    def init(rng):
+        ke, km, kt, ks = jax.random.split(rng, 4)
+        main = jax.vmap(lambda r: init_mamba_block(r, cfg))(
+            jax.random.split(km, n_apps * E)
+        )
+        main = jax.tree.map(lambda a: a.reshape(n_apps, E, *a.shape[1:]), main)
+        params = {
+            "embed": init_embedding(ke, Vp, cfg.d_model),
+            "mamba": main,
+            "shared": init_shared_block(ks, cfg),
+            "final_norm": jnp.ones((cfg.d_model,), jnp.float32),
+        }
+        if tail:
+            params["mamba_tail"] = jax.vmap(lambda r: init_mamba_block(r, cfg))(
+                jax.random.split(kt, tail)
+            )
+        return params
+
+    # ---------------------------------------------------------------- train
+    def _fwd_train(params, h):
+        x0 = h
+
+        def super_fn(hc, lp6):
+            def m_fn(hm, lp):
+                return mamba_block_train(hm, lp, cfg), None
+
+            hc, _ = jax.lax.scan(m_fn, hc, lp6)
+            hc = shared_block_train(hc, x0, params["shared"], cfg)
+            return attn.seq_shard_constraint(hc, dcfg), None
+
+        body = super_fn
+        if remat:
+            body = jax.checkpoint(
+                super_fn, policy=jax.checkpoint_policies.nothing_saveable
+            )
+        h, _ = maybe_scan(body, h, params["mamba"])
+        if tail:
+            def m_fn(hm, lp):
+                return mamba_block_train(hm, lp, cfg), None
+
+            h, _ = maybe_scan(m_fn, h, params["mamba_tail"])
+        return rms_norm(h, params["final_norm"])
+
+    def train_loss(params, batch):
+        h = jnp.take(params["embed"], batch["tokens"], axis=0).astype(cdt)
+        h = attn.seq_shard_constraint(h, dcfg)  # §Perf iteration 11
+        h = _fwd_train(params, h)
+        loss, n = _chunked_ce(
+            h, params["embed"].T, batch["targets"], batch["loss_mask"], cfg.vocab,
+            Vp, loss_chunk,
+        )
+        return loss, {"loss": loss, "moe_aux": jnp.float32(0.0), "tokens": n}
+
+    # -------------------------------------------------------------- prefill
+    def prefill(params, batch, capacity: int | None = None):
+        lengths = batch["lengths"]
+        h = jnp.take(params["embed"], batch["tokens"], axis=0).astype(cdt)
+        h = attn.seq_shard_constraint(h, dcfg)  # §Perf iteration 11
+        B, S, _ = h.shape
+        cap = capacity if capacity is not None else S
+        x0 = h
+        valid = kvcache.valid_mask(S, lengths)
+
+        def mamba_prefill_layer(hc, lp):
+            return _mamba_prefill_step(hc, lp, cfg, lengths, valid)
+
+        def super_fn(hc, lp6):
+            hc, mstates = jax.lax.scan(mamba_prefill_layer, hc, lp6)
+            # shared attention with cache capture
+            sp = params["shared"]
+            xin = jnp.concatenate([hc, x0], axis=-1)
+            xn = apply_norm(xin, sp["norm1"], cfg.norm)
+            q, k, v = attn.qkv_proj(sp["attn"], xn, cfg, positions=None)
+            o = attn.flash_attention(q, k, v, causal=True, bias_mask=valid)
+            o = o.reshape(B, S, cfg.n_heads * cfg.d_head) @ sp["attn"]["wo"].astype(hc.dtype)
+            hc = hc + o
+            hc = hc + mlp_apply(apply_norm(hc, sp["norm2"], cfg.norm), sp["mlp"], cfg.act)
+            hc = attn.seq_shard_constraint(hc, dcfg)
+            pad = ((0, 0), (0, cap - S), (0, 0), (0, 0))
+            return hc, (
+                mstates,
+                jnp.pad(k.astype(jnp.bfloat16), pad),
+                jnp.pad(v.astype(jnp.bfloat16), pad),
+            )
+
+        h, (mstates, K, V) = maybe_scan(super_fn, h, params["mamba"])
+        tail_states = None
+        if tail:
+            h, tail_states = maybe_scan(mamba_prefill_layer, h, params["mamba_tail"])
+        h = rms_norm(h, params["final_norm"])
+        attn_cache = {"k": K, "v": V}
+        if pol.kind in ("fier", "quest"):
+            attn_cache["meta"] = jax.vmap(lambda Kl: build_metadata(Kl, pol))(K)
+        cache = {
+            "mamba": mstates,
+            "attn": attn_cache,
+            "length": lengths,
+        }
+        if tail:
+            cache["mamba_tail"] = tail_states
+        last = jnp.take_along_axis(h, (lengths - 1)[:, None, None], axis=1)[:, 0]
+        return _masked_logits(last, params["embed"].T, cfg.vocab, Vp), cache
+
+    # --------------------------------------------------------------- decode
+    def decode_step(params, token, cache):
+        length = cache["length"]
+        x = jnp.take(params["embed"], token, axis=0)[:, None, :].astype(cdt)
+        x0 = x
+        sp = params["shared"]
+
+        def super_fn(hc, xs):
+            lp6, mstate, ac = xs
+
+            def m_fn(hm, inner):
+                lp, st = inner
+                return mamba_block_decode(hm, lp, st, cfg)
+
+            hc, mstate = jax.lax.scan(m_fn, hc, (lp6, mstate))
+            xin = jnp.concatenate([hc, x0], axis=-1)
+            o, ac = attn.decode_self_attention(
+                sp["attn"], apply_norm(xin, sp["norm1"], cfg.norm), ac, length,
+                cfg, pol, dcfg,
+            )
+            hc = hc + o
+            hc = hc + mlp_apply(apply_norm(hc, sp["norm2"], cfg.norm), sp["mlp"], cfg.act)
+            return hc, (mstate, ac)
+
+        h, (mstates, attn_cache) = maybe_scan(
+            super_fn, x, (params["mamba"], cache["mamba"], cache["attn"])
+        )
+        new_cache = dict(cache, mamba=mstates, attn=attn_cache, length=length + 1)
+        if tail:
+            def m_fn(hm, inner):
+                lp, st = inner
+                return mamba_block_decode(hm, lp, st, cfg)
+
+            h, tail_states = maybe_scan(
+                m_fn, h, (params["mamba_tail"], cache["mamba_tail"])
+            )
+            new_cache["mamba_tail"] = tail_states
+        h = rms_norm(h, params["final_norm"])[:, 0]
+        return _masked_logits(h, params["embed"].T, cfg.vocab, Vp), new_cache
+
+    def init_cache(B, capacity, length):
+        st = init_mamba_state(B, cfg)
+        mstates = jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (n_apps, E) + a.shape), st
+        )
+        cache = {
+            "mamba": mstates,
+            "attn": kvcache.init_layer_cache(
+                n_apps, B, capacity, cfg.n_kv_heads, cfg.d_head,
+                pol if pol.kind != "full" else None,
+            ),
+            "length": jnp.full((B,), length, jnp.int32),
+        }
+        if tail:
+            cache["mamba_tail"] = jax.tree.map(
+                lambda a: jnp.broadcast_to(a, (tail,) + a.shape), st
+            )
+        return cache
+
+    return ModelBundle(
+        cfg=cfg, init=init, train_loss=train_loss, prefill=prefill,
+        decode_step=decode_step, init_cache=init_cache,
+        param_count=cfg.param_count,
+    )
+
+
+def _mamba_prefill_step(hc, lp, cfg, lengths, valid):
+    """One Mamba2 layer forward over the full sequence + final-state capture
+    (shared between hybrid prefill scans)."""
+    from .mamba2 import _causal_conv, _split_proj, ssd_chunked
+
+    B, S, _ = hc.shape
+    di, N, H, Pd = cfg.d_inner, cfg.ssm_state, cfg.n_ssm_heads, cfg.ssm_head_dim
+    xn = rms_norm(hc, lp["pre_norm"])
+    z, xBC, dt_raw = _split_proj(xn @ wuse(lp["in_proj"], -1).astype(xn.dtype), cfg)
+    xBC_c = _causal_conv(xBC, lp["conv_w"].astype(xn.dtype), lp["conv_b"])
+    xs = xBC_c[..., :di].reshape(B, S, H, Pd).astype(jnp.float32)
+    Bm = xBC_c[..., di : di + N].astype(jnp.float32)
+    Cm = xBC_c[..., di + N :].astype(jnp.float32)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + lp["dt_bias"])
+    dt = dt * valid[:, :, None]
+    A = -jnp.exp(lp["A_log"])
+    y, h_last = ssd_chunked(xs, dt, A, Bm, Cm, cfg.ssm_chunk)
+    y = y + lp["D"][None, None, :, None] * xs
+    y = y.reshape(B, S, di).astype(hc.dtype)
+    y = rms_norm(y * jax.nn.silu(z), lp["norm_w"])
+    hc = hc + y @ wuse(lp["out_proj"], 0).astype(hc.dtype)
+    K = cfg.conv_kernel
+    tail = jax.vmap(
+        lambda xb, ln: jax.lax.dynamic_slice_in_dim(
+            xb, jnp.maximum(ln - (K - 1), 0), K - 1, axis=0
+        )
+    )(xBC, lengths)
+    return hc, {"conv": tail.astype(jnp.bfloat16), "ssm": h_last}

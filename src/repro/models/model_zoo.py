@@ -1,0 +1,28 @@
+"""build(cfg) → ModelBundle dispatch over architecture families."""
+from __future__ import annotations
+
+from repro.configs.base import ModelConfig
+from repro.core.policy import PolicyConfig
+
+from . import encdec, hybrid, mamba2, transformer
+from .attention import DistConfig
+from .transformer import ModelBundle
+
+
+def build_model(
+    cfg: ModelConfig,
+    pol: PolicyConfig | None = None,
+    dcfg: DistConfig | None = None,
+    *,
+    remat: bool = True,
+    max_positions: int | None = None,
+) -> ModelBundle:
+    if cfg.family in ("dense", "moe", "vlm"):
+        return transformer.build(cfg, pol, dcfg, remat=remat)
+    if cfg.family == "ssm":
+        return mamba2.build(cfg, dcfg, remat=remat)
+    if cfg.family == "hybrid":
+        return hybrid.build(cfg, pol, dcfg, remat=remat)
+    if cfg.family == "encdec":
+        return encdec.build(cfg, pol, dcfg, remat=remat, max_positions=max_positions)
+    raise ValueError(f"unknown family {cfg.family!r}")

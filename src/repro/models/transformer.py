@@ -1,0 +1,299 @@
+"""Decoder-only LM (dense / MoE / VLM-backbone) with FIER-integrated decode.
+
+Design points:
+  * stacked layer params + ``lax.scan`` — HLO depth-independent;
+  * train/prefill use blocked flash attention (no S×S materialisation);
+  * decode splits the stack into front (full attention, the paper's
+    skip-layers) and rest (policy: fier/quest/full) — two scans, so the
+    compiled decode HLO contains each attention flavour once;
+  * cross-entropy is sequence-chunked (never materialises [B,S,V] logits);
+  * vocab padded to a sharding-friendly multiple; padded columns masked.
+
+Batch formats (produced by repro.data / launch.input_specs):
+  train:   {tokens [B,St], targets [B,S], loss_mask [B,S], vision_embeds?}
+  prefill: {tokens [B,St], lengths [B], vision_embeds?}
+  decode:  token [B] + cache pytree
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, padded_vocab
+from repro.core.policy import PolicyConfig
+from repro.kvcache import cache as kvcache
+
+from . import attention as attn
+from . import moe as moe_mod
+from .tuning import maybe_scan
+from .layers import apply_norm, init_embedding, init_mlp, init_norm, mlp_apply
+
+MOE_AUX_COEF = 0.01
+
+
+@dataclasses.dataclass
+class ModelBundle:
+    cfg: ModelConfig
+    init: Callable
+    train_loss: Callable          # (params, batch) -> (loss, metrics)
+    prefill: Callable             # (params, batch) -> (logits [B,Vp], cache)
+    decode_step: Callable         # (params, token [B], cache) -> (logits, cache)
+    init_cache: Callable          # (B, capacity, length) -> cache
+    param_count: Callable
+
+
+def _dtype(name: str):
+    return {"float32": jnp.float32, "bfloat16": jnp.bfloat16}[name]
+
+
+def build(
+    cfg: ModelConfig,
+    pol: PolicyConfig | None = None,
+    dcfg: attn.DistConfig | None = None,
+    *,
+    remat: bool = True,
+    loss_chunk: int = 1024,
+) -> ModelBundle:
+    pol = pol or PolicyConfig(kind="full")
+    pol_full = PolicyConfig(kind="full", skip_layers=0)
+    Vp = padded_vocab(cfg)
+    cdt = _dtype(cfg.compute_dtype)
+    pdt = _dtype(cfg.param_dtype)
+    skip = min(pol.skip_layers if pol.kind != "full" else 0, cfg.n_layers)
+    is_moe = cfg.family == "moe"
+
+    # ----------------------------------------------------------------- init
+    def init_layer(rng):
+        k1, k2, k3 = jax.random.split(rng, 3)
+        p = {
+            "norm1": init_norm(cfg.norm, cfg.d_model),
+            "attn": attn.init_attention(k1, cfg),
+            "norm2": init_norm(cfg.norm, cfg.d_model),
+        }
+        if is_moe:
+            p["moe"] = moe_mod.init_moe(k2, cfg)
+        else:
+            p["mlp"] = init_mlp(k3, cfg.d_model, cfg.d_ff, cfg.act)
+        return p
+
+    def init(rng):
+        ke, kl, kh = jax.random.split(rng, 3)
+        layers = jax.vmap(init_layer)(jax.random.split(kl, cfg.n_layers))
+        params = {
+            "embed": init_embedding(ke, Vp, cfg.d_model),
+            "layers": layers,
+            "final_norm": init_norm(cfg.norm, cfg.d_model),
+        }
+        if not cfg.tie_embeddings:
+            params["lm_head"] = init_embedding(kh, Vp, cfg.d_model).T
+        return jax.tree.map(lambda a: a.astype(pdt), params)
+
+    # ------------------------------------------------------------- helpers
+    def _embed_inputs(params, batch):
+        toks = batch["tokens"]
+        h = jnp.take(params["embed"], toks, axis=0).astype(cdt)  # [B,St,d]
+        if "vision_embeds" in batch and batch["vision_embeds"] is not None:
+            h = jnp.concatenate([batch["vision_embeds"].astype(cdt), h], axis=1)
+        # pin the layout after the vocab-sharded gather (§Perf iteration 11)
+        return attn.seq_shard_constraint(h, dcfg)
+
+    def _head(params):
+        if cfg.tie_embeddings:
+            return params["embed"].T
+        return params["lm_head"]
+
+    def _ffn(lp, x2, B, S, mode="train"):
+        if not is_moe:
+            return mlp_apply(x2, lp["mlp"], cfg.act), jnp.float32(0.0)
+        x2d = x2.reshape(B * S, cfg.d_model)
+        if mode == "decode":
+            # T ≈ batch: dense-masked einsum path (GSPMD-friendly, no scatter)
+            y, aux = moe_mod.moe_apply_masked(x2d, lp["moe"], cfg)
+        elif dcfg is not None and dcfg.ep_axis is not None:
+            # pod scale: shard_map expert parallelism
+            tok = tuple(dcfg.batch_axes)
+            y, aux = moe_mod.moe_apply_ep(
+                x2d, lp["moe"], cfg, mesh=dcfg.mesh, token_axes=tok,
+                model_axis=dcfg.ep_axis, fsdp_axes=tuple(dcfg.fsdp_axes),
+            )
+        else:
+            y, aux = moe_mod.moe_apply(x2d, lp["moe"], cfg)
+        return y.reshape(B, S, cfg.d_model), aux
+
+    # --------------------------------------------------------------- train
+    def _layer_train(h, lp):
+        B, S, _ = h.shape
+        a = attn.attention_train(lp["attn"], apply_norm(h, lp["norm1"], cfg.norm), cfg)
+        h = h + a
+        y, aux = _ffn(lp, apply_norm(h, lp["norm2"], cfg.norm), B, S)
+        # sequence-parallel residual stream: bounds the remat-saved
+        # activation at L·B·S·d/(data·model) per device
+        return attn.seq_shard_constraint(h + y, dcfg), aux
+
+    layer_train = (
+        jax.checkpoint(_layer_train, policy=jax.checkpoint_policies.nothing_saveable)
+        if remat
+        else _layer_train
+    )
+
+    def train_loss(params, batch):
+        h = _embed_inputs(params, batch)
+        h, auxs = maybe_scan(layer_train, h, params["layers"])
+        h = apply_norm(h, params["final_norm"], cfg.norm)
+        loss, n_tok = _chunked_ce(
+            h, _head(params), batch["targets"], batch["loss_mask"], cfg.vocab, Vp,
+            loss_chunk,
+        )
+        aux = auxs.mean() if is_moe else jnp.float32(0.0)
+        total = loss + MOE_AUX_COEF * aux
+        return total, {"loss": loss, "moe_aux": aux, "tokens": n_tok}
+
+    # ------------------------------------------------------------- prefill
+    def prefill(params, batch, capacity: int | None = None):
+        """Returns (last-token logits [B, Vp], filled cache).  ``capacity``
+        is static (jit with functools.partial)."""
+        lengths = batch["lengths"]
+        h = _embed_inputs(params, batch)
+        B, S, _ = h.shape
+        cap = capacity if capacity is not None else S
+        valid = kvcache.valid_mask(S, lengths)
+
+        def layer_fn(hc, lp):
+            xn = apply_norm(hc, lp["norm1"], cfg.norm)
+            q, k, v = attn.qkv_proj(lp["attn"], xn, cfg, positions=None)
+            o = attn.flash_attention(q, k, v, causal=True, bias_mask=valid)
+            o = o.reshape(B, S, cfg.n_heads * cfg.d_head) @ lp["attn"]["wo"].astype(hc.dtype)
+            hc = hc + o
+            y, _ = _ffn(lp, apply_norm(hc, lp["norm2"], cfg.norm), B, S)
+            pad = ((0, 0), (0, cap - S), (0, 0), (0, 0))
+            return attn.seq_shard_constraint(hc + y, dcfg), (
+                jnp.pad(k.astype(jnp.bfloat16), pad),
+                jnp.pad(v.astype(jnp.bfloat16), pad),
+            )
+
+        h, (K, V) = maybe_scan(layer_fn, h, params["layers"])  # K: [L,B,cap,H,D]
+        h = apply_norm(h, params["final_norm"], cfg.norm)
+        cache = _assemble_cache(K, V, lengths)
+        last = jnp.take_along_axis(h, (lengths - 1)[:, None, None], axis=1)[:, 0]
+        logits = _masked_logits(last, _head(params), cfg.vocab, Vp)
+        return logits, cache
+
+    def _assemble_cache(K, V, lengths):
+        front = {"k": K[:skip], "v": V[:skip]}
+        rest = {"k": K[skip:], "v": V[skip:]}
+        if pol.kind in ("fier", "quest"):
+            from repro.core.policy import build_metadata
+
+            rest["meta"] = jax.vmap(lambda Kl: build_metadata(Kl, pol))(rest["k"])
+        return {"front": front, "rest": rest, "length": lengths}
+
+    def init_cache(B, capacity, length):
+        c = {
+            "front": kvcache.init_layer_cache(
+                skip, B, capacity, cfg.n_kv_heads, cfg.d_head, None
+            ),
+            "rest": kvcache.init_layer_cache(
+                cfg.n_layers - skip, B, capacity, cfg.n_kv_heads, cfg.d_head,
+                pol if pol.kind != "full" else None,
+            ),
+            "length": jnp.full((B,), length, jnp.int32),
+        }
+        return c
+
+    # -------------------------------------------------------------- decode
+    def decode_step(params, token, cache):
+        length = cache["length"]
+        x = jnp.take(params["embed"], token, axis=0)[:, None, :].astype(cdt)
+        B = x.shape[0]
+
+        def mk_body(policy_cfg, use_dist):
+            def body(h, xs):
+                lp, lc = xs
+                o, lc = attn.decode_self_attention(
+                    lp["attn"], apply_norm(h, lp["norm1"], cfg.norm), lc, length,
+                    cfg, policy_cfg, dcfg if use_dist else None,
+                )
+                h = h + o
+                y, _ = _ffn(lp, apply_norm(h, lp["norm2"], cfg.norm), B, 1, "decode")
+                return h + y, lc
+
+            return body
+
+        front_params = jax.tree.map(lambda a: a[:skip], params["layers"])
+        rest_params = jax.tree.map(lambda a: a[skip:], params["layers"])
+        h, front_cache = maybe_scan(
+            mk_body(pol_full, use_dist=False), x, (front_params, cache["front"])
+        ) if skip else (x, cache["front"])
+        h, rest_cache = maybe_scan(
+            mk_body(pol, use_dist=True), h, (rest_params, cache["rest"])
+        )
+        h = apply_norm(h, params["final_norm"], cfg.norm)[:, 0]
+        logits = _masked_logits(h, _head(params), cfg.vocab, Vp)
+        new_cache = {
+            "front": front_cache,
+            "rest": rest_cache,
+            "length": length + 1,
+        }
+        return logits, new_cache
+
+    return ModelBundle(
+        cfg=cfg,
+        init=init,
+        train_loss=train_loss,
+        prefill=prefill,
+        decode_step=decode_step,
+        init_cache=init_cache,
+        param_count=cfg.param_count,
+    )
+
+
+# ---------------------------------------------------------------- CE / head
+
+def _vocab_col_mask(vocab: int, Vp: int) -> jax.Array:
+    return jnp.where(jnp.arange(Vp) < vocab, 0.0, -1e30).astype(jnp.float32)
+
+
+def _masked_logits(h: jax.Array, W: jax.Array, vocab: int, Vp: int) -> jax.Array:
+    logits = h.astype(jnp.float32) @ W.astype(jnp.float32)
+    return logits + _vocab_col_mask(vocab, Vp)
+
+
+def _chunked_ce(
+    h: jax.Array,
+    W: jax.Array,
+    targets: jax.Array,
+    mask: jax.Array,
+    vocab: int,
+    Vp: int,
+    chunk: int,
+) -> tuple[jax.Array, jax.Array]:
+    """Sequence-chunked CE: logits live one [B, chunk, Vp] slice at a time."""
+    B, S, d = h.shape
+    chunk = min(chunk, S)
+    while S % chunk:
+        chunk //= 2
+    nc = S // chunk
+    hc = jnp.moveaxis(h.reshape(B, nc, chunk, d), 1, 0)
+    tc = jnp.moveaxis(targets.reshape(B, nc, chunk), 1, 0)
+    mc = jnp.moveaxis(mask.reshape(B, nc, chunk).astype(jnp.float32), 1, 0)
+    col_mask = _vocab_col_mask(vocab, Vp)
+    Wf = W.astype(jnp.float32)
+
+    # remat per chunk: the backward recomputes this chunk's logits instead
+    # of keeping [B, chunk, Vp] per chunk alive across the whole scan
+    @jax.checkpoint
+    def body(carry, xs):
+        hs, ts, ms = xs
+        logits = hs.astype(jnp.float32) @ Wf + col_mask
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, ts[..., None], axis=-1)[..., 0]
+        nll = (lse - gold) * ms
+        return (carry[0] + nll.sum(), carry[1] + ms.sum()), None
+
+    (tot, cnt), _ = jax.lax.scan(
+        body, (jnp.float32(0.0), jnp.float32(0.0)), (hc, tc, mc)
+    )
+    return tot / jnp.maximum(cnt, 1.0), cnt

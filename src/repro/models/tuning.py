@@ -1,0 +1,63 @@
+"""Trace-time tuning knobs (perf iterations + cost-mode compiles).
+
+``scan_layers=False`` replaces the layer lax.scan with a Python loop —
+used by the roofline depth-extrapolation compiles, where XLA's
+cost_analysis must see every layer (it counts loop bodies exactly once;
+verified in tests/test_flopcount.py).
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+from typing import Any
+
+import jax
+
+
+@dataclasses.dataclass
+class Tuning:
+    scan_layers: bool = True
+    flash_block_k: int = 512
+    flash_block_q: int = 512
+
+
+_ACTIVE = Tuning()
+
+
+def get() -> Tuning:
+    return _ACTIVE
+
+
+@contextlib.contextmanager
+def tuned(**kw):
+    global _ACTIVE
+    prev = _ACTIVE
+    _ACTIVE = dataclasses.replace(prev, **kw)
+    try:
+        yield _ACTIVE
+    finally:
+        _ACTIVE = prev
+
+
+def maybe_scan(body, init, xs, length: int | None = None):
+    """lax.scan or an unrolled Python loop, per the active Tuning.
+
+    xs: pytree with leading axis L (or None with ``length``).
+    Returns (carry, stacked_ys) like lax.scan.
+    """
+    if _ACTIVE.scan_layers:
+        return jax.lax.scan(body, init, xs, length=length)
+    import jax.numpy as jnp
+
+    L = length if length is not None else jax.tree.leaves(xs)[0].shape[0]
+    carry = init
+    ys = []
+    for i in range(L):
+        sl = jax.tree.map(lambda a: a[i], xs) if xs is not None else None
+        carry, y = body(carry, sl)
+        ys.append(y)
+    if ys and ys[0] is not None:
+        ys = jax.tree.map(lambda *a: jnp.stack(a), *ys)
+    else:
+        ys = None
+    return carry, ys

@@ -1,0 +1,14 @@
+from .adamw import adamw_init, adamw_update, clip_by_global_norm
+from .grad_compress import compress_decompress, compressed_psum, ef_state_init
+from .schedules import cosine_schedule, wsd_schedule
+
+__all__ = [
+    "adamw_init",
+    "adamw_update",
+    "clip_by_global_norm",
+    "compress_decompress",
+    "compressed_psum",
+    "cosine_schedule",
+    "ef_state_init",
+    "wsd_schedule",
+]

@@ -1,0 +1,65 @@
+"""AdamW with decoupled weight decay and fp32 master moments.
+
+Pure pytree implementation (no optax dependency in this container).
+Moments are kept fp32 regardless of param dtype (bf16 params on the
+100B+ configs keep an fp32 update path through the moments).
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    mu: Any
+    nu: Any
+
+
+def adamw_init(params: Any) -> AdamWState:
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return AdamWState(
+        step=jnp.zeros((), jnp.int32),
+        mu=jax.tree.map(zeros, params),
+        nu=jax.tree.map(zeros, params),
+    )
+
+
+def clip_by_global_norm(grads: Any, max_norm: float) -> tuple[Any, jax.Array]:
+    gn = jnp.sqrt(
+        sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in jax.tree.leaves(grads))
+    )
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale), grads), gn
+
+
+def adamw_update(
+    grads: Any,
+    state: AdamWState,
+    params: Any,
+    lr: jax.Array | float,
+    *,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.1,
+) -> tuple[Any, AdamWState]:
+    step = state.step + 1
+    t = step.astype(jnp.float32)
+
+    def upd(g, m, n, p):
+        gf = g.astype(jnp.float32)
+        m2 = b1 * m + (1 - b1) * gf
+        n2 = b2 * n + (1 - b2) * gf * gf
+        mhat = m2 / (1 - b1**t)
+        nhat = n2 / (1 - b2**t)
+        delta = mhat / (jnp.sqrt(nhat) + eps) + weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m2, n2
+
+    flat = jax.tree.map(upd, grads, state.mu, state.nu, params)
+    new_params = jax.tree.map(lambda x: x[0], flat, is_leaf=lambda x: isinstance(x, tuple))
+    new_mu = jax.tree.map(lambda x: x[1], flat, is_leaf=lambda x: isinstance(x, tuple))
+    new_nu = jax.tree.map(lambda x: x[2], flat, is_leaf=lambda x: isinstance(x, tuple))
+    return new_params, AdamWState(step, new_mu, new_nu)

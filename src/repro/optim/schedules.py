@@ -1,0 +1,28 @@
+"""LR schedules: cosine and WSD (warmup-stable-decay — MiniCPM's schedule,
+wired to --arch minicpm-2b by the train launcher)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cosine_schedule(step, *, peak_lr, warmup, total, final_frac=0.1):
+    s = jnp.asarray(step, jnp.float32)
+    warm = peak_lr * s / jnp.maximum(warmup, 1)
+    prog = jnp.clip((s - warmup) / jnp.maximum(total - warmup, 1), 0.0, 1.0)
+    cos = final_frac * peak_lr + (1 - final_frac) * peak_lr * 0.5 * (
+        1 + jnp.cos(jnp.pi * prog)
+    )
+    return jnp.where(s < warmup, warm, cos)
+
+
+def wsd_schedule(step, *, peak_lr, warmup, total, decay_frac=0.1, final_frac=0.01):
+    """Warmup → stable plateau → sharp exponential-ish decay tail
+    (arXiv:2404.06395 §4).  decay_frac: fraction of ``total`` in the tail."""
+    s = jnp.asarray(step, jnp.float32)
+    decay_steps = decay_frac * total
+    decay_start = total - decay_steps
+    warm = peak_lr * s / jnp.maximum(warmup, 1)
+    prog = jnp.clip((s - decay_start) / jnp.maximum(decay_steps, 1), 0.0, 1.0)
+    decay = peak_lr * (final_frac ** prog)
+    out = jnp.where(s < warmup, warm, peak_lr)
+    return jnp.where(s > decay_start, decay, out)

@@ -1,0 +1,4 @@
+from .fault import FaultInjector, StragglerMonitor, run_with_recovery
+from .elastic import reshard_tree
+
+__all__ = ["FaultInjector", "StragglerMonitor", "reshard_tree", "run_with_recovery"]

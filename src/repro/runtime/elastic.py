@@ -1,0 +1,30 @@
+"""Elastic re-meshing: move a state pytree onto a different mesh.
+
+After losing hosts, the surviving pool forms a smaller mesh; params and
+optimizer state saved under mesh A's shardings must re-shard to mesh B.
+With jax.Array this is a device_put per leaf — the checkpoint path
+(restore with new shardings) covers the cold path; ``reshard_tree`` covers
+the warm path (state still resident).  The train launcher composes this
+with ``run_with_recovery``: shrink mesh → reshard → continue.
+
+Scale note (1000+ nodes): the cold path is preferred — re-reading from
+the distributed checkpoint avoids all-to-all resharding traffic through
+the surviving hosts and handles arbitrary topology changes.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def reshard_tree(tree: Any, shardings: Any) -> Any:
+    """device_put every leaf onto its (possibly new-mesh) sharding."""
+    if jax.tree_util.tree_structure(shardings) == jax.tree_util.tree_structure(tree):
+        return jax.tree.map(lambda a, s: jax.device_put(a, s), tree, shardings)
+    return jax.tree.map(lambda a: jax.device_put(a, shardings), tree)
+
+
+def replicated(mesh: Mesh) -> NamedSharding:
+    return NamedSharding(mesh, P())

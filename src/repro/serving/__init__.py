@@ -1,0 +1,4 @@
+from .engine import Engine, SamplingConfig
+from .scheduler import ContinuousScheduler, Request
+
+__all__ = ["ContinuousScheduler", "Engine", "Request", "SamplingConfig"]

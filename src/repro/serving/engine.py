@@ -1,0 +1,141 @@
+"""Serving engine: jitted prefill/decode around a ModelBundle, with
+slot-based continuous batching support.
+
+The decode step is the FIER fast path: policy-dispatched attention over
+the cache slabs (optionally sequence-sharded across the mesh).  Slot
+insertion runs a B=1 prefill and scatters the resulting cache into the
+batched cache; the batch axis of every cache leaf is discovered
+automatically by diffing ``init_cache`` shapes at two batch sizes (no
+per-model bookkeeping).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.model_zoo import ModelBundle
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplingConfig:
+    temperature: float = 0.0   # 0 → greedy
+    top_k: int = 0             # 0 → no truncation
+
+
+def sample_token(rng, logits: jax.Array, cfg: SamplingConfig) -> jax.Array:
+    if cfg.temperature == 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    l = logits / cfg.temperature
+    if cfg.top_k > 0:
+        kth = jax.lax.top_k(l, cfg.top_k)[0][..., -1:]
+        l = jnp.where(l < kth, -1e30, l)
+    return jax.random.categorical(rng, l, axis=-1).astype(jnp.int32)
+
+
+def _cache_batch_axes(bundle: ModelBundle, capacity: int) -> Any:
+    """Pytree of batch-axis indices, discovered by shape-diffing."""
+    c2 = jax.eval_shape(lambda: bundle.init_cache(2, capacity, 0))
+    c3 = jax.eval_shape(lambda: bundle.init_cache(3, capacity, 0))
+
+    def axis(a, b):
+        diffs = [i for i, (x, y) in enumerate(zip(a.shape, b.shape)) if x != y]
+        if len(diffs) != 1:
+            raise ValueError(f"ambiguous batch axis: {a.shape} vs {b.shape}")
+        return diffs[0]
+
+    return jax.tree.map(axis, c2, c3)
+
+
+class Engine:
+    """Batched generation engine with continuous-batching slot management."""
+
+    def __init__(
+        self,
+        bundle: ModelBundle,
+        *,
+        n_slots: int,
+        capacity: int,
+        sampling: SamplingConfig = SamplingConfig(),
+        donate_cache: bool = True,
+    ):
+        self.bundle = bundle
+        self.n_slots = n_slots
+        self.capacity = capacity
+        self.sampling = sampling
+        self._batch_axes = _cache_batch_axes(bundle, capacity)
+        self._prefill = jax.jit(partial(bundle.prefill, capacity=capacity))
+        donate = (2,) if donate_cache else ()
+        self._decode = jax.jit(bundle.decode_step, donate_argnums=donate)
+
+        def _decode_active_impl(params, tokens, cache, active):
+            old_len = cache["length"]
+            logits, new_cache = bundle.decode_step(params, tokens, cache)
+            new_cache = dict(
+                new_cache, length=jnp.where(active, new_cache["length"], old_len)
+            )
+            return logits, new_cache
+
+        self._decode_active = jax.jit(_decode_active_impl, donate_argnums=donate)
+        self._insert = jax.jit(self._insert_impl, donate_argnums=(0,))
+
+    # ------------------------------------------------------------ lifecycle
+    def new_cache(self, length: int = 0):
+        return self.bundle.init_cache(self.n_slots, self.capacity, length)
+
+    def prefill_batch(self, params, batch):
+        """Whole-batch prefill (offline / static batching path)."""
+        return self._prefill(params, batch)
+
+    def _insert_impl(self, batched_cache, single_cache, slot):
+        def put(dest, src, ax):
+            return jax.lax.dynamic_update_index_in_dim(dest, src[0], slot, ax)
+
+        return jax.tree.map(put, batched_cache, single_cache, self._batch_axes)
+
+    def insert(self, params, batched_cache, tokens_1xS, length: int, slot: int, extras=None):
+        """Prefill one request and place it into ``slot``.  Returns
+        (first sampled token logits, updated batched cache)."""
+        batch = {"tokens": tokens_1xS, "lengths": jnp.array([length], jnp.int32)}
+        if extras:
+            batch.update(extras)
+        logits, single = self._prefill(params, batch)
+        return logits, self._insert(batched_cache, single, jnp.int32(slot))
+
+    def decode(self, params, tokens, cache, active=None, rng=None):
+        """One decode step for all slots; inactive slots don't advance.
+
+        tokens [n_slots] int32 → (next_tokens [n_slots], logits, cache).
+        """
+        if active is not None:
+            # inactive slots' lengths are frozen inside the jitted step
+            # (their cache writes are scratch, overwritten on insert)
+            logits, new_cache = self._decode_active(params, tokens, cache, active)
+        else:
+            logits, new_cache = self._decode(params, tokens, cache)
+        rng = rng if rng is not None else jax.random.PRNGKey(0)
+        nxt = sample_token(rng, logits, self.sampling)
+        return nxt, logits, new_cache
+
+    # --------------------------------------------------------- conveniences
+    def generate(
+        self, params, prompts: jax.Array, lengths: jax.Array, max_new: int,
+        extras=None, rng=None,
+    ):
+        """Static-batch generate: prefill the whole batch then decode
+        ``max_new`` tokens.  prompts [B, S]; returns tokens [B, max_new]."""
+        rng = rng if rng is not None else jax.random.PRNGKey(0)
+        batch = {"tokens": prompts, "lengths": lengths}
+        if extras:
+            batch.update(extras)
+        logits, cache = self._prefill(params, batch)
+        tok = sample_token(rng, logits, self.sampling)
+        outs = [tok]
+        for i in range(max_new - 1):
+            rng, sub = jax.random.split(rng)
+            tok, _, cache = self.decode(params, tok, cache, rng=sub)
+            outs.append(tok)
+        return jnp.stack(outs, axis=1)

@@ -1,0 +1,92 @@
+"""Continuous-batching scheduler: admits queued requests into free engine
+slots, steps the whole batch, retires finished sequences.
+
+Host-side orchestration only — every device-side op is a jitted Engine
+call.  Straggler note (DESIGN.md §4): at pod scale the per-step barrier is
+the decode psum; a slow host shows up as step-time EWMA inflation, which
+``repro.runtime.fault.StragglerMonitor`` watches — the same monitor object
+is reused here.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    tokens: list[int]               # prompt
+    max_new: int = 32
+    eos: int | None = None
+    out: list[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ContinuousScheduler:
+    def __init__(self, engine, params, pad_prompt_to: int | None = None):
+        self.engine = engine
+        self.params = params
+        self.pad = pad_prompt_to
+        self.free = list(range(engine.n_slots))
+        self.running: dict[int, Request] = {}   # slot → request
+        self.steps = 0
+        self.occupancy: list[int] = []
+
+    def _admit(self, queue: list[Request], cache, cur_tokens):
+        while queue and self.free:
+            slot = self.free.pop()
+            req = queue.pop(0)
+            toks = np.asarray(req.tokens, np.int32)
+            S = self.pad or len(toks)
+            S = max(S, len(toks))
+            padded = np.zeros((1, S), np.int32)
+            padded[0, : len(toks)] = toks
+            logits, cache = self.engine.insert(
+                self.params, cache, jnp.asarray(padded), len(toks), slot
+            )
+            first = int(jnp.argmax(logits[0]))
+            req.out.append(first)
+            # the prefill-produced token counts: check termination before
+            # the slot ever decodes
+            if len(req.out) >= req.max_new or (req.eos is not None and first == req.eos):
+                req.done = True
+                self.free.append(slot)
+                continue
+            cur_tokens[slot] = first
+            self.running[slot] = req
+        return cache
+
+    def run(self, requests: Sequence[Request]) -> dict[int, list[int]]:
+        queue = list(requests)
+        cache = self.engine.new_cache()
+        cur = np.zeros((self.engine.n_slots,), np.int32)
+        cache = self._admit(queue, cache, cur)
+        while self.running or queue:
+            active_np = np.zeros((self.engine.n_slots,), bool)
+            for s in self.running:
+                active_np[s] = True
+            nxt, _, cache = self.engine.decode(
+                self.params, jnp.asarray(cur), cache, active=jnp.asarray(active_np)
+            )
+            nxt = np.asarray(nxt)
+            self.steps += 1
+            self.occupancy.append(len(self.running))
+            for slot, req in list(self.running.items()):
+                tok = int(nxt[slot])
+                req.out.append(tok)
+                cur[slot] = tok
+                if len(req.out) >= req.max_new or (req.eos is not None and tok == req.eos):
+                    req.done = True
+                    del self.running[slot]
+                    self.free.append(slot)
+            cache = self._admit(queue, cache, cur)
+        return {r.rid: r.out for r in requests}
+
+    @property
+    def mean_occupancy(self) -> float:
+        return float(np.mean(self.occupancy)) if self.occupancy else 0.0

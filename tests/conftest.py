@@ -1,0 +1,25 @@
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SRC = os.path.join(REPO, "src")
+
+
+def run_in_subprocess(code: str, n_devices: int = 4, timeout: int = 600):
+    """Run a python snippet with a forced CPU device count (multi-device
+    tests need the flag set before jax init, so: subprocess).  NOTE: the
+    512-device flag is only ever set inside launch/dryrun.py, per spec —
+    tests use small counts here."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n_devices}"
+    env["PYTHONPATH"] = SRC
+    r = subprocess.run(
+        [sys.executable, "-c", code], capture_output=True, text=True,
+        timeout=timeout, env=env,
+    )
+    if r.returncode != 0:
+        pytest.fail(f"subprocess failed:\nSTDOUT:\n{r.stdout}\nSTDERR:\n{r.stderr}")
+    return r.stdout

@@ -1,0 +1,76 @@
+"""Config registry: exact assigned values, reduced-config families, shapes."""
+import pytest
+
+from repro.configs import ARCHS, SHAPES, get_config, reduced_config, shape_cells
+
+EXPECTED = {
+    # arch: (layers, d_model, heads, kv, d_ff, vocab)
+    "whisper-small": (12, 768, 12, 12, 3072, 51865),
+    "llava-next-mistral-7b": (32, 4096, 32, 8, 14336, 32000),
+    "olmo-1b": (16, 2048, 16, 16, 8192, 50304),
+    "command-r-plus-104b": (64, 12288, 96, 8, 33792, 256000),
+    "starcoder2-3b": (30, 3072, 24, 2, 12288, 49152),
+    "minicpm-2b": (40, 2304, 36, 36, 5760, 122753),
+    "mamba2-370m": (48, 1024, 0, 0, 0, 50280),
+    "granite-moe-1b-a400m": (24, 1024, 16, 8, 512, 49155),
+    "qwen3-moe-235b-a22b": (94, 4096, 64, 4, 1536, 151936),
+    "zamba2-7b": (81, 3584, 32, 32, 14336, 32000),
+}
+
+
+@pytest.mark.parametrize("arch", sorted(EXPECTED))
+def test_assigned_values_exact(arch):
+    c = get_config(arch)
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff, c.vocab) == \
+        EXPECTED[arch]
+
+
+def test_all_archs_registered():
+    assert set(ARCHS) == set(EXPECTED)
+
+
+def test_moe_and_ssm_extras():
+    g = get_config("granite-moe-1b-a400m")
+    assert (g.n_experts, g.topk_experts) == (32, 8)
+    q = get_config("qwen3-moe-235b-a22b")
+    assert (q.n_experts, q.topk_experts) == (128, 8)
+    m = get_config("mamba2-370m")
+    assert m.ssm_state == 128 and m.attention_free
+    z = get_config("zamba2-7b")
+    assert z.ssm_state == 64 and z.attn_every > 0
+
+
+def test_param_counts_in_range():
+    """Sanity: computed param counts land near the advertised sizes."""
+    approx = {
+        "olmo-1b": (0.9e9, 1.6e9),
+        "command-r-plus-104b": (90e9, 120e9),
+        "starcoder2-3b": (2.5e9, 3.8e9),
+        "minicpm-2b": (2.0e9, 3.3e9),
+        "mamba2-370m": (0.3e9, 0.5e9),
+        "qwen3-moe-235b-a22b": (200e9, 260e9),
+        "zamba2-7b": (6e9, 9e9),
+        "llava-next-mistral-7b": (6.5e9, 8e9),
+    }
+    for arch, (lo, hi) in approx.items():
+        n = get_config(arch).param_count()
+        assert lo < n < hi, (arch, n)
+    # MoE active params ≪ total
+    q = get_config("qwen3-moe-235b-a22b")
+    assert q.active_param_count() < 0.2 * q.param_count()
+
+
+def test_shapes_and_cells():
+    assert set(SHAPES) == {"train_4k", "prefill_32k", "decode_32k", "long_500k"}
+    assert SHAPES["long_500k"].seq_len == 524_288
+    assert shape_cells("whisper-small") == ["train_4k", "prefill_32k", "decode_32k"]
+    assert len(shape_cells("olmo-1b")) == 4
+    total = sum(len(shape_cells(a)) for a in ARCHS)
+    assert total == 39  # 40 assigned minus whisper long_500k (DESIGN.md §5)
+
+
+@pytest.mark.parametrize("arch", sorted(EXPECTED))
+def test_reduced_configs_buildable(arch):
+    c = reduced_config(arch)
+    assert c.family == get_config(arch).family
+    assert c.d_model <= 128 and c.vocab <= 512

@@ -1,0 +1,43 @@
+"""Data substrate: streams, passkey structure, tokenizer."""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import reduced_config
+from repro.data.passkey import MARK_OPEN, N_DIGITS, QUERY, make_passkey_batch
+from repro.data.pipeline import lm_tokens
+from repro.data.tokenizer import BOS, VOCAB_SIZE, decode, encode
+
+
+def test_lm_tokens_in_vocab_and_learnable():
+    toks = np.asarray(lm_tokens(0, 0, 4, 128, 512))
+    assert toks.shape == (4, 129)
+    assert toks.min() >= 0 and toks.max() < 512
+    # bigram structure: successors are drawn from ≤8 options per token
+    succ = {}
+    for row in toks:
+        for a, b in zip(row[:-1], row[1:]):
+            succ.setdefault(int(a), set()).add(int(b))
+    branching = np.mean([len(v) for v in succ.values()])
+    assert branching <= 8.01
+
+
+def test_passkey_structure():
+    cfg = reduced_config("olmo-1b")
+    batch, answers = make_passkey_batch(cfg, 4, 128, seed=0, step=0, depth=0.4)
+    toks = np.asarray(batch["tokens"])
+    for b in range(4):
+        pos = int(np.where(toks[b] == MARK_OPEN)[0][0])
+        np.testing.assert_array_equal(
+            toks[b, pos + 1 : pos + 1 + N_DIGITS], np.asarray(answers)[b]
+        )
+        assert QUERY in toks[b]
+        np.testing.assert_array_equal(toks[b, -N_DIGITS:], np.asarray(answers)[b])
+    # the loss mask covers exactly the answer-predicting positions
+    assert float(batch["loss_mask"].sum(axis=1)[0]) == N_DIGITS
+
+
+def test_tokenizer_roundtrip():
+    text = "FIER retrieves 1-bit keys — ünïcode too."
+    ids = encode(text)
+    assert ids[0] == BOS and max(ids) < VOCAB_SIZE
+    assert decode(ids) == text

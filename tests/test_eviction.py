@@ -1,0 +1,69 @@
+"""Eviction baselines: invariants the quality benchmarks rely on."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import eviction as ev
+
+
+def _qkv(seed=0, B=2, S=64, Hkv=2, Hq=4, D=16):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    return (
+        jax.random.normal(ks[0], (B, Hq, D)),
+        jax.random.normal(ks[1], (B, S, Hkv, D)),
+        jax.random.normal(ks[2], (B, S, Hkv, D)),
+    )
+
+
+def test_streaming_mask_shape_and_budget():
+    length = jnp.array([60, 30], jnp.int32)
+    m = np.asarray(ev.streaming_llm_mask(64, length, budget=16, sink=4))
+    assert m.sum(-1).tolist() == [16, 16]
+    # recent window = budget - sink = 12 tokens before each length
+    assert m[0, :4].all() and m[0, 48:60].all() and not m[0, 20]
+    assert m[1, :4].all() and m[1, 18:30].all()
+
+
+def test_h2o_evicts_lowest_cumulative():
+    q, K, V = _qkv()
+    length = jnp.array([64, 64], jnp.int32)
+    st = ev.init_state(2, 2, 64, length)
+    out, probs = ev.masked_attention_decode(q, K, V, st.alive)
+    st2 = ev.h2o_step(st, probs, length, budget=32, recent=8)
+    alive = np.asarray(st2.alive)
+    assert (alive.sum(-1) == 63).all()  # one eviction per (b, h)
+    # victim must be outside the recent window
+    victims = np.asarray(st.alive & ~st2.alive)
+    vidx = victims.nonzero()[2]
+    assert (vidx < 56).all()
+
+
+def test_tova_keeps_budget_stable():
+    q, K, V = _qkv(1)
+    length = jnp.array([64, 64], jnp.int32)
+    st = ev.init_state(2, 2, 64, length)
+    for _ in range(3):
+        _, probs = ev.masked_attention_decode(q, K, V, st.alive)
+        st = ev.tova_step(st, probs, length, budget=60)
+    assert (np.asarray(st.alive).sum(-1) >= 60).all()
+
+
+def test_snapkv_selects_window_plus_topk():
+    B, S, Hkv, Hq, D, W = 1, 64, 2, 4, 16, 8
+    ks = jax.random.split(jax.random.PRNGKey(2), 2)
+    qw = jax.random.normal(ks[0], (B, Hq, W, D))
+    K = jax.random.normal(ks[1], (B, S, Hkv, D))
+    length = jnp.array([48], jnp.int32)
+    st = ev.snapkv_state(qw, K, length, budget=16, window=W)
+    alive = np.asarray(st.alive)
+    assert (alive[:, :, 48:] == False).all()  # noqa: E712 — nothing beyond length
+    assert alive[:, :, 40:48].all()           # observation window kept
+    assert (alive.sum(-1) <= 17).all()
+
+
+def test_append_alive():
+    length = jnp.array([10, 20], jnp.int32)
+    st = ev.init_state(2, 2, 64, length)
+    st2 = ev.append_alive(st, length)
+    a = np.asarray(st2.alive)
+    assert a[0, :, 10].all() and a[1, :, 20].all()

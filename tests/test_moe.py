@@ -1,0 +1,134 @@
+"""MoE: dense-scatter reference vs shard_map EP vs dense-masked decode path."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import reduced_config
+from repro.models import moe as moe_mod
+
+from conftest import run_in_subprocess
+
+
+def _setup(T=64, seed=0):
+    cfg = reduced_config("granite-moe-1b-a400m")  # 4 experts, top-2, d=64
+    rng = jax.random.PRNGKey(seed)
+    k1, k2 = jax.random.split(rng)
+    p = moe_mod.init_moe(k1, cfg)
+    x = jax.random.normal(k2, (T, cfg.d_model), jnp.float32)
+    return cfg, p, x
+
+
+def test_masked_matches_scatter_no_drops():
+    """With capacity_factor high enough that nothing drops, the dense-masked
+    decode path must equal the scatter reference exactly."""
+    import dataclasses
+
+    cfg, p, x = _setup(T=32)
+    cfg = dataclasses.replace(cfg, capacity_factor=8.0)
+    y1, aux1 = moe_mod.moe_apply(x, p, cfg)
+    y2, aux2 = moe_mod.moe_apply_masked(x, p, cfg)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(float(aux1), float(aux2), rtol=1e-5)
+
+
+def test_aux_loss_balanced_router_is_one():
+    """A perfectly uniform router gives aux ≈ 1 (Switch normalisation)."""
+    import dataclasses
+
+    cfg, p, x = _setup(T=512)
+    p = dict(p, router=jnp.zeros_like(p["router"]))
+    _, aux = moe_mod.moe_apply_masked(x, p, cfg)
+    assert 0.9 < float(aux) < 1.1
+
+
+def test_ep_matches_scatter_multidevice():
+    """shard_map EP on a 2×2 mesh == single-device scatter reference."""
+    run_in_subprocess(
+        """
+import dataclasses
+import jax, jax.numpy as jnp, numpy as np
+from repro.configs import reduced_config
+from repro.models import moe as moe_mod
+
+cfg = dataclasses.replace(reduced_config("granite-moe-1b-a400m"), capacity_factor=8.0)
+k1, k2 = jax.random.split(jax.random.PRNGKey(0))
+p = moe_mod.init_moe(k1, cfg)
+x = jax.random.normal(k2, (64, cfg.d_model), jnp.float32)
+y_ref, aux_ref = moe_mod.moe_apply(x, p, cfg)
+
+mesh = jax.make_mesh((2, 2), ("data", "model"))
+y_ep, aux_ep = jax.jit(lambda x, p: moe_mod.moe_apply_ep(
+    x, p, cfg, mesh=mesh, token_axes=("data",), model_axis="model"))(x, p)
+np.testing.assert_allclose(np.asarray(y_ref), np.asarray(y_ep), atol=2e-4, rtol=2e-4)
+# aux is a per-shard estimator under EP (E[f·P] over shards != global f·P):
+# outputs must match exactly, aux only approximately
+np.testing.assert_allclose(float(aux_ref), float(aux_ep), rtol=0.05)
+print("EP == scatter OK")
+""",
+        n_devices=4,
+    )
+
+
+def test_ep_with_fsdp_gather_multidevice():
+    """EP with FSDP-stored expert weights (gather inside the body)."""
+    run_in_subprocess(
+        """
+import dataclasses
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.configs import reduced_config
+from repro.models import moe as moe_mod
+
+cfg = dataclasses.replace(reduced_config("granite-moe-1b-a400m"), capacity_factor=8.0)
+k1, k2 = jax.random.split(jax.random.PRNGKey(1))
+p = moe_mod.init_moe(k1, cfg)
+x = jax.random.normal(k2, (64, cfg.d_model), jnp.float32)
+y_ref, _ = moe_mod.moe_apply(x, p, cfg)
+
+mesh = jax.make_mesh((2, 2), ("data", "model"))
+sh = {
+    "router": NamedSharding(mesh, P()),
+    "w1": NamedSharding(mesh, P("model", "data", None)),
+    "w3": NamedSharding(mesh, P("model", "data", None)),
+    "w2": NamedSharding(mesh, P("model", None, "data")),
+}
+p_sharded = {k: jax.device_put(v, sh[k]) for k, v in p.items()}
+x_sh = jax.device_put(x, NamedSharding(mesh, P("data", None)))
+y_ep, _ = jax.jit(lambda x, p: moe_mod.moe_apply_ep(
+    x, p, cfg, mesh=mesh, token_axes=("data",), model_axis="model",
+    fsdp_axes=("data",)))(x_sh, p_sharded)
+np.testing.assert_allclose(np.asarray(y_ref), np.asarray(y_ep), atol=2e-4, rtol=2e-4)
+print("EP+FSDP == scatter OK")
+""",
+        n_devices=4,
+    )
+
+
+def test_ep_gradients_flow():
+    """EP path is differentiable (psum/all_gather transpose correctly)."""
+    run_in_subprocess(
+        """
+import jax, jax.numpy as jnp, numpy as np
+from repro.configs import reduced_config
+from repro.models import moe as moe_mod
+
+cfg = reduced_config("granite-moe-1b-a400m")
+k1, k2 = jax.random.split(jax.random.PRNGKey(0))
+p = moe_mod.init_moe(k1, cfg)
+x = jax.random.normal(k2, (64, cfg.d_model), jnp.float32)
+mesh = jax.make_mesh((2, 2), ("data", "model"))
+
+def loss(p, x):
+    y, aux = moe_mod.moe_apply_ep(x, p, cfg, mesh=mesh, token_axes=("data",),
+                                  model_axis="model")
+    return jnp.sum(y * y) + 0.01 * aux
+
+g = jax.jit(jax.grad(loss))(p, x)
+for k, v in g.items():
+    assert bool(jnp.isfinite(v).all()), k
+assert float(jnp.abs(g["w1"]).sum()) > 0
+print("EP grads OK")
+""",
+        n_devices=4,
+    )

@@ -1,0 +1,70 @@
+"""Policy registry: incremental metadata updates == rebuild-from-scratch."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import policy as pol
+from repro.core import quantize as qz
+from repro.kvcache import cache as kvcache
+
+
+def _slab(seed, B=2, S=64, H=2, D=16):
+    return jax.random.normal(jax.random.PRNGKey(seed), (B, S, H, D), jnp.float32)
+
+
+@pytest.mark.parametrize("kind,kw", [("fier", {"group": 8}), ("quest", {"page": 8})])
+def test_incremental_update_matches_rebuild(kind, kw):
+    """Append tokens one at a time; the incrementally-maintained metadata
+    must equal metadata rebuilt from the full slab at every step."""
+    cfg = pol.PolicyConfig(kind=kind, budget=16, **kw)
+    B, S, H, D = 2, 64, 2, 16
+    K = _slab(0, B, S, H, D)
+    slab = jnp.zeros((B, S, H, D))
+    prefix = 24
+    slab = slab.at[:, :prefix].set(K[:, :prefix])
+    meta = pol.build_metadata(slab, cfg)
+    lengths = jnp.array([prefix, prefix], jnp.int32)
+    for t in range(prefix, 40):
+        slab = slab.at[:, t].set(K[:, t])
+        meta = kvcache.append_token_metadata(meta, slab, lengths, cfg)
+        lengths = lengths + 1
+        rebuilt = pol.build_metadata(slab, cfg)
+        for a, b in zip(jax.tree.leaves(meta), jax.tree.leaves(rebuilt)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_commit_mask_keeps_old_blocks():
+    cfg = pol.PolicyConfig(kind="fier", budget=16, group=8)
+    K = _slab(1)
+    meta = pol.build_metadata(K, cfg)
+    K2 = K.at[:, 10].set(99.0)
+    lengths = jnp.array([10, 10], jnp.int32)
+    updated = kvcache.append_token_metadata(
+        meta, K2, lengths, cfg, commit_mask=jnp.array([True, False])
+    )
+    # row 0 refreshed (sees the 99), row 1 untouched
+    assert not np.array_equal(np.asarray(updated.scale[0]), np.asarray(meta.scale[0]))
+    np.testing.assert_array_equal(np.asarray(updated.scale[1]), np.asarray(meta.scale[1]))
+
+
+def test_policy_dispatch_and_skip_layers():
+    cfg_full = pol.PolicyConfig(kind="full")
+    cfg_fier = pol.PolicyConfig(kind="fier", budget=8, group=8, skip_layers=2)
+    K = _slab(2)
+    V = _slab(3)
+    q = jax.random.normal(jax.random.PRNGKey(4), (2, 4, 16))
+    length = jnp.array([64, 64], jnp.int32)
+    meta = pol.build_metadata(K, cfg_fier)
+    full = pol.decode_attention(q, K, V, None, cfg_full, length)
+    skip = pol.decode_attention(q, K, V, meta, cfg_fier, length, layer=0)
+    np.testing.assert_allclose(np.asarray(full), np.asarray(skip), atol=1e-5)
+    sparse = pol.decode_attention(q, K, V, meta, cfg_fier, length, layer=2)
+    assert not np.allclose(np.asarray(full), np.asarray(sparse), atol=1e-5)
+
+
+def test_unknown_policy_rejected():
+    with pytest.raises(ValueError):
+        pol.PolicyConfig(kind="nope")

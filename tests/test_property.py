@@ -1,0 +1,106 @@
+"""Property-based tests (hypothesis) on the system's core invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import quantize as qz
+from repro.core import retrieval as rt
+
+SHAPE = st.tuples(
+    st.integers(1, 3),                      # B
+    st.sampled_from([32, 64, 128]),         # S
+    st.integers(1, 3),                      # Hkv
+    st.sampled_from([8, 16, 32]),           # D
+    st.sampled_from([8, 16, 32]),           # g
+).filter(lambda t: t[1] % t[4] == 0)
+
+
+def _keys(seed, B, S, H, D):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    return jax.random.normal(k1, (B, S, H, D)) * jnp.exp(
+        jax.random.normal(k2, (D,)) * 0.5
+    )
+
+
+@settings(max_examples=20, deadline=None)
+@given(SHAPE, st.integers(0, 2**31 - 1))
+def test_quantize_roundtrip_and_bounds(shape, seed):
+    """∀ K: pack∘unpack = id, and K̃ stays within each group's [min, max]."""
+    B, S, H, D, g = shape
+    K = _keys(seed, B, S, H, D)
+    qk = qz.quantize(K, g)
+    np.testing.assert_array_equal(
+        np.asarray(qz.pack_bits(qz.unpack_bits(qk.codes))), np.asarray(qk.codes)
+    )
+    Kd = np.asarray(qz.dequantize(qk), np.float32).reshape(B, S // g, g, H, D)
+    Kg = np.asarray(K).reshape(B, S // g, g, H, D)
+    lo, hi = Kg.min(2, keepdims=True), Kg.max(2, keepdims=True)
+    span = hi - lo + 1e-3
+    assert (Kd >= lo - 0.02 * span - 1e-3).all()
+    assert (Kd <= hi + 0.02 * span + 1e-3).all()
+
+
+@settings(max_examples=20, deadline=None)
+@given(SHAPE, st.integers(0, 2**31 - 1), st.integers(1, 8))
+def test_topk_indices_always_valid(shape, seed, budget_pow):
+    """select_topk never returns an out-of-length index when enough valid
+    tokens exist, for any scores."""
+    B, S, H, D, g = shape
+    scores = jax.random.normal(jax.random.PRNGKey(seed), (B, H, S))
+    budget = min(2 * budget_pow, S // 2)
+    length = jnp.full((B,), S // 2, jnp.int32)
+    idx = np.asarray(rt.select_topk(scores, budget, length))
+    assert (idx < S // 2).all()
+    # indices unique per (b, h)
+    for b in range(B):
+        for h in range(H):
+            assert len(set(idx[b, h].tolist())) == budget
+
+
+@settings(max_examples=15, deadline=None)
+@given(SHAPE, st.integers(0, 2**31 - 1))
+def test_margin_preservation(shape, seed):
+    """The paper's hinge-objective insight (§3.2): tokens whose true score
+    exceeds all others by more than the worst-case quantization error must
+    stay in the 1-bit top-k."""
+    B, S, H, D, g = shape
+    K = _keys(seed, B, S, H, D)
+    q = jax.random.normal(jax.random.PRNGKey(seed ^ 1), (B, H, D))
+    qk = qz.quantize(K, g)
+    exact = np.asarray(rt.exact_scores(q, K))          # [B, H, S]
+    approx = np.asarray(rt.approx_scores(q, qk))
+    # worst-case per-token error bound: |q|·s_group (scale = half range)
+    s_full = np.asarray(
+        jnp.repeat(qk.scale.astype(jnp.float32), g, axis=1)
+    )  # [B, S, H, D]
+    qn = np.abs(np.asarray(q))                          # [B, H, D]
+    err_bound = np.einsum("bhd,bshd->bhs", qn, s_full) + 1e-4
+    for b in range(B):
+        for h in range(H):
+            e, a, eb = exact[b, h], approx[b, h], err_bound[b, h]
+            top = int(np.argmax(e))
+            margin = e[top] - np.delete(e, top).max(initial=-np.inf)
+            if margin > eb[top] + eb.max():
+                top_a = set(np.argsort(-a)[:2].tolist())
+                assert top in top_a
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_flash_attention_matches_oracle_property(seed):
+    from repro.models.layers import attention_ref, flash_attention
+
+    r = np.random.default_rng(seed)
+    B, Sq, Sk = int(r.integers(1, 3)), int(r.integers(4, 24)), int(r.integers(8, 40))
+    Hkv = int(r.integers(1, 3))
+    rep = int(r.integers(1, 3))
+    D = int(r.choice([8, 16]))
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(ks[0], (B, Sq, Hkv * rep, D))
+    k = jax.random.normal(ks[1], (B, Sk, Hkv, D))
+    v = jax.random.normal(ks[2], (B, Sk, Hkv, D))
+    off = Sk - Sq
+    o1 = flash_attention(q, k, v, causal=True, block_k=8, q_offset=off)
+    o2 = attention_ref(q, k, v, causal=True, q_offset=off)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), atol=3e-5, rtol=3e-5)

@@ -1,0 +1,66 @@
+"""Unit tests: 1-bit group RTN quantization + bit packing (core of FIER)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import quantize as qz
+
+
+def _keys(seed, B=2, S=128, H=2, D=32, outlier=True):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    K = jax.random.normal(k1, (B, S, H, D), jnp.float32)
+    if outlier:
+        K = K * jnp.exp(jax.random.normal(k2, (D,)))
+    return K
+
+
+@pytest.mark.parametrize("group", [8, 16, 32, 64])
+def test_pack_unpack_roundtrip(group):
+    K = _keys(0, S=128)
+    qk = qz.quantize(K, group)
+    bits = qz.unpack_bits(qk.codes)
+    assert bits.shape == K.shape
+    np.testing.assert_array_equal(
+        np.asarray(qz.pack_bits(bits)), np.asarray(qk.codes)
+    )
+
+
+def test_dequant_within_group_range():
+    """K̃ ∈ {z−s, z+s} = {≈min, ≈max} of each (group, channel)."""
+    K = _keys(1)
+    qk = qz.quantize(K, 32)
+    Kd = np.asarray(qz.dequantize(qk), np.float32)
+    Kg = np.asarray(K).reshape(2, 128 // 32, 32, 2, 32)
+    kmin = Kg.min(axis=2, keepdims=True)
+    kmax = Kg.max(axis=2, keepdims=True)
+    Kdg = Kd.reshape(2, 128 // 32, 32, 2, 32)
+    tol = 0.02 * (np.abs(kmax) + np.abs(kmin) + 1)
+    assert (Kdg >= kmin - tol).all() and (Kdg <= kmax + tol).all()
+
+
+def test_sign_semantics():
+    """code bit = (K >= z); dequant picks the closer of the two levels."""
+    K = _keys(2)
+    qk = qz.quantize(K, 16)
+    Kd = qz.dequantize(qk).astype(jnp.float32)
+    z = jnp.repeat(qk.zero.astype(jnp.float32), 16, axis=1)
+    above = np.asarray(K >= z)
+    deq_above = np.asarray(Kd >= z - 1e-3)
+    assert (above == deq_above).mean() > 0.999
+
+
+@pytest.mark.parametrize("group,expected", [(32, 1 / 8), (128, 0.078125), (256, 0.0703125)])
+def test_load_ratio_formula(group, expected):
+    """Paper Eq. 8 — and the packed bytes match the formula exactly."""
+    assert abs(qz.load_ratio(group) - expected) < 1e-9
+    S, H, D = 1024, 2, 64
+    measured = qz.packed_nbytes(S, H, D, group)
+    full = S * H * D * 2  # bf16 keys
+    assert measured / full == pytest.approx(qz.load_ratio(group), rel=1e-9)
+
+
+def test_seq_len_must_divide():
+    K = _keys(3, S=100)
+    with pytest.raises(ValueError):
+        qz.quantize(K, 32)

@@ -1,0 +1,118 @@
+"""End-to-end system behaviour: train → quality with FIER ≈ full-KV,
+and the paper's core contrast (retrieval ≫ eviction) on a trained model."""
+import dataclasses
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "benchmarks"))
+
+from repro.configs import reduced_config
+from repro.configs.base import ShapeConfig
+from repro.core.policy import PolicyConfig
+from repro.data.pipeline import make_train_batch
+from repro.launch.steps import TrainHParams, init_train_state, make_train_step
+from repro.models import build_model
+
+
+@pytest.fixture(scope="module")
+def trained():
+    cfg = dataclasses.replace(
+        reduced_config("olmo-1b"), n_layers=3, d_model=96, n_heads=4,
+        n_kv_heads=4, d_head=24, d_ff=192, vocab=256,
+    )
+    bundle = build_model(cfg)
+    hp = TrainHParams(peak_lr=2e-3, warmup=10, total_steps=150)
+    state = init_train_state(bundle, jax.random.PRNGKey(0), hp)
+    step = jax.jit(make_train_step(bundle, hp))
+    shape = ShapeConfig("sys", 128, 8, "train")
+    losses = []
+    for s in range(150):
+        batch = make_train_batch(cfg, shape, s, seed=11)
+        state, m = step(state, batch)
+        losses.append(float(m["loss"]))
+    return cfg, state["params"], losses
+
+
+def test_training_learns(trained):
+    cfg, params, losses = trained
+    assert losses[-1] < 0.7 * losses[0], (losses[0], losses[-1])
+
+
+def _greedy(bundle, params, prompt, n=16):
+    B, S = prompt.shape
+    pre = {"tokens": prompt, "lengths": jnp.full((B,), S, jnp.int32)}
+    logits, cache = jax.jit(
+        lambda p, b: bundle.prefill(p, b, capacity=S + n + 8)
+    )(params, pre)
+    dec = jax.jit(bundle.decode_step)
+    toks = []
+    tok = jnp.argmax(logits, -1).astype(jnp.int32)
+    for _ in range(n):
+        toks.append(np.asarray(tok))
+        logits, cache = dec(params, tok, cache)
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)
+    return np.stack(toks, 1)
+
+
+def test_fier_matches_full_on_trained_model(trained):
+    """FIER degrades gracefully with budget (exact at budget=capacity) and
+    dominates page-level and eviction selection at a tight budget.
+
+    (Greedy-token agreement on this tiny bigram model is a harsh metric —
+    its attention is diffuse, so ORDERING is the meaningful invariant;
+    measured: fier .47 > slm .34 > quest .19 at budget 24/112.)"""
+    cfg, params, _ = trained
+    from repro.data.pipeline import lm_tokens
+
+    prompt = lm_tokens(11, 999, 4, 96, cfg.vocab)[:, :96]
+    full = _greedy(build_model(cfg, PolicyConfig(kind="full")), params, prompt)
+
+    def agree(pol):
+        return (full == _greedy(build_model(cfg, pol), params, prompt)).mean()
+
+    exact = agree(PolicyConfig(kind="fier", budget=112, group=8, skip_layers=1))
+    assert exact == 1.0, "budget ≥ length must reproduce full-KV exactly"
+
+    a_fier = agree(PolicyConfig(kind="fier", budget=24, group=8, skip_layers=1))
+    a_quest = agree(PolicyConfig(kind="quest", budget=24, page=8, skip_layers=1))
+    a_slm = agree(PolicyConfig(kind="slm", budget=24, skip_layers=1))
+    assert a_fier > a_quest, (a_fier, a_quest)
+    assert a_fier > a_slm, (a_fier, a_slm)
+    assert a_fier >= 0.4, a_fier
+
+
+def test_quest_and_fier_beat_slm_on_trained_model(trained):
+    cfg, params, _ = trained
+    from repro.data.pipeline import lm_tokens
+
+    toks = lm_tokens(11, 500, 4, 160, cfg.vocab)
+
+    # teacher-forced NLL of the next 24 gold tokens under each policy
+    def nll(kind):
+        pol = None if kind == "full" else PolicyConfig(
+            kind=kind, budget=24, group=8, page=8, skip_layers=1
+        )
+        bundle = build_model(cfg, pol)
+        pre = {"tokens": toks[:, :128], "lengths": jnp.full((4,), 128, jnp.int32)}
+        logits, cache = jax.jit(
+            lambda p, b: bundle.prefill(p, b, capacity=160)
+        )(params, pre)
+        dec = jax.jit(bundle.decode_step)
+        tot = 0.0
+        for t in range(24):
+            gold = toks[:, 128 + t]
+            lp = jax.nn.log_softmax(logits, -1)
+            tot += float(-jnp.take_along_axis(lp, gold[:, None], 1).mean())
+            logits, cache = dec(params, gold, cache)
+        return tot / 24
+
+    n_full, n_fier, n_slm = nll("full"), nll("fier"), nll("slm")
+    # FIER's quality gap to full-KV stays well below eviction's
+    assert n_fier - n_full < 0.5 * max(n_slm - n_full, 1e-9) + 0.05, (
+        n_full, n_fier, n_slm,
+    )
