@@ -1,9 +1,16 @@
-"""Paper Eqs. 4 & 8: selection-phase cache load ratios, measured exactly.
+"""Paper Eqs. 4 & 8: selection-phase cache load ratios, measured exactly —
+plus the attend-phase bytes the fused select-and-attend path removes.
 
 FIER: (1 + 32/g)/16 of the bf16 key bytes.  Quest: 2/L.  The benchmark
 measures the actual bytes of the metadata structures this repo builds and
 asserts they equal the formulas (this is also where the paper's
 "g=32 ↔ p=16 both 1/8" pairing is verified).
+
+Attend phase: the unfused pipeline *materialises* K'/V' (2·budget·Hkv·D
+bf16 written to HBM, then read back by attention → 4·budget·Hkv·D·2 bytes
+of extra traffic on top of the budget rows read from the slabs); the
+fused kernel reads the selected rows straight from the slabs.  Measured
+here from the jaxpr (gather output bytes), not asserted.
 """
 from __future__ import annotations
 
@@ -12,8 +19,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import quantize as qz, quest
+from repro.core import retrieval as rt
 
 from .common import emit
+from .flopcount import count_fn_gather_bytes
 
 
 def run():
@@ -42,6 +51,36 @@ def run():
     # the paper's fairness pairing
     assert abs(qz.load_ratio(32) - 2.0 / 16) < 1e-12
     emit("load_ratio_pairing_g32_p16", 0.0, "both=0.125")
+
+    # ------------------------------------------- attend-phase gather bytes
+    from repro.kernels import ops as kops
+
+    Bq, Sq, Hkv, Hq, Dq, g = 1, 2048, 4, 8, 64, 32
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    Kc = jax.random.normal(ks[0], (Bq, Sq, Hkv, Dq), jnp.bfloat16)
+    Vc = jax.random.normal(ks[1], (Bq, Sq, Hkv, Dq), jnp.bfloat16)
+    q = jax.random.normal(ks[2], (Bq, Hq, Dq))
+    qk = qz.quantize(Kc.astype(jnp.float32), g)
+    length = jnp.full((Bq,), Sq, jnp.int32)
+    budget = 256
+
+    unfused = count_fn_gather_bytes(
+        lambda q, K, V: rt.fier_attention_decode(q, K, V, qk, budget, length),
+        q, Kc, Vc,
+    )
+    fused = count_fn_gather_bytes(
+        lambda q, K, V: kops.fused_fier_attention_decode(
+            q, K, V, qk, budget, length
+        ),
+        q, Kc, Vc,
+    )
+    copies = 2 * budget * Hkv * Dq * 2 * Bq  # K'+V' bf16, materialised once
+    assert unfused >= copies, (unfused, copies)
+    emit(
+        "attend_gather_bytes_fused_vs_unfused", 0.0,
+        f"unfused={unfused:.0f} fused={fused:.0f} kv_copies={copies} "
+        f"eliminated={unfused - fused:.0f}",
+    )
 
 
 def main():

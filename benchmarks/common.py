@@ -33,7 +33,12 @@ def bench_model_cfg(seq: int = 256) -> ModelConfig:
 
 def train_tiny_lm(kind: str = "lm", steps: int = 300, seq: int = 256,
                   batch: int = 16, seed: int = 0):
-    """Train (or load cached) the benchmark model.  kind: lm | passkey."""
+    """Train (or load cached) the benchmark model.  kind: lm | passkey.
+
+    ``REPRO_BENCH_TRAIN_STEPS`` overrides ``steps`` (constrained CI boxes:
+    latency/byte benchmarks don't need a converged model, quality
+    benchmarks do — leave it unset for those)."""
+    steps = int(os.environ.get("REPRO_BENCH_TRAIN_STEPS", steps))
     os.makedirs(CACHE_DIR, exist_ok=True)
     cfg = bench_model_cfg(seq)
     tag = f"{kind}_s{steps}_q{seq}_b{batch}_{seed}"
@@ -62,9 +67,10 @@ def train_tiny_lm(kind: str = "lm", steps: int = 300, seq: int = 256,
 
 
 def policy_bundle(cfg, kind: str, budget: int, group: int = 8, page: int = 8,
-                  skip: int = 1):
+                  skip: int = 1, fused: bool = False):
     pol = None if kind == "full" else PolicyConfig(
-        kind=kind, budget=budget, group=group, page=page, skip_layers=skip
+        kind=kind, budget=budget, group=group, page=page, skip_layers=skip,
+        fused=fused,
     )
     return build_model(cfg, pol)
 

@@ -99,16 +99,8 @@ def count_jaxpr(jaxpr, scale: float = 1.0) -> float:
             branches = [count_jaxpr(_as_jaxpr(b), scale) for b in eqn.params["branches"]]
             flops += max(branches) if branches else 0.0
         elif name == "shard_map":
-            mesh = eqn.params.get("mesh")
-            manual = eqn.params.get("manual_axes", getattr(mesh, "axis_names", ()))
-            n = 1
-            for a in manual:
-                try:
-                    n *= dict(zip(mesh.axis_names, mesh.axis_sizes))[a]
-                except Exception:
-                    n *= mesh.shape[a]
             inner = _as_jaxpr(eqn.params["jaxpr"])
-            flops += count_jaxpr(inner, scale * n)
+            flops += count_jaxpr(inner, scale * _shard_map_device_count(eqn))
         elif name in ELEMENTWISE_1:
             flops += scale * _avals_size([v.aval for v in eqn.outvars])
         elif name in REDUCTIONS or name.startswith("reduce_"):
@@ -128,3 +120,64 @@ def count_fn_flops(fn, *args) -> float:
     """Global FLOPs of ``fn(*args)`` (args may be ShapeDtypeStructs)."""
     closed = jax.make_jaxpr(fn)(*args)
     return count_jaxpr(closed.jaxpr)
+
+
+# ------------------------------------------------------- XLA cost analysis
+
+def xla_cost_flops(fn, *args) -> float:
+    """XLA's own flop count for comparison.  ``Compiled.cost_analysis()``
+    returned ``list[dict]`` (one per computation) through jax 0.4.x and a
+    bare ``dict`` afterwards — normalise both."""
+    ca = jax.jit(fn).lower(*args).compile().cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    return float(ca["flops"])
+
+
+# ------------------------------------------------------------ gather bytes
+
+GATHER_PRIMS = {"gather", "take", "take_along_axis"}
+
+
+def _shard_map_device_count(eqn) -> int:
+    mesh = eqn.params.get("mesh")
+    manual = eqn.params.get("manual_axes", getattr(mesh, "axis_names", ()))
+    n = 1
+    for a in manual:
+        try:
+            n *= dict(zip(mesh.axis_names, mesh.axis_sizes))[a]
+        except Exception:
+            n *= mesh.shape[a]
+    return n
+
+
+def count_gather_bytes(jaxpr, scale: float = 1.0) -> float:
+    """Bytes *materialised* by gather ops (output buffers), scan trip
+    counts and shard_map device counts applied — the copies a fused
+    select-and-attend path eliminates.  Used by bench_latency to show the
+    K'/V' gather is gone rather than assert it."""
+    total = 0.0
+    for eqn in jaxpr.eqns:
+        name = eqn.primitive.name
+        if name in GATHER_PRIMS:
+            for v in eqn.outvars:
+                a = v.aval
+                if hasattr(a, "shape"):
+                    total += scale * np.prod(a.shape) * a.dtype.itemsize
+        elif name == "scan":
+            inner = _as_jaxpr(eqn.params["jaxpr"])
+            total += count_gather_bytes(inner, scale * eqn.params["length"])
+        elif name == "shard_map":
+            inner = _as_jaxpr(eqn.params["jaxpr"])
+            total += count_gather_bytes(
+                inner, scale * _shard_map_device_count(eqn)
+            )
+        else:
+            for j in _subjaxprs(eqn):
+                total += count_gather_bytes(_as_jaxpr(j), scale)
+    return total
+
+
+def count_fn_gather_bytes(fn, *args) -> float:
+    closed = jax.make_jaxpr(fn)(*args)
+    return count_gather_bytes(closed.jaxpr)

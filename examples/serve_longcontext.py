@@ -20,7 +20,10 @@ from repro.serving import ContinuousScheduler, Engine, Request
 
 def main():
     cfg = reduced_config("llava-next-mistral-7b")  # mistral-like backbone
-    pol = PolicyConfig(kind="fier", budget=24, group=8, skip_layers=1)
+    # fused=True: the serving default — threshold top-k + select-and-attend
+    # kernels, no materialised K'/V' gather (DESIGN.md §Fused decode)
+    pol = PolicyConfig(kind="fier", budget=24, group=8, skip_layers=1,
+                       fused=True)
     bundle = build_model(cfg, pol)
     params = bundle.init(jax.random.PRNGKey(0))
 

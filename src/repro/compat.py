@@ -1,0 +1,39 @@
+"""Version shims for JAX APIs that moved between releases.
+
+Keep every cross-version branch here so the rest of the codebase imports
+one stable name.  Currently:
+
+  * ``shard_map`` — ``jax.shard_map`` (new) vs
+    ``jax.experimental.shard_map.shard_map`` (≤ 0.4.x), including the
+    ``check_vma`` (new) / ``check_rep`` (old) keyword rename.
+  * ``abstract_mesh`` — ``AbstractMesh`` takes a single ``shape_tuple`` of
+    ``(name, size)`` pairs on the 0.4.x series pinned here; other releases
+    take positional ``(axis_sizes, axis_names)`` (the fallback branch).
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import AbstractMesh
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True):
+    """``jax.shard_map`` across JAX versions (kw-only, like the new API)."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+            check_vma=check_vma,
+        )
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    return _shard_map(
+        f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+        check_rep=check_vma,
+    )
+
+
+def abstract_mesh(axis_sizes: tuple[int, ...], axis_names: tuple[str, ...]) -> AbstractMesh:
+    """``AbstractMesh`` across the positional-args → shape_tuple API break."""
+    try:
+        return AbstractMesh(tuple(zip(axis_names, axis_sizes)))
+    except TypeError:
+        return AbstractMesh(tuple(axis_sizes), tuple(axis_names))

@@ -36,6 +36,10 @@ class PolicyConfig:
     recent: int = 0          # forced recent window (0 = paper-faithful)
     skip_layers: int = 2     # full attention on first N layers (paper/Quest setup)
     use_kernels: bool = False  # Pallas fast path for the score scan
+    fused: bool = False      # fused select-and-attend decode (fier only):
+                             # threshold top-k + in-kernel gather, no
+                             # materialised K'/V' copies (serving default
+                             # via serving.engine.serving_policy)
 
     def __post_init__(self):
         if self.kind not in POLICIES:
@@ -119,7 +123,7 @@ def decode_attention(
         sparse = retrieval.fier_attention_decode(
             q, K, V, meta, cfg.budget, length,
             group_reduce=cfg.group_reduce, sink=cfg.sink, recent=cfg.recent,
-            use_kernels=cfg.use_kernels,
+            use_kernels=cfg.use_kernels, fused=cfg.fused,
         )
     else:
         sparse = quest.quest_attention_decode(

@@ -60,23 +60,29 @@ def approx_scores(q: jax.Array, qk: QuantizedKeys) -> jax.Array:
 
 
 def _approx_scores_block(q, codes, scale, zero, g) -> jax.Array:
-    """bf16 operands, f32 accumulation — mirrors the MXU contract of the
-    Pallas kernel (bf16×bf16→f32) and halves the unpacked-code bytes vs
-    the original f32 pipeline (§Perf iteration A: hbm bytes of the decode
-    scan ↓~2.9×; ±1 codes and bf16 (s,z) are exact in bf16, only the
-    q⊙s product rounds — top-k validated unchanged in tests)."""
+    """bf16-valued operands, f32 arithmetic — the exact MXU contract of the
+    Pallas kernel (bf16 inputs, every product exact in f32, f32 accumulate).
+
+    The operands are *rounded to bf16 values* but the arithmetic runs in
+    f32: a bf16×bf16 product fits f32 exactly, so the only rounding left
+    is the f32 accumulation — which makes this block function bit-stable
+    whether it runs eagerly, jitted, or as a ``lax.scan`` body (the old
+    version multiplied q⊙s *in bf16*, and XLA kept the fused intermediate
+    in f32 under scan but rounded it eagerly, so results depended on
+    APPROX_SCORE_BLOCK; caught by
+    tests/test_retrieval.py::test_approx_scores_blockwise_independent_of_block)."""
     from .quantize import unpack_bits
 
     B, Hq, D = q.shape
     S = codes.shape[1] * 8
     Hkv = codes.shape[2]
     rep = Hq // Hkv
-    bits = unpack_bits(codes).astype(jnp.bfloat16)
-    pm1 = (bits * 2.0 - 1.0).reshape(B, S // g, g, Hkv, D)  # exact in bf16
-    qf = q.astype(jnp.bfloat16).reshape(B, Hkv, rep, D)
-    qs = qf[:, None] * scale.astype(jnp.bfloat16)[:, :, :, None, :]
+    bits = unpack_bits(codes).astype(jnp.float32)
+    pm1 = (bits * 2.0 - 1.0).reshape(B, S // g, g, Hkv, D)  # exact ±1
+    qf = q.astype(jnp.bfloat16).astype(jnp.float32).reshape(B, Hkv, rep, D)
+    qs = qf[:, None] * scale.astype(jnp.float32)[:, :, :, None, :]  # exact
     const = jnp.einsum(
-        "bhrd,bghd->bghr", qf, zero.astype(jnp.bfloat16),
+        "bhrd,bghd->bghr", qf, zero.astype(jnp.float32),
         preferred_element_type=jnp.float32,
     )
     s = jnp.einsum(
@@ -106,6 +112,36 @@ def reduce_over_query_group(scores: jax.Array, n_kv: int, mode: str = "max") -> 
     raise ValueError(f"unknown group reduction {mode!r}")
 
 
+def masked_scores(
+    scores: jax.Array,
+    length: jax.Array | None = None,
+    *,
+    sink: int = 0,
+    recent: int = 0,
+) -> jax.Array:
+    """Apply the selection guard-rails to raw scores [B, Hkv, S].
+
+    ``length`` masks out unwritten cache slots (→ NEG_INF).  ``sink`` /
+    ``recent`` force the first/last tokens into the selection by score
+    override (+inf), the standard serving guard-rails; paper-faithful mode
+    is sink=recent=0.  Shared by the jnp ``select_topk`` oracle and the
+    Pallas threshold-select fast path so both rank the same scores.
+    """
+    B, Hkv, S = scores.shape
+    pos = jnp.arange(S, dtype=jnp.int32)
+    s = scores
+    if length is not None:
+        valid = pos[None, None, :] < length[:, None, None]
+        s = jnp.where(valid, s, NEG_INF)
+    if sink > 0:
+        s = jnp.where(pos[None, None, :] < sink, jnp.inf, s)
+    if recent > 0 and length is not None:
+        is_recent = pos[None, None, :] >= (length - recent)[:, None, None]
+        is_recent &= pos[None, None, :] < length[:, None, None]
+        s = jnp.where(is_recent, jnp.inf, s)
+    return s
+
+
 def select_topk(
     scores: jax.Array,
     budget: int,
@@ -118,23 +154,11 @@ def select_topk(
 
     scores: [B, Hkv, S] → indices int32 [B, Hkv, budget]
 
-    ``length`` masks out unwritten cache slots.  ``sink``/``recent`` force
-    the first/last tokens into the selection by score override (+inf), the
-    standard serving guard-rails; paper-faithful mode is sink=recent=0.
+    This is the jnp oracle (global ``lax.top_k`` sort); the serving fast
+    path is ``kernels.ops.topk_select`` (threshold search, no sort), which
+    must return the same index *set* for any scores.
     """
-    B, Hkv, S = scores.shape
-    pos = jnp.arange(S, dtype=jnp.int32)
-    s = scores
-    if length is not None:
-        valid = pos[None, None, :] < length[:, None, None]
-        s = jnp.where(valid, s, NEG_INF)
-    if sink > 0:
-        s = jnp.where(pos[None, None, :] < sink, jnp.inf, s)
-    if recent > 0 and length is not None:
-        is_recent = pos[None, None, :] >= (length - recent)[:, None, None]
-        if length is not None:
-            is_recent &= pos[None, None, :] < length[:, None, None]
-        s = jnp.where(is_recent, jnp.inf, s)
+    s = masked_scores(scores, length, sink=sink, recent=recent)
     _, idx = jax.lax.top_k(s, budget)
     return idx.astype(jnp.int32)
 
@@ -218,8 +242,25 @@ def fier_attention_decode(
     sink: int = 0,
     recent: int = 0,
     use_kernels: bool = False,
+    fused: bool = False,
 ) -> jax.Array:
-    """End-to-end FIER decode step (Alg. 1 steps 2–4) for batched GQA."""
+    """End-to-end FIER decode step (Alg. 1 steps 2–4) for batched GQA.
+
+    ``fused=True`` routes through the fused select-and-attend Pallas
+    pipeline (``kernels.ops.fused_fier_attention_decode``): threshold
+    top-k instead of a global sort, and attention that reads the selected
+    rows straight out of the cache slabs — no materialised K'/V' gather.
+    The jnp path below (score → ``select_topk`` → ``gather_kv`` →
+    ``sparse_attention``) stays as the validation oracle the fused path
+    is tested against.
+    """
+    if fused:
+        from repro.kernels import ops as kops
+
+        return kops.fused_fier_attention_decode(
+            q, K, V, qk, budget, length,
+            group_reduce=group_reduce, sink=sink, recent=recent,
+        )
     Hkv = K.shape[2]
     if use_kernels:
         from repro.kernels import ops as kops

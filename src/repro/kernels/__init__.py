@@ -1,10 +1,14 @@
 """Pallas TPU kernels for the paper's compute hot-spots (FIER §4.4 uses a
 Triton group-quantization kernel + CUDA top-k; the TPU adaptation is in
-DESIGN.md §2/§6):
+DESIGN.md §2 and §Fused decode):
 
-    fier_score      — packed 1-bit approximate-score scan (decode hot spot)
-    sparse_attention — exact decode attention over the selected tokens
-    pack_quantize   — prefill-time group quantize + bit-pack
+    fier_score       — packed 1-bit approximate-score scan (decode hot spot)
+    topk_select      — threshold top-k on the f32 scores (no global sort)
+    sparse_attention — exact decode attention over the selected tokens:
+                       unfused (pre-gathered K'/V') and fused
+                       (in-kernel row gather from the cache slabs —
+                       no materialised copies; the serving fast path)
+    pack_quantize    — prefill-time group quantize + bit-pack
 
 ``ops``: jit'd wrappers (interpret=True off-TPU).  ``ref``: jnp oracles.
 """

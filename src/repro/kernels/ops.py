@@ -20,6 +20,7 @@ from repro.core.retrieval import NEG_INF
 from . import fier_score as _fs
 from . import pack_quantize as _pq
 from . import sparse_attention as _sa
+from . import topk_select as _tk
 
 
 def _interpret() -> bool:
@@ -84,6 +85,70 @@ def pack_quantize(k: jax.Array, group: int, *, blk_s: int = 512) -> QuantizedKey
     return QuantizedKeys(back(codes), back(scale), back(zero), group)
 
 
+def topk_select(
+    kv_scores: jax.Array,
+    budget: int,
+    length: jax.Array | None = None,
+    *,
+    sink: int = 0,
+    recent: int = 0,
+    blk_s: int = 2048,
+) -> jax.Array:
+    """Threshold top-k selection — no global sort.
+
+    kv_scores f32 [B, Hkv, S] → indices int32 [B, Hkv, budget]; same index
+    set as ``retrieval.select_topk`` (the lax.top_k oracle) for any input.
+    The [B·Hkv, S] reshape is a view (no copy): the kv-score layout is
+    already head-major.
+    """
+    from repro.core import retrieval
+
+    B, Hkv, S = kv_scores.shape
+    s = retrieval.masked_scores(kv_scores, length, sink=sink, recent=recent)
+    s = s.reshape(B * Hkv, S)
+    tau, m = _tk.topk_threshold_hm(
+        s, budget, blk_s=min(blk_s, S), interpret=_interpret()
+    )
+    idx = _tk.compact_indices(s, tau, m, budget)
+    return idx.reshape(B, Hkv, budget)
+
+
+def fused_sparse_attention(
+    q: jax.Array,
+    K: jax.Array,
+    V: jax.Array,
+    idx: jax.Array,
+    length: jax.Array | None,
+    *,
+    blk_k: int = 1024,
+) -> jax.Array:
+    """Fused decode attention: gathers selected rows inside the kernel.
+
+    q [B,Hq,D]; K/V seq-major slabs [B,S,Hkv,D]; idx [B,Hkv,budget];
+    length [B] → [B,Hq,D] (q.dtype).  Unlike ``sparse_attention`` there is
+    no K'/V' operand: the slabs are passed whole (ANY memory space) and
+    only the selected rows move HBM→VMEM.  The q/idx/mask reshapes below
+    touch O(Hq·D + budget) bytes — nothing cache-sized is copied.
+    """
+    B, Hq, D = q.shape
+    Hkv = K.shape[2]
+    rep = Hq // Hkv
+    budget = idx.shape[2]
+    q4 = q.reshape(B, Hkv, rep, D)
+    if length is not None:
+        valid = idx < length[:, None, None]
+    else:
+        valid = jnp.ones_like(idx, dtype=bool)
+    mask = valid[:, :, None, :].astype(jnp.int8)
+    blk = min(blk_k, budget)
+    while budget % blk:
+        blk //= 2
+    out = _sa.fused_sparse_attention_hm(
+        q4, K, V, idx, mask, blk_k=blk, interpret=_interpret()
+    )
+    return out.reshape(B, Hq, D).astype(q.dtype)
+
+
 def fier_attention_decode(
     q: jax.Array,
     K: jax.Array,
@@ -94,7 +159,8 @@ def fier_attention_decode(
     *,
     group_reduce: str = "max",
 ) -> jax.Array:
-    """Kernel-path end-to-end FIER decode (Alg. 1 steps 2–4)."""
+    """Kernel-path end-to-end FIER decode (Alg. 1 steps 2–4), unfused:
+    kernel scoring but XLA top-k + materialised gather."""
     from repro.core import retrieval
 
     Hkv = K.shape[2]
@@ -103,3 +169,28 @@ def fier_attention_decode(
     idx = retrieval.select_topk(kv_scores, budget, length)
     k_sel, v_sel = retrieval.gather_kv(K, V, idx)
     return sparse_attention(q, k_sel, v_sel, idx, length)
+
+
+def fused_fier_attention_decode(
+    q: jax.Array,
+    K: jax.Array,
+    V: jax.Array,
+    qk: QuantizedKeys,
+    budget: int,
+    length: jax.Array | None = None,
+    *,
+    group_reduce: str = "max",
+    sink: int = 0,
+    recent: int = 0,
+    blk_k: int = 1024,
+) -> jax.Array:
+    """Fully fused FIER decode step: Pallas score scan → threshold top-k
+    (no sort) → select-and-attend (no materialised K'/V' gather).  The
+    serving decode fast path."""
+    from repro.core import retrieval
+
+    Hkv = K.shape[2]
+    scores = fier_score(q, qk)
+    kv_scores = retrieval.reduce_over_query_group(scores, Hkv, group_reduce)
+    idx = topk_select(kv_scores, budget, length, sink=sink, recent=recent)
+    return fused_sparse_attention(q, K, V, idx, length, blk_k=blk_k)

@@ -32,3 +32,31 @@ def sparse_attention(
 def pack_quantize(k: jax.Array, group: int) -> qz.QuantizedKeys:
     """[B,S,Hkv,D] → QuantizedKeys (codes/scale/zero, seq-major layout)."""
     return qz.quantize(k, group)
+
+
+def topk_select(
+    kv_scores: jax.Array,
+    budget: int,
+    length: jax.Array | None = None,
+    *,
+    sink: int = 0,
+    recent: int = 0,
+) -> jax.Array:
+    """[B,Hkv,S] → int32 [B,Hkv,budget] — the lax.top_k global-sort oracle
+    for the threshold-select kernel (index *sets* must match exactly)."""
+    return retrieval.select_topk(
+        kv_scores, budget, length, sink=sink, recent=recent
+    )
+
+
+def fused_sparse_attention(
+    q: jax.Array,
+    K: jax.Array,
+    V: jax.Array,
+    idx: jax.Array,
+    length: jax.Array | None,
+) -> jax.Array:
+    """Oracle for the fused kernel: materialised gather + sparse attention
+    (the unfused pipeline the fused path must agree with to tolerance)."""
+    k_sel, v_sel = retrieval.gather_kv(K, V, idx)
+    return retrieval.sparse_attention(q, k_sel, v_sel, idx, length)

@@ -1,13 +1,28 @@
-"""Pallas TPU kernel: exact decode attention over the FIER-selected tokens.
+"""Pallas TPU kernels: exact decode attention over the FIER-selected tokens.
 
-After top-k selection gathers K'/V' (budget rows, full precision), decode
-attention is a single-query softmax over ``budget`` keys per kv head —
-small enough that one VMEM block holds a whole (kv-head, budget) tile:
-budget=4096, D=128 bf16 → 1 MiB K + 1 MiB V.  Larger budgets tile over
-the budget dim with an online-softmax carry.
+Two variants:
 
-Grid: (B·Hkv, budget/blk_k).  Invalid slots (selection padding when
-budget > length) arrive as an int8 mask.
+``sparse_attention_hm`` (unfused) — consumes pre-gathered K'/V' (budget
+rows).  The XLA gather that feeds it *materialises* 2·budget·D bytes per
+kv head per layer per step in HBM, written once and read once — the
+dominant retrieval cost at serving scale (FreeKV observes the same on
+GPU).  Kept as the fallback and as the shape the jnp oracle mirrors.
+
+``fused_sparse_attention_hm`` (fused select-and-attend) — consumes top-k
+*indices* (int32) plus the full seq-major cache slabs, and pulls each
+selected row HBM→VMEM with per-row async DMA inside the kernel.  No K'/V'
+copy ever exists in HBM: the only cache traffic is budget rows *read*
+directly from the slabs.  The gather loop double-issues the K and V row
+copies so both are in flight per step.
+
+Both use the same online-softmax over budget blocks: one VMEM tile holds
+a (kv-head, blk_k) stripe — budget=4096, D=128 bf16 → 1 MiB K + 1 MiB V —
+and larger budgets carry (m, d) across blocks.
+
+Grids: (B·Hkv, budget/blk_k) unfused; (B, Hkv, budget/blk_k) fused (the
+fused kernel indexes the seq-major [B, S, Hkv, D] slabs directly, so the
+batch and head coordinates stay separate).  Invalid slots (selection
+padding when budget > length) arrive as an int8 mask.
 """
 from __future__ import annotations
 
@@ -16,6 +31,7 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 NEG_INF = -1e30
 
@@ -97,5 +113,151 @@ def sparse_attention_hm(
         ],
         interpret=interpret,
     )(q, k_sel, v_sel, mask)
+    den = jnp.maximum(d[..., 0], 1e-30)
+    return out / den[..., None]
+
+
+# ------------------------------------------------------ fused select+attend
+
+def _fused_kernel(
+    idx_ref, q_ref, mask_ref, k_hbm, v_hbm, out_ref, m_ref, d_ref,
+    k_vmem, v_vmem, sems, *, scale,
+):
+    """One (batch, kv-head, budget-block) step of fused select-and-attend.
+
+    idx_ref [blk_k] int32 (SMEM); q [rep, D]; mask int8 [1, blk_k];
+    k_hbm/v_hbm: *whole* seq-major cache slabs [B, S, Hkv, D] (ANY space —
+    never staged through VMEM wholesale); k_vmem/v_vmem [blk_k, D] scratch;
+    sems: [2, 2] DMA semaphores — (slot = row parity) × (K, V) — so the
+    gather loop keeps the next row's copies in flight while waiting on
+    the current row's (double-buffered, not serial round-trips).
+    """
+    b = pl.program_id(0)
+    h = pl.program_id(1)
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, -jnp.inf)
+        d_ref[...] = jnp.zeros_like(d_ref)
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    blk_k = k_vmem.shape[0]
+
+    def row_copies(i):
+        """The (K, V) row-i DMA descriptors; slot = i mod 2 double-buffers
+        the semaphores so row i+1's copies are in flight while row i's
+        are being waited on."""
+        row = idx_ref[i]
+        slot = jax.lax.rem(i, 2)
+        kcp = pltpu.make_async_copy(
+            k_hbm.at[b, pl.ds(row, 1), h, :], k_vmem.at[pl.ds(i, 1), :],
+            sems.at[slot, 0],
+        )
+        vcp = pltpu.make_async_copy(
+            v_hbm.at[b, pl.ds(row, 1), h, :], v_vmem.at[pl.ds(i, 1), :],
+            sems.at[slot, 1],
+        )
+        return kcp, vcp
+
+    def start_row(i):
+        kcp, vcp = row_copies(i)
+        kcp.start()
+        vcp.start()
+
+    start_row(0)
+
+    def gather(i, _):
+        @pl.when(i + 1 < blk_k)
+        def _prefetch():
+            start_row(i + 1)
+
+        kcp, vcp = row_copies(i)
+        kcp.wait()
+        vcp.wait()
+        return 0
+
+    jax.lax.fori_loop(0, blk_k, gather, 0)
+
+    q = q_ref[...].astype(jnp.float32)
+    k = k_vmem[...].astype(jnp.float32)
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * scale                                            # [rep, blk_k]
+    valid = mask_ref[...] > 0                            # [1, blk_k]
+    s = jnp.where(valid, s, NEG_INF)
+
+    m_prev = m_ref[..., 0]
+    m_new = jnp.maximum(m_prev, s.max(axis=-1))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new[:, None])
+    p = jnp.where(valid, p, 0.0)
+    v = v_vmem[...].astype(jnp.float32)
+    out_ref[...] = out_ref[...] * alpha[:, None] + jax.lax.dot(
+        p, v, preferred_element_type=jnp.float32
+    )
+    d_ref[..., 0] = d_ref[..., 0] * alpha + p.sum(axis=-1)
+    m_ref[..., 0] = m_new
+
+
+@functools.partial(jax.jit, static_argnames=("blk_k", "interpret"))
+def fused_sparse_attention_hm(
+    q: jax.Array,
+    K: jax.Array,
+    V: jax.Array,
+    idx: jax.Array,
+    mask: jax.Array,
+    *,
+    blk_k: int = 1024,
+    interpret: bool = True,
+) -> jax.Array:
+    """Fused select-and-attend decode attention.
+
+    q [B, Hkv, rep, D]; K/V seq-major slabs [B, S, Hkv, D]; idx int32
+    [B, Hkv, budget]; mask int8 [B, Hkv, 1, budget] → out f32
+    [B, Hkv, rep, D].
+
+    The slabs are bound with ``memory_space=ANY`` — the kernel DMAs only
+    the ``budget`` selected rows, so per step per kv head the cache
+    traffic is budget·D·2 bytes *read* for K (same for V) and zero bytes
+    written, vs. the unfused path's additional budget·D·2 written + read
+    back for each materialised K'/V' copy.
+    """
+    B, Hkv, rep, D = q.shape
+    budget = idx.shape[2]
+    blk_k = min(blk_k, budget)
+    assert budget % blk_k == 0
+    grid = (B, Hkv, budget // blk_k)
+    scale = 1.0 / (D**0.5)
+    out, m, d = pl.pallas_call(
+        functools.partial(_fused_kernel, scale=scale),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(
+                (None, None, blk_k), lambda b, h, j: (b, h, j),
+                memory_space=pltpu.SMEM,
+            ),
+            pl.BlockSpec((None, None, rep, D), lambda b, h, j: (b, h, 0, 0)),
+            pl.BlockSpec((None, None, 1, blk_k), lambda b, h, j: (b, h, 0, j)),
+            pl.BlockSpec(memory_space=pltpu.ANY),
+            pl.BlockSpec(memory_space=pltpu.ANY),
+        ],
+        out_specs=[
+            pl.BlockSpec((None, None, rep, D), lambda b, h, j: (b, h, 0, 0)),
+            pl.BlockSpec((None, None, rep, 128), lambda b, h, j: (b, h, 0, 0)),
+            pl.BlockSpec((None, None, rep, 128), lambda b, h, j: (b, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, Hkv, rep, D), jnp.float32),
+            jax.ShapeDtypeStruct((B, Hkv, rep, 128), jnp.float32),
+            jax.ShapeDtypeStruct((B, Hkv, rep, 128), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((blk_k, D), K.dtype),
+            pltpu.VMEM((blk_k, D), V.dtype),
+            pltpu.SemaphoreType.DMA((2, 2)),
+        ],
+        interpret=interpret,
+    )(idx, q, mask, K, V)
     den = jnp.maximum(d[..., 0], 1e-30)
     return out / den[..., None]

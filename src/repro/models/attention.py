@@ -16,6 +16,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.compat import shard_map
 from repro.configs.base import ModelConfig
 from repro.core import distributed as dist
 from repro.core import policy as core_policy
@@ -161,6 +162,13 @@ def decode_self_attention(
     meta = layer_cache.get("meta")
 
     if dcfg is not None and dcfg.seq_axes:
+        if pol.fused:
+            # the fused select-and-attend kernel is single-shard for now:
+            # inside the shard_map body each shard selects over its local
+            # slab via the distributed LSE-merge path instead.  Strip the
+            # flag explicitly so the dispatch below never silently runs a
+            # DMA kernel under GSPMD.
+            pol = dataclasses.replace(pol, fused=False)
         out, k_slab, v_slab, meta = _sharded_decode_step(
             qh, k_new, v_new, layer_cache["k"], layer_cache["v"], meta,
             length, cfg, pol, dcfg,
@@ -258,7 +266,7 @@ def _sharded_decode_step(
         return out, K2, V2, meta2
 
     meta_spec = jax.tree.map(lambda _: kv_spec, meta)
-    f = jax.shard_map(
+    f = shard_map(
         body,
         mesh=mesh,
         in_specs=(q_spec, q_spec, q_spec, kv_spec, kv_spec, meta_spec, q_spec),

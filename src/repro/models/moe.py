@@ -15,6 +15,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.compat import shard_map
 from repro.configs.base import ModelConfig
 
 from .layers import init_linear
@@ -157,7 +158,7 @@ def moe_apply_ep(
         aux = jax.lax.pmean(aux_local, all_axes)
         return y, aux
 
-    f = jax.shard_map(
+    f = shard_map(
         body,
         mesh=mesh,
         in_specs=(

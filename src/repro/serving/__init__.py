@@ -1,4 +1,4 @@
-from .engine import Engine, SamplingConfig
+from .engine import Engine, SamplingConfig, serving_policy
 from .scheduler import ContinuousScheduler, Request
 
-__all__ = ["ContinuousScheduler", "Engine", "Request", "SamplingConfig"]
+__all__ = ["ContinuousScheduler", "Engine", "Request", "SamplingConfig", "serving_policy"]

@@ -2,9 +2,14 @@
 slot-based continuous batching support.
 
 The decode step is the FIER fast path: policy-dispatched attention over
-the cache slabs (optionally sequence-sharded across the mesh).  Slot
-insertion runs a B=1 prefill and scatters the resulting cache into the
-batched cache; the batch axis of every cache leaf is discovered
+the cache slabs (optionally sequence-sharded across the mesh).  The
+*default* serving policy (``serving_policy`` / ``Engine.build``) is the
+fused select-and-attend pipeline: Pallas 1-bit score scan → threshold
+top-k (no global sort) → in-kernel row gather + attention (no
+materialised K'/V' copies) — see DESIGN.md §Fused decode.
+
+Slot insertion runs a B=1 prefill and scatters the resulting cache into
+the batched cache; the batch axis of every cache leaf is discovered
 automatically by diffing ``init_cache`` shapes at two batch sizes (no
 per-model bookkeeping).
 """
@@ -17,7 +22,27 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
+from repro.core.policy import PolicyConfig
 from repro.models.model_zoo import ModelBundle
+
+
+def serving_policy(
+    budget: int = 1024,
+    group: int = 32,
+    *,
+    skip_layers: int = 2,
+    sink: int = 4,
+    recent: int = 64,
+    fused: bool = True,
+) -> PolicyConfig:
+    """The serving-default FIER policy: fused decode fast path on, the
+    standard sink/recent guard-rails for generation quality.  Pass
+    ``fused=False`` to fall back to the unfused top-k + gather pipeline
+    (the validation oracle)."""
+    return PolicyConfig(
+        kind="fier", budget=budget, group=group, skip_layers=skip_layers,
+        sink=sink, recent=recent, fused=fused,
+    )
 
 
 @dataclasses.dataclass(frozen=True)
@@ -81,6 +106,32 @@ class Engine:
 
         self._decode_active = jax.jit(_decode_active_impl, donate_argnums=donate)
         self._insert = jax.jit(self._insert_impl, donate_argnums=(0,))
+
+    @classmethod
+    def build(
+        cls,
+        cfg,
+        *,
+        n_slots: int,
+        capacity: int,
+        policy: PolicyConfig | None = None,
+        sampling: SamplingConfig = SamplingConfig(),
+        **build_kwargs,
+    ) -> "Engine":
+        """Build bundle + engine with the serving defaults: when ``policy``
+        is None the fused FIER fast path (``serving_policy()``) is used,
+        with the budget clamped to ``capacity`` (a budget larger than the
+        cache would otherwise fail the kernel's budget ≤ S check at the
+        first decode step)."""
+        from repro.models import build_model
+
+        if policy is not None:
+            pol = policy
+        else:
+            base = serving_policy()
+            pol = dataclasses.replace(base, budget=min(base.budget, capacity))
+        bundle = build_model(cfg, pol, **build_kwargs)
+        return cls(bundle, n_slots=n_slots, capacity=capacity, sampling=sampling)
 
     # ------------------------------------------------------------ lifecycle
     def new_cache(self, length: int = 0):

@@ -7,6 +7,24 @@ import pytest
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 SRC = os.path.join(REPO, "src")
 
+# the `slow` marker itself is declared once, in pyproject.toml
+# [tool.pytest.ini_options].
+
+def pytest_collection_modifyitems(config, items):
+    # Tests that call the subprocess helper spawn forced multi-device CPU
+    # topologies (fresh jax init + compile each, ~minutes in total): mark
+    # them `slow` so CI's fast lane (`-m "not slow"`) skips them.  Detect
+    # by source so the set can't drift as tests are added.
+    import inspect
+
+    for item in items:
+        try:
+            src = inspect.getsource(item.function)
+        except (OSError, TypeError):
+            continue
+        if "run_in_subprocess" in src:
+            item.add_marker(pytest.mark.slow)
+
 
 def run_in_subprocess(code: str, n_devices: int = 4, timeout: int = 600):
     """Run a python snippet with a forced CPU device count (multi-device

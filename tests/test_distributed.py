@@ -8,6 +8,7 @@ from conftest import run_in_subprocess
 _COMMON = """
 import jax, jax.numpy as jnp, numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.compat import shard_map
 from repro.core import quantize as qz, retrieval as rt, distributed as dist
 
 B, S, Hkv, Hq, D, g = 2, 256, 2, 4, 32, 8
@@ -29,7 +30,7 @@ def sharded(mode, budget):
             q_l, K_l, V_l, meta_l, budget, len_l, axis=("model",),
             shard_start=start, n_shards=n_shards, mode=mode)
     kv = P(None, "model")
-    f = jax.shard_map(body, mesh=mesh,
+    f = shard_map(body, mesh=mesh,
         in_specs=(P(), kv, kv, kv, kv, kv, P()), out_specs=P(), check_vma=False)
     return jax.jit(f)(q, K, V, qk.codes, qk.scale, qk.zero, length)
 
@@ -39,7 +40,7 @@ def full_sharded():
         return dist.full_decode_sharded(q_l, K_l, V_l, len_l, axis=("model",),
                                         shard_start=start)
     kv = P(None, "model")
-    f = jax.shard_map(body, mesh=mesh, in_specs=(P(), kv, kv, P()),
+    f = shard_map(body, mesh=mesh, in_specs=(P(), kv, kv, P()),
                       out_specs=P(), check_vma=False)
     return jax.jit(f)(q, K, V, length)
 """

@@ -7,11 +7,9 @@ import pytest
 
 import sys, os
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "benchmarks"))
-from flopcount import count_fn_flops  # noqa: E402
+from flopcount import count_fn_flops, xla_cost_flops  # noqa: E402
 
-
-def _xla_flops(fn, *args):
-    return jax.jit(fn).lower(*args).compile().cost_analysis()["flops"]
+_xla_flops = xla_cost_flops
 
 
 def test_matmul_exact():

@@ -91,3 +91,86 @@ def test_end_to_end_kernel_path_in_policy():
         meta = build_metadata(K, cfg)
         out = decode_attention(q, K, V, meta, cfg, length, layer=1)
         assert jnp.isfinite(out).all()
+
+
+# ------------------------------------------------- fused select-and-attend
+
+@pytest.mark.parametrize("B,S,Hkv,Hq,D,g", SHAPES)
+def test_topk_select_kernel_matches_oracle(B, S, Hkv, Hq, D, g):
+    """Threshold select must return exactly lax.top_k's index *set* —
+    including NEG_INF padding ties and sink/recent +inf overrides."""
+    q, K, V = _inputs(B, S, Hkv, Hq, D, seed=5)
+    s = rt.reduce_over_query_group(ref.fier_score(q, ref.pack_quantize(K, g)), Hkv)
+    length = jnp.full((B,), max(S // 2, 16), jnp.int32)
+    for budget, sink, recent in [(min(64, S), 0, 0), (min(32, S), 4, 8), (S, 0, 0)]:
+        got = np.asarray(ops.topk_select(s, budget, length, sink=sink, recent=recent))
+        want = np.asarray(ref.topk_select(s, budget, length, sink=sink, recent=recent))
+        np.testing.assert_array_equal(np.sort(got, -1), np.sort(want, -1))
+
+
+@pytest.mark.parametrize("B,S,Hkv,Hq,D,g", SHAPES)
+def test_fused_sparse_attention_matches_ref(B, S, Hkv, Hq, D, g):
+    """Fused kernel (in-kernel row gather) vs the materialised-gather jnp
+    oracle, on identical indices, across GQA shapes."""
+    q, K, V = _inputs(B, S, Hkv, Hq, D, seed=6)
+    qk = ref.pack_quantize(K, g)
+    kv_s = rt.reduce_over_query_group(ref.fier_score(q, qk), Hkv)
+    length = jnp.full((B,), S - 5, jnp.int32)
+    idx = rt.select_topk(kv_s, min(64, S), length)
+    got = np.asarray(ops.fused_sparse_attention(q, K, V, idx, length), np.float32)
+    want = np.asarray(ref.fused_sparse_attention(q, K, V, idx, length), np.float32)
+    np.testing.assert_allclose(got, want, rtol=2e-2, atol=2e-2)
+
+
+def test_fused_budget_exceeds_length():
+    """budget > valid length: selection padding must be masked identically
+    in fused and unfused paths (the degenerate-to-dense edge)."""
+    B, S, Hkv, Hq, D = 2, 128, 2, 4, 32
+    q, K, V = _inputs(B, S, Hkv, Hq, D, seed=7)
+    qk = ref.pack_quantize(K, 16)
+    length = jnp.array([40, 96], jnp.int32)
+    got = np.asarray(
+        ops.fused_fier_attention_decode(q, K, V, qk, budget=64, length=length),
+        np.float32,
+    )
+    want = np.asarray(
+        rt.fier_attention_decode(q, K, V, qk, budget=64, length=length),
+        np.float32,
+    )
+    np.testing.assert_allclose(got, want, rtol=5e-2, atol=5e-2)
+    full = np.asarray(rt.full_attention_decode(q, K, V, length), np.float32)
+    np.testing.assert_allclose(got[0], full[0], rtol=5e-2, atol=5e-2)
+
+
+@pytest.mark.parametrize("B,S,Hkv,Hq,D,g", SHAPES)
+def test_fused_pipeline_end_to_end(B, S, Hkv, Hq, D, g):
+    """Score kernel → threshold select → fused attend vs the jnp oracle."""
+    q, K, V = _inputs(B, S, Hkv, Hq, D, seed=8)
+    qk = ref.pack_quantize(K, g)
+    length = jnp.full((B,), S - 3, jnp.int32)
+    budget = min(64, S)
+    got = np.asarray(
+        ops.fused_fier_attention_decode(q, K, V, qk, budget, length), np.float32
+    )
+    want = np.asarray(
+        rt.fier_attention_decode(q, K, V, qk, budget, length), np.float32
+    )
+    np.testing.assert_allclose(got, want, rtol=5e-2, atol=5e-2)
+
+
+def test_fused_policy_dispatch_matches_unfused():
+    """PolicyConfig(fused=True) through decode_attention: same tokens of
+    attention output as the unfused oracle path."""
+    from repro.core.policy import PolicyConfig, build_metadata, decode_attention
+
+    q, K, V = _inputs(2, 256, 2, 4, 64, seed=9)
+    length = jnp.array([256, 200], jnp.int32)
+    outs = {}
+    for fused in (False, True):
+        cfg = PolicyConfig(kind="fier", budget=64, group=32, skip_layers=0,
+                           fused=fused)
+        meta = build_metadata(K, cfg)
+        outs[fused] = np.asarray(
+            decode_attention(q, K, V, meta, cfg, length, layer=1), np.float32
+        )
+    np.testing.assert_allclose(outs[True], outs[False], rtol=5e-2, atol=5e-2)

@@ -1,8 +1,15 @@
-"""Property-based tests (hypothesis) on the system's core invariants."""
+"""Property-based tests (hypothesis) on the system's core invariants.
+
+The whole module skips when hypothesis isn't installed (it is declared in
+pyproject.toml and present in CI, but optional in minimal dev containers).
+"""
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import quantize as qz
 from repro.core import retrieval as rt
