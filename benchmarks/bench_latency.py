@@ -1,23 +1,29 @@
 """Paper Fig. 8: decode latency vs context length, Full-KV vs FIER
-(unfused and fused select-and-attend).
+(unfused, fused two-pass, and one-pass fused retrieval).
 
-Three measurements:
+Four measurements:
   1. CPU wall-clock of the jitted decode step at growing cache lengths —
     the *trend* (FIER flattens, full grows linearly) is hardware-agnostic;
-    the fused path additionally runs in Pallas interpret mode on CPU, so
-    its wall-clock is a correctness smoke, not a perf number;
+    the fused paths additionally run in Pallas interpret mode on CPU, so
+    their wall-clock is a correctness smoke, not a perf number;
   2. materialised gather bytes per decode step, counted from the jaxpr
      (scan-aware, all layers): the unfused path writes+reads budget-sized
-     K'/V' copies every layer every step; the fused path must show the
+     K'/V' copies every layer every step; the fused paths must show the
      cache-slab gathers *gone* — measured, not asserted;
-  3. the analytic v5e bytes model (decode is HBM-bound): step time ≈
+  3. materialised score-tensor bytes per decode step
+     (``count_score_bytes``): the unfused/two-pass paths round-trip the
+     f32 [B, Hq, S] (and [B, Hkv, S]) approximate-score tensors through
+     HBM between scoring and selection (≥ 2·4·Hq·S bytes/layer/step);
+     the one-pass retrieval kernel must measure **zero** — the property
+     the ``--smoke`` CI gate asserts;
+  4. the analytic v5e bytes model (decode is HBM-bound): step time ≈
      bytes_touched / 819 GB/s using the exact cache/metadata byte counts —
      the paper's 1.2–1.5× claim mapped onto TPU, and the fused-vs-unfused
      delta (no 2·budget·D bf16 copies per kv head per layer per step).
 """
 from __future__ import annotations
 
-import dataclasses
+import sys
 
 import jax
 import jax.numpy as jnp
@@ -25,7 +31,10 @@ import numpy as np
 
 from repro.core.quantize import packed_nbytes
 
-from .common import bench_model_cfg, emit, policy_bundle, timeit, train_tiny_lm
+from .common import (
+    bench_model_cfg, emit, emit_score_traffic, policy_bundle, timeit,
+    train_tiny_lm,
+)
 from .flopcount import count_fn_gather_bytes
 
 HBM_BW = 819e9
@@ -53,7 +62,8 @@ def run():
     variants = (
         ("full", dict(kind="full")),
         ("fier", dict(kind="fier")),
-        ("fier_fused", dict(kind="fier", fused=True)),
+        ("fier_fused", dict(kind="fier", fused=True, one_pass=False)),
+        ("fier_onepass", dict(kind="fier", fused=True, one_pass=True)),
     )
     for S in (512, 1024, 2048):
         tok = jnp.zeros((B,), jnp.int32)
@@ -68,16 +78,21 @@ def run():
                     bundle.decode_step, params, tok, cache
                 )
             emit(f"decode_latency_{name}_ctx{S}", us, f"B={B}")
-        # the fused path must eliminate the budget-sized K'/V' copies:
+        # the fused paths must eliminate the budget-sized K'/V' copies:
         # unfused − fused == the analytic gather bytes (embedding-lookup
         # gathers etc. are common to both and cancel)
         copies = gather_copy_bytes(cfg, budget, B, cfg.n_layers - 1)
         emit(
             f"decode_gather_bytes_ctx{S}", 0.0,
             f"unfused={gbytes['fier']:.0f} fused={gbytes['fier_fused']:.0f} "
-            f"eliminated={gbytes['fier'] - gbytes['fier_fused']:.0f} "
+            f"onepass={gbytes['fier_onepass']:.0f} "
+            f"eliminated={gbytes['fier'] - gbytes['fier_onepass']:.0f} "
             f"analytic_kv_copies={copies}",
         )
+        # the one-pass retrieval kernel must additionally eliminate the
+        # f32 score-tensor round trip between scoring and selection
+        emit_score_traffic(cfg.n_heads, cfg.n_kv_heads, cfg.d_head,
+                           budget=budget, B=B, S=S)
         emit(
             f"decode_latency_v5e_model_ctx{S}", 0.0,
             f"analytic_fullKV_over_FIER={analytic_v5e_speedup(S, cfg, budget):.2f}x",
@@ -93,8 +108,23 @@ def run():
         )
 
 
+def smoke():
+    """Fast CI gate (`--smoke`): assert the one-pass retrieval path
+    materialises zero score-tensor bytes (and the two-pass path pays the
+    full ≥ 2·4·Hq·S round trip) at a tiny config — the perf property is
+    *gated*, not just benchmarked.  No model training involved."""
+    cfg = bench_model_cfg()
+    sb = emit_score_traffic(cfg.n_heads, cfg.n_kv_heads, cfg.d_head,
+                            budget=32, B=1, S=256, check=True)
+    emit("bench_smoke_ok", 0.0,
+         f"one_pass=0 two_pass={sb['two_pass']:.0f} unfused={sb['unfused']:.0f}")
+
+
 def main():
-    run()
+    if "--smoke" in sys.argv[1:]:
+        smoke()
+    else:
+        run()
 
 
 if __name__ == "__main__":

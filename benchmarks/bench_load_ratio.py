@@ -11,6 +11,13 @@ bf16 written to HBM, then read back by attention → 4·budget·Hkv·D·2 bytes
 of extra traffic on top of the budget rows read from the slabs); the
 fused kernel reads the selected rows straight from the slabs.  Measured
 here from the jaxpr (gather output bytes), not asserted.
+
+Selection phase, fused: the *one-pass* retrieval kernel also removes the
+f32 score-tensor round trip between scoring and selection — the two-pass
+pipeline writes [B·Hkv·rep, S] f32 out of the score kernel and reads it
+back through the reduce + threshold-select stages (≥ 2·4·Hq·S bytes),
+the one-pass kernel keeps every block's scores in VREGs.  Measured from
+the jaxpr (``count_score_bytes``) and asserted exactly zero.
 """
 from __future__ import annotations
 
@@ -21,7 +28,7 @@ import numpy as np
 from repro.core import quantize as qz, quest
 from repro.core import retrieval as rt
 
-from .common import emit
+from .common import emit, emit_score_traffic
 from .flopcount import count_fn_gather_bytes
 
 
@@ -81,6 +88,13 @@ def run():
         f"unfused={unfused:.0f} fused={fused:.0f} kv_copies={copies} "
         f"eliminated={unfused - fused:.0f}",
     )
+
+    # --------------------------------------------- select-phase score bytes
+    # shared gate (same helper the CI bench-smoke asserts through): the
+    # one-pass kernel materialises zero score bytes, the two-pass pipeline
+    # pays at least the f32 [B, Hq, S] write+read floor
+    emit_score_traffic(Hq, Hkv, Dq, budget=budget, B=Bq, S=Sq, group=g,
+                       check=True)
 
 
 def main():

@@ -67,12 +67,69 @@ def train_tiny_lm(kind: str = "lm", steps: int = 300, seq: int = 256,
 
 
 def policy_bundle(cfg, kind: str, budget: int, group: int = 8, page: int = 8,
-                  skip: int = 1, fused: bool = False):
+                  skip: int = 1, fused: bool = False, one_pass: bool = True):
     pol = None if kind == "full" else PolicyConfig(
         kind=kind, budget=budget, group=group, page=page, skip_layers=skip,
-        fused=fused,
+        fused=fused, one_pass=one_pass,
     )
     return build_model(cfg, pol)
+
+
+def score_traffic_bytes(Hq: int, Hkv: int, D: int, *, budget: int, B: int,
+                        S: int, group: int = 8, seed: int = 0) -> dict:
+    """Materialised score-tensor bytes per *retrieval+attend op* (one
+    layer, isolated from the model so skip-layer full attention and
+    embedding lookups don't blur the accounting) for the three fier
+    pipelines.  The one-pass path must be exactly zero."""
+    from repro.core import quantize as qz
+    from repro.core import retrieval as rt
+    from repro.kernels import ops as kops
+
+    from .flopcount import count_fn_score_bytes
+
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    Kc = jax.random.normal(ks[0], (B, S, Hkv, D), jnp.bfloat16)
+    Vc = jax.random.normal(ks[1], (B, S, Hkv, D), jnp.bfloat16)
+    q = jax.random.normal(ks[2], (B, Hq, D))
+    qk = qz.quantize(Kc.astype(jnp.float32), group)
+    length = jnp.full((B,), S, jnp.int32)
+    return {
+        "unfused": count_fn_score_bytes(
+            lambda q, K, V: rt.fier_attention_decode(q, K, V, qk, budget, length),
+            S, q, Kc, Vc,
+        ),
+        "two_pass": count_fn_score_bytes(
+            lambda q, K, V: kops.fused_fier_attention_decode(
+                q, K, V, qk, budget, length, one_pass=False
+            ),
+            S, q, Kc, Vc,
+        ),
+        "one_pass": count_fn_score_bytes(
+            lambda q, K, V: kops.fused_fier_attention_decode(
+                q, K, V, qk, budget, length, one_pass=True
+            ),
+            S, q, Kc, Vc,
+        ),
+    }
+
+
+def emit_score_traffic(Hq: int, Hkv: int, D: int, *, budget: int, B: int,
+                       S: int, group: int = 8, check: bool = False) -> dict:
+    """Emit (and with ``check=True`` *assert*) the score-byte contract:
+    one-pass == 0, two-pass pays ≥ the 2·4·Hq·S f32 write+read floor.
+    The single shared gate for bench_latency / bench_load_ratio / CI."""
+    sb = score_traffic_bytes(Hq, Hkv, D, budget=budget, B=B, S=S, group=group)
+    floor = 2 * 4 * Hq * S * B  # write+read of the f32 [B, Hq, S] scores
+    emit(
+        f"retrieval_score_bytes_ctx{S}", 0.0,
+        f"unfused={sb['unfused']:.0f} two_pass={sb['two_pass']:.0f} "
+        f"one_pass={sb['one_pass']:.0f} floor_2x4HqS={floor}",
+    )
+    if check:
+        assert sb["one_pass"] == 0.0, sb
+        assert sb["two_pass"] >= floor, (sb, floor)
+        assert sb["unfused"] > 0.0, sb
+    return sb
 
 
 def timeit(fn, *args, reps: int = 5, warmup: int = 2) -> float:

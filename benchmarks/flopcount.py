@@ -17,7 +17,6 @@ Everything else (layout, slicing, gathers) counts 0 flops.
 from __future__ import annotations
 
 import math
-from typing import Any
 
 import jax
 import numpy as np
@@ -181,3 +180,79 @@ def count_gather_bytes(jaxpr, scale: float = 1.0) -> float:
 def count_fn_gather_bytes(fn, *args) -> float:
     closed = jax.make_jaxpr(fn)(*args)
     return count_gather_bytes(closed.jaxpr)
+
+
+# ------------------------------------------------------------- score bytes
+
+FLOAT_DTYPES = ("float32", "bfloat16", "float16")
+_LANE = 128  # kernels' lane-padded scalar outputs ([..., LANE] f32 carries)
+
+
+def count_score_bytes(jaxpr, seq_len: int, scale: float = 1.0) -> float:
+    """Bytes of *materialised* sequence-length score tensors: outputs of
+    non-call primitives whose trailing dim equals ``seq_len`` (float
+    dtypes, ndim ≥ 2) — the [B, Hq, S] / [B, Hkv, S] approximate-score
+    tensors (and their masked/reduced variants) that the unfused decode
+    path round-trips through HBM between scoring and selection.  Scan
+    trip counts and shard_map device counts are applied, like
+    ``count_gather_bytes``.
+
+    ``pallas_call`` is a *leaf*: its HBM outputs are counted (the
+    two-pass ``fier_score`` kernel emits a [B·Hkv, rep, S] f32 tensor)
+    but its body is not recursed into — in-kernel values live in
+    VMEM/VREGs, which is exactly the distinction the one-pass retrieval
+    kernel exploits (it must measure **zero**).
+
+    Caveat: the trailing-dim match is positional — pick a ``seq_len``
+    that doesn't collide with other model dims (vocab, d_ff) when
+    counting a whole decode step.  ``seq_len == 128`` is rejected
+    outright: the kernels emit lane-padded f32 scalar carries
+    (``[..., LANE=128]`` τ/m/softmax-state outputs) that would be
+    miscounted as score tensors.
+    """
+    assert seq_len != _LANE, (
+        "seq_len == 128 collides with the kernels' lane-padded scalar "
+        "outputs; measure at a different cache length"
+    )
+
+    def shaped_bytes(outvars) -> float:
+        total = 0.0
+        for v in outvars:
+            a = v.aval
+            if (
+                hasattr(a, "shape")
+                and len(a.shape) >= 2
+                and a.shape[-1] == seq_len
+                and str(a.dtype) in FLOAT_DTYPES
+            ):
+                total += np.prod(a.shape) * a.dtype.itemsize
+        return total
+
+    total = 0.0
+    for eqn in jaxpr.eqns:
+        name = eqn.primitive.name
+        if name == "scan":
+            inner = _as_jaxpr(eqn.params["jaxpr"])
+            total += count_score_bytes(inner, seq_len, scale * eqn.params["length"])
+        elif name == "shard_map":
+            inner = _as_jaxpr(eqn.params["jaxpr"])
+            total += count_score_bytes(
+                inner, seq_len, scale * _shard_map_device_count(eqn)
+            )
+        elif name == "pallas_call":
+            total += scale * shaped_bytes(eqn.outvars)
+        else:
+            subs = list(_subjaxprs(eqn))
+            if subs:  # call-like: count inside only (outvars alias inner)
+                for j in subs:
+                    total += count_score_bytes(_as_jaxpr(j), seq_len, scale)
+            else:
+                total += scale * shaped_bytes(eqn.outvars)
+    return total
+
+
+def count_fn_score_bytes(fn, seq_len: int, *args) -> float:
+    """Materialised score-tensor bytes of ``fn(*args)`` at cache length
+    ``seq_len`` (args may be ShapeDtypeStructs)."""
+    closed = jax.make_jaxpr(fn)(*args)
+    return count_score_bytes(closed.jaxpr, seq_len)

@@ -20,8 +20,9 @@ from repro.serving import ContinuousScheduler, Engine, Request
 
 def main():
     cfg = reduced_config("llava-next-mistral-7b")  # mistral-like backbone
-    # fused=True: the serving default — threshold top-k + select-and-attend
-    # kernels, no materialised K'/V' gather (DESIGN.md §Fused decode)
+    # fused=True (+ the default one_pass=True): the serving default —
+    # one-pass retrieval (scores never touch HBM) + select-and-attend,
+    # no materialised K'/V' gather (DESIGN.md §One-pass retrieval)
     pol = PolicyConfig(kind="fier", budget=24, group=8, skip_layers=1,
                        fused=True)
     bundle = build_model(cfg, pol)

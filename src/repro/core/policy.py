@@ -40,6 +40,11 @@ class PolicyConfig:
                              # threshold top-k + in-kernel gather, no
                              # materialised K'/V' copies (serving default
                              # via serving.engine.serving_policy)
+    one_pass: bool = True    # with fused: single-kernel retrieval (score
+                             # scan + group-reduce + mask + threshold
+                             # top-k in one pass — per-token scores never
+                             # touch HBM).  False = two-pass kernel
+                             # pipeline, kept for ablation.
 
     def __post_init__(self):
         if self.kind not in POLICIES:
@@ -124,6 +129,7 @@ def decode_attention(
             q, K, V, meta, cfg.budget, length,
             group_reduce=cfg.group_reduce, sink=cfg.sink, recent=cfg.recent,
             use_kernels=cfg.use_kernels, fused=cfg.fused,
+            one_pass=cfg.one_pass,
         )
     else:
         sparse = quest.quest_attention_decode(

@@ -243,16 +243,21 @@ def fier_attention_decode(
     recent: int = 0,
     use_kernels: bool = False,
     fused: bool = False,
+    one_pass: bool = True,
 ) -> jax.Array:
     """End-to-end FIER decode step (Alg. 1 steps 2–4) for batched GQA.
 
     ``fused=True`` routes through the fused select-and-attend Pallas
-    pipeline (``kernels.ops.fused_fier_attention_decode``): threshold
-    top-k instead of a global sort, and attention that reads the selected
-    rows straight out of the cache slabs — no materialised K'/V' gather.
-    The jnp path below (score → ``select_topk`` → ``gather_kv`` →
-    ``sparse_attention``) stays as the validation oracle the fused path
-    is tested against.
+    pipeline (``kernels.ops.fused_fier_attention_decode``): with
+    ``one_pass=True`` (the serving default) retrieval is a *single*
+    kernel — score scan, GQA group-reduce, masking and exact threshold
+    top-k fused so the per-token score tensors never exist in HBM —
+    followed by attention that reads the selected rows straight out of
+    the cache slabs (no materialised K'/V' gather).  ``one_pass=False``
+    keeps the two-pass kernel pipeline (score tensor materialised between
+    the score and select kernels).  The jnp path below (score →
+    ``select_topk`` → ``gather_kv`` → ``sparse_attention``) stays as the
+    validation oracle the fused paths are tested against.
     """
     if fused:
         from repro.kernels import ops as kops
@@ -260,6 +265,7 @@ def fier_attention_decode(
         return kops.fused_fier_attention_decode(
             q, K, V, qk, budget, length,
             group_reduce=group_reduce, sink=sink, recent=recent,
+            one_pass=one_pass,
         )
     Hkv = K.shape[2]
     if use_kernels:

@@ -3,6 +3,10 @@ Triton group-quantization kernel + CUDA top-k; the TPU adaptation is in
 DESIGN.md §2 and §Fused decode):
 
     fier_score       — packed 1-bit approximate-score scan (decode hot spot)
+    fused_retrieval  — one-pass retrieval: score scan + GQA group-reduce +
+                       masking + exact radix threshold top-k in a single
+                       kernel; the per-token score tensors never touch
+                       HBM (the serving retrieval default)
     topk_select      — threshold top-k on the f32 scores (no global sort)
     sparse_attention — exact decode attention over the selected tokens:
                        unfused (pre-gathered K'/V') and fused

@@ -30,6 +30,47 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 
+def score_block(
+    qbf: jax.Array,
+    codes: jax.Array,
+    scale: jax.Array,
+    zero: jax.Array,
+    *,
+    group: int,
+) -> jax.Array:
+    """Score one seq block of packed codes against a kv head's query group.
+
+    qbf [rep, D] bf16; codes [blk_s/8, D] uint8; scale/zero [blk_s/g, D]
+    → f32 [rep, blk_s].
+
+    bf16 operands, f32 MXU accumulation (±1 and the stored (s, z) are
+    exact in bf16).  Shared by the score-scan kernel and the one-pass
+    fused-retrieval kernel so their per-token scores are *bit-identical*
+    — the one-pass index set is validated exactly against
+    select-over-``fier_score``, which only holds if both paths evaluate
+    the same expression at the same shapes.
+    """
+    n8, D = codes.shape
+    blk_s = n8 * 8
+    # unpack: bit t of byte i is token 8i+t
+    shifts = jax.lax.broadcasted_iota(jnp.uint8, (n8, 8, D), 1)
+    bits = (codes[:, None, :] >> shifts) & jnp.uint8(1)
+    pm1 = bits.reshape(blk_s, D).astype(jnp.bfloat16) * 2.0 - 1.0
+
+    ng = scale.shape[0]
+    scale_b = jnp.broadcast_to(
+        scale.astype(jnp.bfloat16)[:, None, :], (ng, group, D)
+    ).reshape(blk_s, D)
+    zero_b = jnp.broadcast_to(
+        zero.astype(jnp.bfloat16)[:, None, :], (ng, group, D)
+    ).reshape(blk_s, D)
+
+    a = pm1 * scale_b + zero_b           # = dequantized keys, in-register
+    return jax.lax.dot_general(
+        qbf, a, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )
+
+
 def _kernel(q_ref, codes_ref, scale_ref, zero_ref, out_ref, *, group: int):
     """One (batch·kv-head, seq-block) step.
 
@@ -39,28 +80,9 @@ def _kernel(q_ref, codes_ref, scale_ref, zero_ref, out_ref, *, group: int):
     zero_ref:  [blk_s/g, D]   bf16 group zeros
     out_ref:   [rep, blk_s]   f32 scores
     """
-    codes = codes_ref[...]
-    n8, D = codes.shape
-    blk_s = n8 * 8
-    # unpack: bit t of byte i is token 8i+t
-    shifts = jax.lax.broadcasted_iota(jnp.uint8, (n8, 8, D), 1)
-    bits = (codes[:, None, :] >> shifts) & jnp.uint8(1)
-    # bf16 operands, f32 MXU accumulation (±1 and the stored (s, z) are
-    # exact in bf16) — matches the jnp reference's numerics
-    pm1 = bits.reshape(blk_s, D).astype(jnp.bfloat16) * 2.0 - 1.0
-
-    ng = scale_ref.shape[0]
-    scale = jnp.broadcast_to(
-        scale_ref[...].astype(jnp.bfloat16)[:, None, :], (ng, group, D)
-    ).reshape(blk_s, D)
-    zero = jnp.broadcast_to(
-        zero_ref[...].astype(jnp.bfloat16)[:, None, :], (ng, group, D)
-    ).reshape(blk_s, D)
-
-    q = q_ref[...].astype(jnp.bfloat16)  # [rep, D]
-    a = pm1 * scale + zero               # = dequantized keys, in-register
-    out_ref[...] = jax.lax.dot_general(
-        q, a, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    out_ref[...] = score_block(
+        q_ref[...].astype(jnp.bfloat16), codes_ref[...], scale_ref[...],
+        zero_ref[...], group=group,
     )
 
 

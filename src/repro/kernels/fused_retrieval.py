@@ -1,0 +1,291 @@
+"""Pallas TPU kernel: one-pass fused retrieval — the decode selection stage
+with per-token scores that never touch HBM.
+
+The two-pass pipeline (PR 1) still materialises the f32 approximate-score
+tensors in HBM between its kernels: ``fier_score`` writes ``[B, Hq, S]``
+(4·Hq·S bytes), XLA reads it back for the GQA group-reduce and writes
+``[B, Hkv, S]``, and ``topk_select`` reads that again.  At S = 128k this
+round trip (≥ 2·4·Hq·S bytes per layer per step) rivals the packed-code
+read itself — the same recall-side traffic FreeKV (arXiv 2505.13109)
+identifies as the dominant retrieval cost at scale.
+
+This kernel fuses the whole retrieval stage into one ``pallas_call``:
+
+  * the packed 1-bit codes (and the bf16 group scale/zero side-car) are
+    bound with ``memory_space=ANY`` and streamed HBM→VMEM block-by-block
+    with double-buffered async DMA (the next block's three copies are in
+    flight while the current block is scored);
+  * each block is scored in VREGs with the *exact* expression of the
+    score-scan kernel (``fier_score.score_block`` — bit-identical f32
+    scores), group-reduced over the query group (``max``/``sum``) and
+    masked (``length``/``sink``/``recent``) in-register;
+  * the masked block scores are reinterpreted as monotone uint32 keys
+    (``topk_select``'s trick: float order == unsigned order) and drive an
+    exact radix-histogram search for τ, the budget-th largest key —
+    ``NPASS`` = 4 sweeps over the code blocks, each accumulating a
+    256-bucket histogram of the next 8 key bits among the keys matching
+    the prefix found so far;
+  * a final sweep re-scores the blocks and compacts the selected indices
+    { key > τ } ∪ first (budget − m) ties in ascending position order —
+    the same index *set* ``lax.top_k`` returns on the same scores.
+
+Per-token state in HBM: none.  The score tensors simply never exist as
+arrays — each block's scores live in VREGs for the duration of one fold
+step.  The only outputs are the index set ``[BH, budget]`` and the
+(lane-padded) τ/m scalars.
+
+Cost: NPASS + 1 = 5 streaming sweeps over the packed codes.  The codes
+are 1/16 of the bf16 key bytes (Eq. 8), so five sweeps ≈ 0.31× the key
+bytes — still far below the 2·4·Hq·S score-tensor round trip the fusion
+removes (at Hq = 32, D = 128: score round trip ≈ 256·S bytes vs
+5·codes = 80·S bytes per batch row, and the gap widens with Hq).
+
+VMEM per step: 2 double-buffer slots of (codes + scale + zero) block ≈
+2·(blk_s·D/8 + 2·(blk_s/g)·D·2) bytes — 48 KiB at blk_s = 512, D = 128,
+g = 32 — plus the [1, budget] index block.  Grid: (B·Hkv,).
+
+Interpret-mode notes (CPU CI runs the exact kernel code): the index
+compaction uses a bounded ``.at[].set(mode="drop")`` scatter on a
+VREG-resident [budget] vector (never a sort), and the histogram is a
+blockwise one-hot reduction — both stay on-chip on TPU.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.retrieval import NEG_INF
+
+from .fier_score import score_block
+from .topk_select import LANE, _sortable_keys, _unsortable
+
+NPASS = 4    # radix-histogram passes: 8 bits of the uint32 keys per pass
+RADIX = 256  # buckets per pass
+
+
+def _kernel(
+    len_ref, q_ref, codes_hbm, scale_hbm, zero_hbm,
+    idx_ref, tau_ref, m_ref,
+    codes_v, scale_v, zero_v, sems, *,
+    budget: int, group: int, blk_s: int, group_reduce: str,
+    sink: int, recent: int, S: int,
+):
+    """One (batch·kv-head) row of one-pass retrieval.
+
+    len_ref [1] int32 (SMEM); q_ref [rep, D]; codes/scale/zero: whole
+    head-major slabs [BH, S/8|S/g, D] in ANY space (DMA'd blockwise);
+    idx_ref [1, budget] int32; tau_ref [1, LANE] f32; m_ref [1, LANE]
+    int32; codes_v/scale_v/zero_v: [2, ...] double-buffer scratch;
+    sems [2, 3] DMA semaphores (slot × operand).
+    """
+    b = pl.program_id(0)
+    nb = S // blk_s
+    n8 = blk_s // 8
+    ng = blk_s // group
+    length = len_ref[0]
+    qbf = q_ref[...].astype(jnp.bfloat16)
+
+    def block_copies(i, slot):
+        """The three HBM→VMEM copy descriptors for code block i."""
+        return (
+            pltpu.make_async_copy(
+                codes_hbm.at[b, pl.ds(i * n8, n8), :],
+                codes_v.at[slot], sems.at[slot, 0],
+            ),
+            pltpu.make_async_copy(
+                scale_hbm.at[b, pl.ds(i * ng, ng), :],
+                scale_v.at[slot], sems.at[slot, 1],
+            ),
+            pltpu.make_async_copy(
+                zero_hbm.at[b, pl.ds(i * ng, ng), :],
+                zero_v.at[slot], sems.at[slot, 2],
+            ),
+        )
+
+    def start_block(i):
+        for cp in block_copies(i, jax.lax.rem(i, 2)):
+            cp.start()
+
+    def wait_block(i):
+        for cp in block_copies(i, jax.lax.rem(i, 2)):
+            cp.wait()
+
+    def block_keys(i):
+        """Monotone-uint32 keys of block i's masked kv scores: [1, blk_s].
+
+        Scores exist only here, in VREGs, for the duration of one fold.
+        """
+        slot = jax.lax.rem(i, 2)
+        s = score_block(
+            qbf, codes_v[slot], scale_v[slot], zero_v[slot], group=group
+        )                                                   # [rep, blk_s]
+        if group_reduce == "max":
+            kv = s.max(axis=0, keepdims=True)               # [1, blk_s]
+        else:
+            kv = s.sum(axis=0, keepdims=True)
+        pos = i * blk_s + jax.lax.broadcasted_iota(jnp.int32, (1, blk_s), 1)
+        kv = jnp.where(pos < length, kv, NEG_INF)
+        if sink > 0:
+            kv = jnp.where(pos < sink, jnp.inf, kv)
+        if recent > 0:
+            is_recent = (pos >= length - recent) & (pos < length)
+            kv = jnp.where(is_recent, jnp.inf, kv)
+        return _sortable_keys(kv), pos
+
+    def sweep(fold, init):
+        """fold(keys, pos, carry) over all code blocks, next block's DMA
+        in flight while the current block is scored."""
+        start_block(0)
+
+        def body(i, carry):
+            @pl.when(i + 1 < nb)
+            def _prefetch():
+                start_block(i + 1)
+
+            wait_block(i)
+            keys, pos = block_keys(i)
+            return fold(keys, pos, carry)
+
+        return jax.lax.fori_loop(0, nb, body, init)
+
+    # ---- phase 1: radix-histogram search for τ (the budget-th largest key)
+    def radix_pass(p, carry):
+        t, remaining, greater = carry
+        pw = p.astype(jnp.uint32)
+        shift = jnp.uint32(24) - jnp.uint32(8) * pw
+        # participation: keys matching the 8p prefix bits found so far
+        # (p = 0: everyone; the clamp keeps the dead branch's shift < 32)
+        himask = jnp.where(
+            p == 0,
+            jnp.uint32(0),
+            jnp.uint32(0xFFFFFFFF)
+            << jnp.minimum(jnp.uint32(32) - jnp.uint32(8) * pw, jnp.uint32(31)),
+        )
+
+        def fold(keys, pos, hist):
+            part = (keys & himask) == t                     # [1, blk_s]
+            digit = ((keys >> shift) & jnp.uint32(0xFF)).astype(jnp.int32)
+            onehot = (
+                digit[0][:, None]
+                == jax.lax.broadcasted_iota(jnp.int32, (blk_s, RADIX), 1)
+            ) & part[0][:, None]
+            return hist + onehot.astype(jnp.int32).sum(axis=0)[None, :]
+
+        hist = sweep(fold, jnp.zeros((1, RADIX), jnp.int32))
+        ge = jnp.cumsum(hist[:, ::-1], axis=1)[:, ::-1]     # count(digit ≥ j)
+        iota = jax.lax.broadcasted_iota(jnp.int32, (1, RADIX), 1)
+        # τ's digit: the highest bucket where the ≥-count reaches `remaining`
+        jstar = jnp.max(jnp.where(ge >= remaining, iota, -1))
+        above = jnp.sum(jnp.where(iota > jstar, hist, 0))
+        t = t | (jstar.astype(jnp.uint32) << shift)
+        return t, remaining - above, greater + above
+
+    tau_key, _, m = jax.lax.fori_loop(
+        0, NPASS, radix_pass,
+        (jnp.uint32(0), jnp.int32(budget), jnp.int32(0)),
+    )
+    # m = |{ key > τ }| exactly: every strictly-greater key is counted at
+    # the first radix pass where its digit exceeds τ's (it matches the
+    # prefix up to that pass), and never again after it stops matching.
+
+    # ---- phase 2: re-score and compact { key > τ } ∪ first (budget−m) ties
+    def compact_fold(keys, pos, carry):
+        ngt, ntie, out = carry
+        gt = (keys > tau_key)[0]                            # [blk_s]
+        tie = (keys == tau_key)[0]
+        cgt = jnp.cumsum(gt.astype(jnp.int32))
+        ctie = jnp.cumsum(tie.astype(jnp.int32))
+        take_tie = tie & (ntie + ctie <= budget - m)
+        dest = jnp.where(
+            gt, ngt + cgt - 1,
+            jnp.where(take_tie, m + ntie + ctie - 1, budget),
+        )
+        # bounded scatter by rank: >τ fill [0, m) in ascending position,
+        # taken ties fill [m, budget); dest == budget is dropped
+        out = out.at[dest].set(pos[0], mode="drop")
+        return ngt + cgt[-1], ntie + ctie[-1], out
+
+    _, _, out = sweep(
+        compact_fold,
+        (jnp.int32(0), jnp.int32(0), jnp.zeros((budget,), jnp.int32)),
+    )
+    idx_ref[...] = out[None, :]
+    tau_ref[...] = jnp.full(tau_ref.shape, _unsortable(tau_key), jnp.float32)
+    m_ref[...] = jnp.full(m_ref.shape, m, jnp.int32)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "budget", "group", "blk_s", "group_reduce", "sink", "recent",
+        "interpret",
+    ),
+)
+def fused_retrieve_hm(
+    q: jax.Array,
+    codes: jax.Array,
+    scale: jax.Array,
+    zero: jax.Array,
+    lengths: jax.Array,
+    budget: int,
+    *,
+    group: int,
+    blk_s: int = 512,
+    group_reduce: str = "max",
+    sink: int = 0,
+    recent: int = 0,
+    interpret: bool = True,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Head-major one-pass retrieval.
+
+    q [BH, rep, D]; codes [BH, S/8, D] uint8; scale/zero [BH, S/g, D];
+    lengths [BH] int32 → (idx int32 [BH, budget], tau f32 [BH],
+    m int32 [BH]).  The index *set* equals ``lax.top_k`` over the masked,
+    group-reduced ``fier_score`` scores; tau is the budget-th largest
+    masked score and m the strictly-greater count.
+    """
+    BH, rep, D = q.shape
+    S = codes.shape[1] * 8
+    assert 0 < budget <= S, (budget, S)
+    if group_reduce not in ("max", "sum"):
+        raise ValueError(f"unknown group reduction {group_reduce!r}")
+    blk = min(blk_s, S)
+    while S % blk:
+        blk //= 2
+    assert blk % 8 == 0 and blk % group == 0, (blk, group)
+    idx, tau, m = pl.pallas_call(
+        functools.partial(
+            _kernel, budget=budget, group=group, blk_s=blk,
+            group_reduce=group_reduce, sink=sink, recent=recent, S=S,
+        ),
+        grid=(BH,),
+        in_specs=[
+            pl.BlockSpec((None, 1), lambda b: (b, 0), memory_space=pltpu.SMEM),
+            pl.BlockSpec((None, rep, D), lambda b: (b, 0, 0)),
+            pl.BlockSpec(memory_space=pltpu.ANY),
+            pl.BlockSpec(memory_space=pltpu.ANY),
+            pl.BlockSpec(memory_space=pltpu.ANY),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, budget), lambda b: (b, 0)),
+            pl.BlockSpec((1, LANE), lambda b: (b, 0)),
+            pl.BlockSpec((1, LANE), lambda b: (b, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((BH, budget), jnp.int32),
+            jax.ShapeDtypeStruct((BH, LANE), jnp.float32),
+            jax.ShapeDtypeStruct((BH, LANE), jnp.int32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((2, blk // 8, D), jnp.uint8),
+            pltpu.VMEM((2, blk // group, D), scale.dtype),
+            pltpu.VMEM((2, blk // group, D), zero.dtype),
+            pltpu.SemaphoreType.DMA((2, 3)),
+        ],
+        interpret=interpret,
+    )(lengths[:, None], q, codes, scale, zero)
+    return idx, tau[:, 0], m[:, 0]

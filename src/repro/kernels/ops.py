@@ -18,6 +18,7 @@ from repro.core.quantize import QuantizedKeys
 from repro.core.retrieval import NEG_INF
 
 from . import fier_score as _fs
+from . import fused_retrieval as _fr
 from . import pack_quantize as _pq
 from . import sparse_attention as _sa
 from . import topk_select as _tk
@@ -149,6 +150,54 @@ def fused_sparse_attention(
     return out.reshape(B, Hq, D).astype(q.dtype)
 
 
+def fused_retrieve(
+    q: jax.Array,
+    qk: QuantizedKeys,
+    budget: int,
+    length: jax.Array | None = None,
+    *,
+    group_reduce: str = "max",
+    sink: int = 0,
+    recent: int = 0,
+    blk_s: int = 512,
+    return_stats: bool = False,
+):
+    """One-pass retrieval: packed codes → top-``budget`` indices, with the
+    per-token scores never materialised in HBM.
+
+    q [B,Hq,D], qk seq-major → idx int32 [B,Hkv,budget] (same index set
+    as ``select_topk`` over the masked, group-reduced ``fier_score``
+    scores).  One Pallas kernel streams the codes, scores each block in
+    VREGs, group-reduces and masks in-register, radix-searches τ and
+    compacts — neither the [B,Hq,S] nor the [B,Hkv,S] score tensor ever
+    exists as an array.  ``return_stats=True`` additionally returns
+    (tau f32 [B,Hkv], m int32 [B,Hkv]) — the budget-th score and the
+    strictly-greater count per row.
+    """
+    B, Hq, D = q.shape
+    Hkv = qk.codes.shape[2]
+    rep = Hq // Hkv
+    S = qk.seq_len
+    qhm = q.reshape(B, Hkv, rep, D).reshape(B * Hkv, rep, D)
+    to_hm = lambda a: jnp.moveaxis(a, 2, 1).reshape(B * Hkv, a.shape[1], D)
+    if length is None:
+        lens = jnp.full((B * Hkv,), S, jnp.int32)
+        recent = 0  # masked_scores applies `recent` only with a length
+    else:
+        lens = jnp.broadcast_to(
+            length.astype(jnp.int32)[:, None], (B, Hkv)
+        ).reshape(B * Hkv)
+    idx, tau, m = _fr.fused_retrieve_hm(
+        qhm, to_hm(qk.codes), to_hm(qk.scale), to_hm(qk.zero), lens, budget,
+        group=qk.group, blk_s=blk_s, group_reduce=group_reduce,
+        sink=sink, recent=recent, interpret=_interpret(),
+    )
+    idx = idx.reshape(B, Hkv, budget)
+    if return_stats:
+        return idx, tau.reshape(B, Hkv), m.reshape(B, Hkv)
+    return idx
+
+
 def fier_attention_decode(
     q: jax.Array,
     K: jax.Array,
@@ -183,14 +232,28 @@ def fused_fier_attention_decode(
     sink: int = 0,
     recent: int = 0,
     blk_k: int = 1024,
+    one_pass: bool = True,
 ) -> jax.Array:
-    """Fully fused FIER decode step: Pallas score scan → threshold top-k
-    (no sort) → select-and-attend (no materialised K'/V' gather).  The
-    serving decode fast path."""
-    from repro.core import retrieval
+    """Fully fused FIER decode step — the serving decode fast path.
 
-    Hkv = K.shape[2]
-    scores = fier_score(q, qk)
-    kv_scores = retrieval.reduce_over_query_group(scores, Hkv, group_reduce)
-    idx = topk_select(kv_scores, budget, length, sink=sink, recent=recent)
+    ``one_pass=True`` (default): single-kernel retrieval
+    (``fused_retrieve``: scores never in HBM) → fused select-and-attend.
+    ``one_pass=False``: the two-pass pipeline (score-scan kernel →
+    threshold top-k kernel, f32 score tensors materialised between them),
+    kept for ablation and the byte-accounting benchmarks.  Both return
+    bit-identical attention outputs: they select the same index set from
+    the same (bit-identical) scores and feed the same attend kernel.
+    """
+    if one_pass:
+        idx = fused_retrieve(
+            q, qk, budget, length,
+            group_reduce=group_reduce, sink=sink, recent=recent,
+        )
+    else:
+        from repro.core import retrieval
+
+        Hkv = K.shape[2]
+        scores = fier_score(q, qk)
+        kv_scores = retrieval.reduce_over_query_group(scores, Hkv, group_reduce)
+        idx = topk_select(kv_scores, budget, length, sink=sink, recent=recent)
     return fused_sparse_attention(q, K, V, idx, length, blk_k=blk_k)

@@ -49,6 +49,28 @@ def topk_select(
     )
 
 
+def fused_retrieve(
+    q: jax.Array,
+    qk: qz.QuantizedKeys,
+    budget: int,
+    length: jax.Array | None = None,
+    *,
+    group_reduce: str = "max",
+    sink: int = 0,
+    recent: int = 0,
+) -> jax.Array:
+    """Oracle for the one-pass retrieval kernel: the fully-materialised
+    jnp pipeline ``approx_scores → reduce_over_query_group → select_topk``
+    (every intermediate score tensor written out, global lax.top_k sort).
+    The kernel must return the same index *set* up to score-scan rounding;
+    the *exact*-set contract is against select-over-``ops.fier_score``
+    (bit-identical scores — see fier_score.score_block)."""
+    Hkv = qk.codes.shape[2]
+    s = retrieval.approx_scores(q, qk)
+    kv = retrieval.reduce_over_query_group(s, Hkv, group_reduce)
+    return retrieval.select_topk(kv, budget, length, sink=sink, recent=recent)
+
+
 def fused_sparse_attention(
     q: jax.Array,
     K: jax.Array,

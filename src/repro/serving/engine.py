@@ -4,9 +4,11 @@ slot-based continuous batching support.
 The decode step is the FIER fast path: policy-dispatched attention over
 the cache slabs (optionally sequence-sharded across the mesh).  The
 *default* serving policy (``serving_policy`` / ``Engine.build``) is the
-fused select-and-attend pipeline: Pallas 1-bit score scan → threshold
-top-k (no global sort) → in-kernel row gather + attention (no
-materialised K'/V' copies) — see DESIGN.md §Fused decode.
+one-pass fused pipeline: a single Pallas retrieval kernel (1-bit score
+scan + GQA group-reduce + masking + exact radix threshold top-k — the
+per-token score tensors never touch HBM) chained into in-kernel row
+gather + attention (no materialised K'/V' copies) — see DESIGN.md
+§One-pass retrieval and §Fused decode.
 
 Slot insertion runs a B=1 prefill and scatters the resulting cache into
 the batched cache; the batch axis of every cache leaf is discovered
@@ -34,14 +36,19 @@ def serving_policy(
     sink: int = 4,
     recent: int = 64,
     fused: bool = True,
+    one_pass: bool = True,
 ) -> PolicyConfig:
-    """The serving-default FIER policy: fused decode fast path on, the
-    standard sink/recent guard-rails for generation quality.  Pass
-    ``fused=False`` to fall back to the unfused top-k + gather pipeline
+    """The serving-default FIER policy: one-pass fused retrieval (score
+    scan + group-reduce + mask + exact threshold top-k in a single
+    kernel — per-token scores never touch HBM) chained into the fused
+    select-and-attend kernel, with the standard sink/recent guard-rails
+    for generation quality.  ``one_pass=False`` keeps the two-pass kernel
+    retrieval (score tensor materialised between kernels);
+    ``fused=False`` falls back to the unfused top-k + gather pipeline
     (the validation oracle)."""
     return PolicyConfig(
         kind="fier", budget=budget, group=group, skip_layers=skip_layers,
-        sink=sink, recent=recent, fused=fused,
+        sink=sink, recent=recent, fused=fused, one_pass=one_pass,
     )
 
 
@@ -86,11 +93,15 @@ class Engine:
         capacity: int,
         sampling: SamplingConfig = SamplingConfig(),
         donate_cache: bool = True,
+        seed: int = 0,
     ):
         self.bundle = bundle
         self.n_slots = n_slots
         self.capacity = capacity
         self.sampling = sampling
+        # fallback sampling rng: split per decode call so stochastic
+        # sampling never reuses a key (callers may still pass rng=...)
+        self._rng = jax.random.PRNGKey(seed)
         self._batch_axes = _cache_batch_axes(bundle, capacity)
         self._prefill = jax.jit(partial(bundle.prefill, capacity=capacity))
         donate = (2,) if donate_cache else ()
@@ -160,6 +171,10 @@ class Engine:
         """One decode step for all slots; inactive slots don't advance.
 
         tokens [n_slots] int32 → (next_tokens [n_slots], logits, cache).
+        When ``rng`` is omitted, a fresh key is split off the engine's
+        internal rng — every call samples with a distinct key (the old
+        behaviour re-used ``PRNGKey(0)`` each step, so temperature > 0
+        serving resampled the same draw forever).
         """
         if active is not None:
             # inactive slots' lengths are frozen inside the jitted step
@@ -167,7 +182,8 @@ class Engine:
             logits, new_cache = self._decode_active(params, tokens, cache, active)
         else:
             logits, new_cache = self._decode(params, tokens, cache)
-        rng = rng if rng is not None else jax.random.PRNGKey(0)
+        if rng is None:
+            self._rng, rng = jax.random.split(self._rng)
         nxt = sample_token(rng, logits, self.sampling)
         return nxt, logits, new_cache
 
@@ -177,8 +193,11 @@ class Engine:
         extras=None, rng=None,
     ):
         """Static-batch generate: prefill the whole batch then decode
-        ``max_new`` tokens.  prompts [B, S]; returns tokens [B, max_new]."""
-        rng = rng if rng is not None else jax.random.PRNGKey(0)
+        ``max_new`` tokens.  prompts [B, S]; returns tokens [B, max_new].
+        Without an explicit ``rng``, each call draws a fresh key off the
+        engine rng (same contract as ``decode``)."""
+        if rng is None:
+            self._rng, rng = jax.random.split(self._rng)
         batch = {"tokens": prompts, "lengths": lengths}
         if extras:
             batch.update(extras)

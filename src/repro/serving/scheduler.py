@@ -10,6 +10,7 @@ is reused here.
 from __future__ import annotations
 
 import dataclasses
+from collections import deque
 from typing import Sequence
 
 import jax
@@ -28,7 +29,13 @@ class Request:
 
 
 class ContinuousScheduler:
-    def __init__(self, engine, params, pad_prompt_to: int | None = None):
+    def __init__(
+        self,
+        engine,
+        params,
+        pad_prompt_to: int | None = None,
+        rng: jax.Array | None = None,
+    ):
         self.engine = engine
         self.params = params
         self.pad = pad_prompt_to
@@ -36,11 +43,14 @@ class ContinuousScheduler:
         self.running: dict[int, Request] = {}   # slot → request
         self.steps = 0
         self.occupancy: list[int] = []
+        # sampling rng, split once per decode step: consecutive steps of a
+        # temperature > 0 deployment draw from distinct keys
+        self._rng = rng if rng is not None else jax.random.PRNGKey(0)
 
-    def _admit(self, queue: list[Request], cache, cur_tokens):
+    def _admit(self, queue: deque[Request], cache, cur_tokens):
         while queue and self.free:
             slot = self.free.pop()
-            req = queue.pop(0)
+            req = queue.popleft()
             toks = np.asarray(req.tokens, np.int32)
             S = self.pad or len(toks)
             S = max(S, len(toks))
@@ -62,7 +72,9 @@ class ContinuousScheduler:
         return cache
 
     def run(self, requests: Sequence[Request]) -> dict[int, list[int]]:
-        queue = list(requests)
+        # deque: _admit pops FIFO from the head — list.pop(0) was O(n) per
+        # admit, O(n²) across a burst of queued requests
+        queue = deque(requests)
         cache = self.engine.new_cache()
         cur = np.zeros((self.engine.n_slots,), np.int32)
         cache = self._admit(queue, cache, cur)
@@ -70,8 +82,10 @@ class ContinuousScheduler:
             active_np = np.zeros((self.engine.n_slots,), bool)
             for s in self.running:
                 active_np[s] = True
+            self._rng, step_rng = jax.random.split(self._rng)
             nxt, _, cache = self.engine.decode(
-                self.params, jnp.asarray(cur), cache, active=jnp.asarray(active_np)
+                self.params, jnp.asarray(cur), cache,
+                active=jnp.asarray(active_np), rng=step_rng,
             )
             nxt = np.asarray(nxt)
             self.steps += 1

@@ -7,7 +7,10 @@ import pytest
 
 import sys, os
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "benchmarks"))
-from flopcount import count_fn_flops, xla_cost_flops  # noqa: E402
+from flopcount import (  # noqa: E402
+    count_fn_flops, count_fn_gather_bytes, count_fn_score_bytes,
+    xla_cost_flops,
+)
 
 _xla_flops = xla_cost_flops
 
@@ -76,6 +79,58 @@ def test_remat_recompute_counted():
         jax.grad(lambda x, w: jax.checkpoint(block)(x, w).sum(), argnums=1), x, w
     )
     assert rematted >= plain  # recompute adds flops
+
+
+def test_score_bytes_counts_trailing_seq_tensors():
+    """Every materialised float tensor with trailing dim S counts once;
+    scan bodies multiply; non-S-trailing tensors don't count."""
+    S = 320
+
+    def f(q, K):
+        s = jnp.einsum("hd,sd->hs", q, K)      # [4, S] f32 → 4·4·S bytes
+        m = s * 2.0                             # another 4·4·S
+        return m.max(axis=0)                    # [S] — ndim 1, not counted
+
+    q = jax.ShapeDtypeStruct((4, 16), jnp.float32)
+    K = jax.ShapeDtypeStruct((S, 16), jnp.float32)
+    assert count_fn_score_bytes(f, S, q, K) == 2 * 4 * 4 * S
+    # a different seq_len matches nothing
+    assert count_fn_score_bytes(f, S + 1, q, K) == 0
+
+    def scanned(q, Ks):
+        return jax.lax.scan(lambda c, K: (c, f(q, K)), None, Ks)[1]
+
+    Ks = jax.ShapeDtypeStruct((3, S, 16), jnp.float32)
+    assert count_fn_score_bytes(scanned, S, q, Ks) == 3 * 2 * 4 * 4 * S
+
+
+def test_score_bytes_pallas_leaf():
+    """pallas_call outputs count (HBM); its body is never recursed into —
+    in-kernel VMEM blocks must not be mistaken for materialised tensors."""
+    from repro.core import quantize as qz
+    from repro.kernels import ops as kops
+
+    B, S, Hkv, Hq, D, g = 1, 256, 2, 4, 32, 8
+    K = jax.random.normal(jax.random.PRNGKey(0), (B, S, Hkv, D))
+    q = jax.random.normal(jax.random.PRNGKey(1), (B, Hq, D))
+    qk = qz.quantize(K, g)
+    # two-pass score kernel materialises [B·Hkv, rep, S] f32 (+ reshape)
+    two = count_fn_score_bytes(lambda q: kops.fier_score(q, qk), S, q)
+    assert two >= 4 * Hq * S, two
+    # one-pass retrieval: scores stay in VREGs — exactly zero
+    length = jnp.full((B,), S, jnp.int32)
+    one = count_fn_score_bytes(
+        lambda q: kops.fused_retrieve(q, qk, 32, length), S, q
+    )
+    assert one == 0.0, one
+    # and zero gather bytes end-to-end through the one-pass decode
+    V = jax.random.normal(jax.random.PRNGKey(2), (B, S, Hkv, D), jnp.bfloat16)
+    Kb = K.astype(jnp.bfloat16)
+    gb = count_fn_gather_bytes(
+        lambda q: kops.fused_fier_attention_decode(q, Kb, V, qk, 32, length),
+        q,
+    )
+    assert gb == 0.0, gb
 
 
 def test_transformer_layer_vs_xla_unrolled():

@@ -174,3 +174,181 @@ def test_fused_policy_dispatch_matches_unfused():
             decode_attention(q, K, V, meta, cfg, length, layer=1), np.float32
         )
     np.testing.assert_allclose(outs[True], outs[False], rtol=5e-2, atol=5e-2)
+
+
+# ------------------------------------------------------ one-pass retrieval
+
+def _kernel_score_oracle(q, qk, Hkv, budget, length, *, group_reduce="max",
+                         sink=0, recent=0):
+    """select_topk over the *kernel's own* scores (ops.fier_score is
+    bit-identical to the in-kernel scorer — shared score_block), the
+    exact-index-set contract of the one-pass kernel."""
+    kv = rt.reduce_over_query_group(ops.fier_score(q, qk), Hkv, group_reduce)
+    return rt.select_topk(kv, budget, length, sink=sink, recent=recent)
+
+
+@pytest.mark.parametrize("B,S,Hkv,Hq,D,g", SHAPES)
+@pytest.mark.parametrize("group_reduce", ["max", "sum"])
+def test_fused_retrieve_exact_index_set(B, S, Hkv, Hq, D, g, group_reduce):
+    """One-pass retrieval must return exactly the lax.top_k index set over
+    the masked, group-reduced kernel scores — budget==S, sink/recent
+    overrides and NEG_INF length-padding ties included."""
+    q, K, V = _inputs(B, S, Hkv, Hq, D, seed=10)
+    qk = ref.pack_quantize(K, g)
+    length = jnp.full((B,), max(S // 2, 16), jnp.int32)
+    for budget, sink, recent in [(min(64, S), 0, 0), (min(32, S), 4, 8), (S, 0, 0)]:
+        got = np.asarray(ops.fused_retrieve(
+            q, qk, budget, length, group_reduce=group_reduce,
+            sink=sink, recent=recent,
+        ))
+        want = np.asarray(_kernel_score_oracle(
+            q, qk, Hkv, budget, length, group_reduce=group_reduce,
+            sink=sink, recent=recent,
+        ))
+        np.testing.assert_array_equal(np.sort(got, -1), np.sort(want, -1))
+
+
+@pytest.mark.parametrize("B,S,Hkv,Hq,D,g", SHAPES)
+def test_fused_retrieve_matches_jnp_oracle(B, S, Hkv, Hq, D, g):
+    """And the ref.py oracle (fully materialised jnp pipeline) agrees on
+    random inputs: approx_scores is built to round identically."""
+    q, K, V = _inputs(B, S, Hkv, Hq, D, seed=11)
+    qk = ref.pack_quantize(K, g)
+    length = jnp.full((B,), S - 5, jnp.int32)
+    budget = min(48, S)
+    got = np.asarray(ops.fused_retrieve(q, qk, budget, length))
+    want = np.asarray(ref.fused_retrieve(q, qk, budget, length))
+    np.testing.assert_array_equal(np.sort(got, -1), np.sort(want, -1))
+
+
+def test_fused_retrieve_adversarial_ties():
+    """Duplicate-score ties straddling τ: K built from a handful of
+    repeated prototype tokens → exactly tied scores, with the budget
+    cutting through a tie class.  The index set (first ties in ascending
+    position, lax.top_k's convention) must still match exactly."""
+    B, Hkv, Hq, D, g = 2, 2, 4, 32, 8
+    protos = jax.random.normal(jax.random.PRNGKey(12), (4, Hkv, D))
+    S = 128
+    K = jnp.tile(protos, (S // 4, 1, 1))[None].repeat(B, 0)  # [B,S,Hkv,D]
+    q, _, _ = _inputs(B, S, Hkv, Hq, D, seed=13)
+    qk = ref.pack_quantize(K, g)
+    length = jnp.full((B,), S, jnp.int32)
+    for budget in (3, 7, 32, 50, S):  # cut inside every tie class size
+        got = np.asarray(ops.fused_retrieve(q, qk, budget, length))
+        want = np.asarray(_kernel_score_oracle(q, qk, Hkv, budget, length))
+        want2 = np.asarray(ref.fused_retrieve(q, qk, budget, length))
+        np.testing.assert_array_equal(np.sort(got, -1), np.sort(want, -1))
+        np.testing.assert_array_equal(np.sort(got, -1), np.sort(want2, -1))
+
+
+def test_fused_retrieve_all_tied_scores():
+    """q = 0 → every score is the per-group constant 0·z = 0: the whole
+    row ties and the kernel must pick the first `budget` positions."""
+    B, S, Hkv, Hq, D, g = 1, 96, 1, 2, 16, 8
+    _, K, _ = _inputs(B, S, Hkv, Hq, D, seed=14)
+    q = jnp.zeros((B, Hq, D))
+    qk = ref.pack_quantize(K, g)
+    got = np.asarray(ops.fused_retrieve(q, qk, 24, jnp.full((B,), S, jnp.int32)))
+    np.testing.assert_array_equal(np.sort(got, -1)[0, 0], np.arange(24))
+
+
+def test_fused_retrieve_budget_exceeds_length():
+    """budget > valid length: NEG_INF padding participates in selection
+    (tie class at the floor) exactly as in the oracle."""
+    B, S, Hkv, Hq, D, g = 2, 128, 2, 4, 32, 16
+    q, K, V = _inputs(B, S, Hkv, Hq, D, seed=15)
+    qk = ref.pack_quantize(K, g)
+    length = jnp.array([40, 96], jnp.int32)
+    got = np.asarray(ops.fused_retrieve(q, qk, 64, length))
+    want = np.asarray(_kernel_score_oracle(q, qk, Hkv, 64, length))
+    np.testing.assert_array_equal(np.sort(got, -1), np.sort(want, -1))
+
+
+def test_fused_retrieve_sink_recent_overlap():
+    """sink ∪ recent covering (and overlapping within) a short valid
+    prefix: a +inf tie class larger than the distinct-score region."""
+    B, S, Hkv, Hq, D, g = 1, 128, 2, 4, 32, 8
+    q, K, V = _inputs(B, S, Hkv, Hq, D, seed=16)
+    qk = ref.pack_quantize(K, g)
+    length = jnp.array([20], jnp.int32)
+    for budget, sink, recent in [(16, 8, 16), (20, 8, 16), (64, 12, 12)]:
+        got = np.asarray(ops.fused_retrieve(
+            q, qk, budget, length, sink=sink, recent=recent
+        ))
+        want = np.asarray(_kernel_score_oracle(
+            q, qk, Hkv, budget, length, sink=sink, recent=recent
+        ))
+        np.testing.assert_array_equal(np.sort(got, -1), np.sort(want, -1))
+
+
+def test_fused_retrieve_stats_and_no_length():
+    """return_stats: τ is the budget-th largest masked score and m the
+    strictly-greater count; length=None selects over the whole row."""
+    B, S, Hkv, Hq, D, g = 2, 256, 2, 4, 64, 32
+    q, K, V = _inputs(B, S, Hkv, Hq, D, seed=17)
+    qk = ref.pack_quantize(K, g)
+    budget = 32
+    idx, tau, m = ops.fused_retrieve(q, qk, budget, return_stats=True)
+    kv = np.asarray(rt.reduce_over_query_group(ops.fier_score(q, qk), Hkv))
+    srt = np.sort(kv, axis=-1)[:, :, ::-1]
+    np.testing.assert_array_equal(np.asarray(tau), srt[:, :, budget - 1])
+    np.testing.assert_array_equal(
+        np.asarray(m), (kv > np.asarray(tau)[:, :, None]).sum(-1)
+    )
+    want = np.asarray(rt.select_topk(jnp.asarray(kv), budget))
+    np.testing.assert_array_equal(
+        np.sort(np.asarray(idx), -1), np.sort(want, -1)
+    )
+
+
+@pytest.mark.parametrize("B,S,Hkv,Hq,D,g", SHAPES)
+def test_onepass_attention_bit_identical(B, S, Hkv, Hq, D, g):
+    """Acceptance: the one-pass decode returns *bit-identical* attention
+    outputs to the two-pass fused pipeline (same scores → same index set
+    in the same compaction order → same attend kernel)."""
+    q, K, V = _inputs(B, S, Hkv, Hq, D, seed=18)
+    qk = ref.pack_quantize(K, g)
+    length = jnp.full((B,), S - 3, jnp.int32)
+    budget = min(64, S)
+    one = np.asarray(ops.fused_fier_attention_decode(
+        q, K, V, qk, budget, length, one_pass=True
+    ))
+    two = np.asarray(ops.fused_fier_attention_decode(
+        q, K, V, qk, budget, length, one_pass=False
+    ))
+    np.testing.assert_array_equal(one, two)
+
+
+def test_onepass_pipeline_matches_jnp_oracle():
+    """End-to-end one-pass decode vs the jnp oracle pipeline (tolerance:
+    attend numerics differ kernel-vs-ref)."""
+    B, S, Hkv, Hq, D, g = 2, 256, 2, 4, 64, 32
+    q, K, V = _inputs(B, S, Hkv, Hq, D, seed=19)
+    qk = ref.pack_quantize(K, g)
+    length = jnp.full((B,), S - 3, jnp.int32)
+    got = np.asarray(ops.fused_fier_attention_decode(
+        q, K, V, qk, 64, length
+    ), np.float32)
+    want = np.asarray(rt.fier_attention_decode(
+        q, K, V, qk, 64, length
+    ), np.float32)
+    np.testing.assert_allclose(got, want, rtol=5e-2, atol=5e-2)
+
+
+def test_onepass_policy_dispatch():
+    """PolicyConfig(fused=True, one_pass=True) — the serving default —
+    dispatches through decode_attention and matches the two-pass fused
+    policy path bitwise."""
+    from repro.core.policy import PolicyConfig, build_metadata, decode_attention
+
+    q, K, V = _inputs(2, 256, 2, 4, 64, seed=20)
+    length = jnp.array([256, 200], jnp.int32)
+    outs = {}
+    for one_pass in (False, True):
+        cfg = PolicyConfig(kind="fier", budget=64, group=32, skip_layers=0,
+                           fused=True, one_pass=one_pass)
+        meta = build_metadata(K, cfg)
+        outs[one_pass] = np.asarray(
+            decode_attention(q, K, V, meta, cfg, length, layer=1), np.float32
+        )
+    np.testing.assert_array_equal(outs[True], outs[False])

@@ -93,6 +93,39 @@ def test_margin_preservation(shape, seed):
                 assert top in top_a
 
 
+GQA_SHAPE = st.tuples(
+    st.integers(1, 3),                      # B
+    st.sampled_from([32, 64, 128]),         # S
+    st.integers(1, 3),                      # Hkv
+    st.integers(1, 4),                      # rep (Hq = Hkv · rep)
+    st.sampled_from([8, 16, 32]),           # D
+    st.sampled_from([8, 16, 32]),           # g
+).filter(lambda t: t[1] % t[5] == 0)
+
+
+@settings(max_examples=20, deadline=None)
+@given(GQA_SHAPE, st.integers(0, 2**31 - 1), st.integers(1, 64),
+       st.sampled_from(["max", "sum"]))
+def test_onepass_retrieval_exact_index_set_property(shape, seed, budget, mode):
+    """∀ GQA shapes, seeds, budgets, reductions: the one-pass retrieval
+    kernel returns exactly the lax.top_k index set over the masked,
+    group-reduced kernel scores (scores it never materialises)."""
+    from repro.kernels import ops
+
+    B, S, Hkv, rep, D, g = shape
+    Hq = Hkv * rep
+    budget = min(budget, S)
+    K = _keys(seed, B, S, Hkv, D)
+    q = jax.random.normal(jax.random.PRNGKey(seed ^ 3), (B, Hq, D))
+    qk = qz.quantize(K, g)
+    length = jnp.full((B,), max(S // 2, g), jnp.int32)
+    got = np.asarray(ops.fused_retrieve(q, qk, budget, length,
+                                        group_reduce=mode))
+    kv = rt.reduce_over_query_group(ops.fier_score(q, qk), Hkv, mode)
+    want = np.asarray(rt.select_topk(kv, budget, length))
+    np.testing.assert_array_equal(np.sort(got, -1), np.sort(want, -1))
+
+
 @settings(max_examples=10, deadline=None)
 @given(st.integers(0, 2**31 - 1))
 def test_flash_attention_matches_oracle_property(seed):
