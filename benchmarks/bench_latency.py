@@ -32,8 +32,8 @@ import numpy as np
 from repro.core.quantize import packed_nbytes
 
 from .common import (
-    bench_model_cfg, emit, emit_score_traffic, policy_bundle, timeit,
-    train_tiny_lm,
+    bench_model_cfg, emit, emit_paged_score_traffic, emit_score_traffic,
+    policy_bundle, timeit, train_tiny_lm,
 )
 from .flopcount import count_fn_gather_bytes
 
@@ -112,12 +112,20 @@ def smoke():
     """Fast CI gate (`--smoke`): assert the one-pass retrieval path
     materialises zero score-tensor bytes (and the two-pass path pays the
     full ≥ 2·4·Hq·S round trip) at a tiny config — the perf property is
-    *gated*, not just benchmarked.  No model training involved."""
+    *gated*, not just benchmarked.  No model training involved.
+
+    The paged step asserts the same contract for the page-table-aware
+    one-pass pipeline: walking the block table in-kernel must not
+    reintroduce any score-tensor (or logical-slab) HBM traffic."""
     cfg = bench_model_cfg()
     sb = emit_score_traffic(cfg.n_heads, cfg.n_kv_heads, cfg.d_head,
                             budget=32, B=1, S=256, check=True)
+    psb = emit_paged_score_traffic(cfg.n_heads, cfg.n_kv_heads, cfg.d_head,
+                                   budget=32, B=1, S=256, block_size=32,
+                                   check=True)
     emit("bench_smoke_ok", 0.0,
-         f"one_pass=0 two_pass={sb['two_pass']:.0f} unfused={sb['unfused']:.0f}")
+         f"one_pass=0 paged_one_pass={psb:.0f} "
+         f"two_pass={sb['two_pass']:.0f} unfused={sb['unfused']:.0f}")
 
 
 def main():

@@ -132,6 +132,64 @@ def emit_score_traffic(Hq: int, Hkv: int, D: int, *, budget: int, B: int,
     return sb
 
 
+def paged_score_traffic_bytes(Hq: int, Hkv: int, D: int, *, budget: int,
+                              B: int, S: int, block_size: int,
+                              group: int = 8, seed: int = 0) -> float:
+    """Materialised score-tensor bytes of the *paged* one-pass decode op
+    (paged retrieval + paged select-and-attend over a block pool).  Must
+    be exactly zero — the page-table walk happens in-kernel, so paging
+    the cache must not reintroduce any score (or logical-slab) HBM
+    round trip."""
+    from repro.core import quantize as qz
+    from repro.kernels import ops as kops
+
+    from .flopcount import count_fn_score_bytes
+
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    Kc = jax.random.normal(ks[0], (B, S, Hkv, D), jnp.bfloat16)
+    Vc = jax.random.normal(ks[1], (B, S, Hkv, D), jnp.bfloat16)
+    q = jax.random.normal(ks[2], (B, Hq, D))
+    qk = qz.quantize(Kc.astype(jnp.float32), group)
+    nb = S // block_size
+    N = B * nb + 1
+
+    def to_pool(arr):
+        pb = arr.shape[1] // nb
+        pool = jnp.zeros((N, pb, *arr.shape[2:]), arr.dtype)
+        blocks = arr.reshape(B, nb, pb, *arr.shape[2:])
+        return pool.at[1:].set(blocks.reshape(B * nb, pb, *arr.shape[2:]))
+
+    table = jnp.arange(1, B * nb + 1, dtype=jnp.int32).reshape(B, nb)
+    k_pool, v_pool = to_pool(Kc), to_pool(Vc)
+    meta = qz.QuantizedKeys(
+        to_pool(qk.codes), to_pool(qk.scale), to_pool(qk.zero), group
+    )
+    length = jnp.full((B,), S, jnp.int32)
+    return count_fn_score_bytes(
+        lambda q, kp, vp: kops.paged_fused_fier_attention_decode(
+            q, kp, vp, meta, table, budget, length
+        ),
+        S, q, k_pool, v_pool,
+    )
+
+
+def emit_paged_score_traffic(Hq: int, Hkv: int, D: int, *, budget: int,
+                             B: int, S: int, block_size: int, group: int = 8,
+                             check: bool = False) -> float:
+    """Emit (and with ``check=True`` assert) the paged one-pass score-byte
+    contract: exactly zero materialised score bytes."""
+    sb = paged_score_traffic_bytes(
+        Hq, Hkv, D, budget=budget, B=B, S=S, block_size=block_size, group=group
+    )
+    emit(
+        f"retrieval_score_bytes_paged_ctx{S}", 0.0,
+        f"paged_one_pass={sb:.0f} block_size={block_size}",
+    )
+    if check:
+        assert sb == 0.0, sb
+    return sb
+
+
 def timeit(fn, *args, reps: int = 5, warmup: int = 2) -> float:
     """Median wall-time per call in µs (after jit warmup)."""
     for _ in range(warmup):

@@ -45,10 +45,23 @@ class PolicyConfig:
                              # top-k in one pass — per-token scores never
                              # touch HBM).  False = two-pass kernel
                              # pipeline, kept for ablation.
+    paged: bool = False      # paged KV cache: device-side block pool +
+                             # host-side BlockAllocator (prefix sharing,
+                             # copy-on-write) instead of per-slot capacity
+                             # slabs — see kvcache.paged / DESIGN.md
+                             # §Paged KV cache
+    block_size: int = 32     # tokens per cache block (paged mode); must be
+                             # a multiple of 8 and of `group`
+    pool_blocks: int = 0     # physical blocks in the pool (paged mode);
+                             # 0 → worst-case default n_slots·capacity/bs+1
 
     def __post_init__(self):
         if self.kind not in POLICIES:
             raise ValueError(f"unknown policy {self.kind!r}; choose from {POLICIES}")
+        if self.paged:
+            from repro.kvcache.paged import check_block_size
+
+            check_block_size(self.block_size, self.group if self.kind == "fier" else 0)
 
 
 def build_metadata(K: jax.Array, cfg: PolicyConfig) -> Any:
@@ -143,3 +156,46 @@ def decode_attention(
     # traced layer index (scan-over-layers): select at runtime
     full = retrieval.full_attention_decode(q, K, V, length)
     return jnp.where(layer < cfg.skip_layers, full, sparse)
+
+
+def decode_attention_paged(
+    q: jax.Array,
+    k_pool: jax.Array,
+    v_pool: jax.Array,
+    meta: Any,
+    block_table: jax.Array,
+    cfg: PolicyConfig,
+    length: jax.Array,
+    layer: int = 0,
+) -> jax.Array:
+    """Policy-dispatched decode attention over a paged block pool.
+
+    q [B, Hq, D]; k_pool/v_pool [N, bs, Hkv, D]; block_table [B, n_btab].
+    The fier fused fast path walks the block table *in-kernel* (paged
+    one-pass retrieval → paged select-and-attend, nothing pool-sized
+    materialised); the full / unfused paths gather the logical slab view
+    through the table and reuse the slab reference pipeline — they are
+    the oracle, not the serving path.
+    """
+    if cfg.kind not in ("full", "fier"):
+        raise ValueError(f"paged decode: unsupported policy {cfg.kind!r}")
+    full_path = (
+        cfg.kind == "full" or meta is None or layer < cfg.skip_layers
+    )
+    if cfg.kind == "fier" and cfg.fused and not full_path:
+        from repro.kernels import ops as kops
+
+        return kops.paged_fused_fier_attention_decode(
+            q, k_pool, v_pool, meta, block_table, cfg.budget, length,
+            group_reduce=cfg.group_reduce, sink=cfg.sink, recent=cfg.recent,
+        )
+    from repro.kvcache.paged import gather_paged_kv
+
+    K, V, logical = gather_paged_kv(k_pool, v_pool, meta, block_table)
+    if full_path:
+        return retrieval.full_attention_decode(q, K, V, length)
+    return retrieval.fier_attention_decode(
+        q, K, V, logical, cfg.budget, length,
+        group_reduce=cfg.group_reduce, sink=cfg.sink, recent=cfg.recent,
+        use_kernels=cfg.use_kernels, fused=False,
+    )

@@ -6,12 +6,17 @@ DESIGN.md §2 and §Fused decode):
     fused_retrieval  — one-pass retrieval: score scan + GQA group-reduce +
                        masking + exact radix threshold top-k in a single
                        kernel; the per-token score tensors never touch
-                       HBM (the serving retrieval default)
+                       HBM (the serving retrieval default).  Includes the
+                       page-table-aware variant (paged_fused_retrieve_hm):
+                       the DMA stream walks block_table[b] over the paged
+                       code pool instead of a contiguous slab
     topk_select      — threshold top-k on the f32 scores (no global sort)
     sparse_attention — exact decode attention over the selected tokens:
-                       unfused (pre-gathered K'/V') and fused
-                       (in-kernel row gather from the cache slabs —
-                       no materialised copies; the serving fast path)
+                       unfused (pre-gathered K'/V'), fused (in-kernel row
+                       gather from the cache slabs — no materialised
+                       copies; the serving fast path), and paged fused
+                       (in-kernel logical→(block, offset) translation +
+                       row gather from the block pool)
     pack_quantize    — prefill-time group quantize + bit-pack
 
 ``ops``: jit'd wrappers (interpret=True off-TPU).  ``ref``: jnp oracles.

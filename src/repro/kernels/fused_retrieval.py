@@ -67,6 +67,104 @@ NPASS = 4    # radix-histogram passes: 8 bits of the uint32 keys per pass
 RADIX = 256  # buckets per pass
 
 
+def _threshold_select(sweep, budget: int, idx_ref, tau_ref, m_ref):
+    """Radix-histogram τ search + tie-aware index compaction over a
+    ``sweep(fold, init)`` abstraction that folds over (keys, pos) blocks.
+
+    Shared verbatim by the contiguous (slab) and the page-table-aware
+    retrieval kernels: both produce per-block monotone-uint32 keys of the
+    masked kv scores; only the *addressing* of the code stream differs.
+    Writes the selected index set, τ, and the strictly-greater count to
+    the (lane-padded) output refs.
+    """
+    # ---- phase 1: radix-histogram search for τ (the budget-th largest key)
+    def radix_pass(p, carry):
+        t, remaining, greater = carry
+        pw = p.astype(jnp.uint32)
+        shift = jnp.uint32(24) - jnp.uint32(8) * pw
+        # participation: keys matching the 8p prefix bits found so far
+        # (p = 0: everyone; the clamp keeps the dead branch's shift < 32)
+        himask = jnp.where(
+            p == 0,
+            jnp.uint32(0),
+            jnp.uint32(0xFFFFFFFF)
+            << jnp.minimum(jnp.uint32(32) - jnp.uint32(8) * pw, jnp.uint32(31)),
+        )
+
+        def fold(keys, pos, hist):
+            blk = keys.shape[1]
+            part = (keys & himask) == t                     # [1, blk]
+            digit = ((keys >> shift) & jnp.uint32(0xFF)).astype(jnp.int32)
+            onehot = (
+                digit[0][:, None]
+                == jax.lax.broadcasted_iota(jnp.int32, (blk, RADIX), 1)
+            ) & part[0][:, None]
+            return hist + onehot.astype(jnp.int32).sum(axis=0)[None, :]
+
+        hist = sweep(fold, jnp.zeros((1, RADIX), jnp.int32))
+        ge = jnp.cumsum(hist[:, ::-1], axis=1)[:, ::-1]     # count(digit ≥ j)
+        iota = jax.lax.broadcasted_iota(jnp.int32, (1, RADIX), 1)
+        # τ's digit: the highest bucket where the ≥-count reaches `remaining`
+        jstar = jnp.max(jnp.where(ge >= remaining, iota, -1))
+        above = jnp.sum(jnp.where(iota > jstar, hist, 0))
+        t = t | (jstar.astype(jnp.uint32) << shift)
+        return t, remaining - above, greater + above
+
+    tau_key, _, m = jax.lax.fori_loop(
+        0, NPASS, radix_pass,
+        (jnp.uint32(0), jnp.int32(budget), jnp.int32(0)),
+    )
+    # m = |{ key > τ }| exactly: every strictly-greater key is counted at
+    # the first radix pass where its digit exceeds τ's (it matches the
+    # prefix up to that pass), and never again after it stops matching.
+
+    # ---- phase 2: re-score and compact { key > τ } ∪ first (budget−m) ties
+    def compact_fold(keys, pos, carry):
+        ngt, ntie, out = carry
+        gt = (keys > tau_key)[0]                            # [blk]
+        tie = (keys == tau_key)[0]
+        cgt = jnp.cumsum(gt.astype(jnp.int32))
+        ctie = jnp.cumsum(tie.astype(jnp.int32))
+        take_tie = tie & (ntie + ctie <= budget - m)
+        dest = jnp.where(
+            gt, ngt + cgt - 1,
+            jnp.where(take_tie, m + ntie + ctie - 1, budget),
+        )
+        # bounded scatter by rank: >τ fill [0, m) in ascending position,
+        # taken ties fill [m, budget); dest == budget is dropped
+        out = out.at[dest].set(pos[0], mode="drop")
+        return ngt + cgt[-1], ntie + ctie[-1], out
+
+    _, _, out = sweep(
+        compact_fold,
+        (jnp.int32(0), jnp.int32(0), jnp.zeros((budget,), jnp.int32)),
+    )
+    idx_ref[...] = out.reshape(idx_ref.shape)
+    tau_ref[...] = jnp.full(tau_ref.shape, _unsortable(tau_key), jnp.float32)
+    m_ref[...] = jnp.full(m_ref.shape, m, jnp.int32)
+
+
+def _masked_block_keys(s, i, blk_s, length, sink, recent, group_reduce):
+    """Group-reduce + mask one scored block and lift to monotone keys.
+
+    s [rep, blk_s] f32 (VREG-resident scores) → (keys uint32 [1, blk_s],
+    pos int32 [1, blk_s]).  Shared by the slab and paged kernels so the
+    masking arithmetic is identical bit for bit.
+    """
+    if group_reduce == "max":
+        kv = s.max(axis=0, keepdims=True)                   # [1, blk_s]
+    else:
+        kv = s.sum(axis=0, keepdims=True)
+    pos = i * blk_s + jax.lax.broadcasted_iota(jnp.int32, (1, blk_s), 1)
+    kv = jnp.where(pos < length, kv, NEG_INF)
+    if sink > 0:
+        kv = jnp.where(pos < sink, jnp.inf, kv)
+    if recent > 0:
+        is_recent = (pos >= length - recent) & (pos < length)
+        kv = jnp.where(is_recent, jnp.inf, kv)
+    return _sortable_keys(kv), pos
+
+
 def _kernel(
     len_ref, q_ref, codes_hbm, scale_hbm, zero_hbm,
     idx_ref, tau_ref, m_ref,
@@ -123,18 +221,7 @@ def _kernel(
         s = score_block(
             qbf, codes_v[slot], scale_v[slot], zero_v[slot], group=group
         )                                                   # [rep, blk_s]
-        if group_reduce == "max":
-            kv = s.max(axis=0, keepdims=True)               # [1, blk_s]
-        else:
-            kv = s.sum(axis=0, keepdims=True)
-        pos = i * blk_s + jax.lax.broadcasted_iota(jnp.int32, (1, blk_s), 1)
-        kv = jnp.where(pos < length, kv, NEG_INF)
-        if sink > 0:
-            kv = jnp.where(pos < sink, jnp.inf, kv)
-        if recent > 0:
-            is_recent = (pos >= length - recent) & (pos < length)
-            kv = jnp.where(is_recent, jnp.inf, kv)
-        return _sortable_keys(kv), pos
+        return _masked_block_keys(s, i, blk_s, length, sink, recent, group_reduce)
 
     def sweep(fold, init):
         """fold(keys, pos, carry) over all code blocks, next block's DMA
@@ -152,70 +239,7 @@ def _kernel(
 
         return jax.lax.fori_loop(0, nb, body, init)
 
-    # ---- phase 1: radix-histogram search for τ (the budget-th largest key)
-    def radix_pass(p, carry):
-        t, remaining, greater = carry
-        pw = p.astype(jnp.uint32)
-        shift = jnp.uint32(24) - jnp.uint32(8) * pw
-        # participation: keys matching the 8p prefix bits found so far
-        # (p = 0: everyone; the clamp keeps the dead branch's shift < 32)
-        himask = jnp.where(
-            p == 0,
-            jnp.uint32(0),
-            jnp.uint32(0xFFFFFFFF)
-            << jnp.minimum(jnp.uint32(32) - jnp.uint32(8) * pw, jnp.uint32(31)),
-        )
-
-        def fold(keys, pos, hist):
-            part = (keys & himask) == t                     # [1, blk_s]
-            digit = ((keys >> shift) & jnp.uint32(0xFF)).astype(jnp.int32)
-            onehot = (
-                digit[0][:, None]
-                == jax.lax.broadcasted_iota(jnp.int32, (blk_s, RADIX), 1)
-            ) & part[0][:, None]
-            return hist + onehot.astype(jnp.int32).sum(axis=0)[None, :]
-
-        hist = sweep(fold, jnp.zeros((1, RADIX), jnp.int32))
-        ge = jnp.cumsum(hist[:, ::-1], axis=1)[:, ::-1]     # count(digit ≥ j)
-        iota = jax.lax.broadcasted_iota(jnp.int32, (1, RADIX), 1)
-        # τ's digit: the highest bucket where the ≥-count reaches `remaining`
-        jstar = jnp.max(jnp.where(ge >= remaining, iota, -1))
-        above = jnp.sum(jnp.where(iota > jstar, hist, 0))
-        t = t | (jstar.astype(jnp.uint32) << shift)
-        return t, remaining - above, greater + above
-
-    tau_key, _, m = jax.lax.fori_loop(
-        0, NPASS, radix_pass,
-        (jnp.uint32(0), jnp.int32(budget), jnp.int32(0)),
-    )
-    # m = |{ key > τ }| exactly: every strictly-greater key is counted at
-    # the first radix pass where its digit exceeds τ's (it matches the
-    # prefix up to that pass), and never again after it stops matching.
-
-    # ---- phase 2: re-score and compact { key > τ } ∪ first (budget−m) ties
-    def compact_fold(keys, pos, carry):
-        ngt, ntie, out = carry
-        gt = (keys > tau_key)[0]                            # [blk_s]
-        tie = (keys == tau_key)[0]
-        cgt = jnp.cumsum(gt.astype(jnp.int32))
-        ctie = jnp.cumsum(tie.astype(jnp.int32))
-        take_tie = tie & (ntie + ctie <= budget - m)
-        dest = jnp.where(
-            gt, ngt + cgt - 1,
-            jnp.where(take_tie, m + ntie + ctie - 1, budget),
-        )
-        # bounded scatter by rank: >τ fill [0, m) in ascending position,
-        # taken ties fill [m, budget); dest == budget is dropped
-        out = out.at[dest].set(pos[0], mode="drop")
-        return ngt + cgt[-1], ntie + ctie[-1], out
-
-    _, _, out = sweep(
-        compact_fold,
-        (jnp.int32(0), jnp.int32(0), jnp.zeros((budget,), jnp.int32)),
-    )
-    idx_ref[...] = out[None, :]
-    tau_ref[...] = jnp.full(tau_ref.shape, _unsortable(tau_key), jnp.float32)
-    m_ref[...] = jnp.full(m_ref.shape, m, jnp.int32)
+    _threshold_select(sweep, budget, idx_ref, tau_ref, m_ref)
 
 
 @functools.partial(
@@ -289,3 +313,157 @@ def fused_retrieve_hm(
         interpret=interpret,
     )(lengths[:, None], q, codes, scale, zero)
     return idx, tau[:, 0], m[:, 0]
+
+
+# ------------------------------------------------------- page-table variant
+
+def _paged_kernel(
+    bt_ref, len_ref, q_ref, codes_hbm, scale_hbm, zero_hbm,
+    idx_ref, tau_ref, m_ref,
+    codes_v, scale_v, zero_v, sems, *,
+    budget: int, group: int, block_size: int, group_reduce: str,
+    sink: int, recent: int, n_btab: int,
+):
+    """One (batch, kv-head) row of one-pass retrieval over a *paged* pool.
+
+    bt_ref [n_btab] int32 (SMEM) — this request's block table row;
+    len_ref [1] int32 (SMEM); q_ref [rep, D]; codes/scale/zero: whole
+    paged side-car pools [N, bs/8|bs/g, Hkv, D] in ANY space; outputs and
+    scratch as in the contiguous kernel.  The per-row DMA stream walks
+    ``block_table[b]`` instead of a contiguous slab: logical code block
+    ``i`` is fetched from pool row ``bt[i]`` (unallocated entries point
+    at the null block, whose garbage scores are masked by ``length``).
+    The scoring block size *is* the cache block size, so the selected
+    indices are logical token positions ``i·bs + offset`` — τ search and
+    compaction are shared verbatim with the slab kernel.
+    """
+    h = pl.program_id(1)
+    bs = block_size
+    n8 = bs // 8
+    ng = bs // group
+    length = len_ref[0]
+    qbf = q_ref[...].astype(jnp.bfloat16)
+
+    def block_copies(i, slot):
+        phys = bt_ref[i]
+        return (
+            pltpu.make_async_copy(
+                codes_hbm.at[phys, :, h, :], codes_v.at[slot], sems.at[slot, 0]
+            ),
+            pltpu.make_async_copy(
+                scale_hbm.at[phys, :, h, :], scale_v.at[slot], sems.at[slot, 1]
+            ),
+            pltpu.make_async_copy(
+                zero_hbm.at[phys, :, h, :], zero_v.at[slot], sems.at[slot, 2]
+            ),
+        )
+
+    def start_block(i):
+        for cp in block_copies(i, jax.lax.rem(i, 2)):
+            cp.start()
+
+    def wait_block(i):
+        for cp in block_copies(i, jax.lax.rem(i, 2)):
+            cp.wait()
+
+    def block_keys(i):
+        slot = jax.lax.rem(i, 2)
+        s = score_block(
+            qbf, codes_v[slot], scale_v[slot], zero_v[slot], group=group
+        )                                                   # [rep, bs]
+        return _masked_block_keys(s, i, bs, length, sink, recent, group_reduce)
+
+    def sweep(fold, init):
+        start_block(0)
+
+        def body(i, carry):
+            @pl.when(i + 1 < n_btab)
+            def _prefetch():
+                start_block(i + 1)
+
+            wait_block(i)
+            keys, pos = block_keys(i)
+            return fold(keys, pos, carry)
+
+        return jax.lax.fori_loop(0, n_btab, body, init)
+
+    _threshold_select(sweep, budget, idx_ref, tau_ref, m_ref)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "budget", "group", "block_size", "group_reduce", "sink", "recent",
+        "interpret",
+    ),
+)
+def paged_fused_retrieve_hm(
+    q: jax.Array,
+    codes: jax.Array,
+    scale: jax.Array,
+    zero: jax.Array,
+    block_table: jax.Array,
+    lengths: jax.Array,
+    budget: int,
+    *,
+    group: int,
+    block_size: int,
+    group_reduce: str = "max",
+    sink: int = 0,
+    recent: int = 0,
+    interpret: bool = True,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Page-table-aware one-pass retrieval.
+
+    q [B, Hkv, rep, D]; codes [N, bs/8, Hkv, D] uint8; scale/zero
+    [N, bs/g, Hkv, D]; block_table [B, n_btab] int32; lengths [B] int32 →
+    (idx int32 [B, Hkv, budget], tau f32 [B, Hkv], m int32 [B, Hkv]).
+
+    Returns the exact index set / τ / m of ``fused_retrieve_hm`` on the
+    logical (table-gathered) cache contents: scores are computed by the
+    same ``score_block`` at per-token granularity, so values — hence keys,
+    τ, and the compacted index order — are bit-identical to the slab
+    kernel's.  Per-token score state in HBM: none, as in the slab kernel.
+    """
+    B, Hkv, rep, D = q.shape
+    n_btab = block_table.shape[1]
+    S = n_btab * block_size
+    assert 0 < budget <= S, (budget, S)
+    assert codes.shape[1] * 8 == block_size, (codes.shape, block_size)
+    if group_reduce not in ("max", "sum"):
+        raise ValueError(f"unknown group reduction {group_reduce!r}")
+    idx, tau, m = pl.pallas_call(
+        functools.partial(
+            _paged_kernel, budget=budget, group=group, block_size=block_size,
+            group_reduce=group_reduce, sink=sink, recent=recent, n_btab=n_btab,
+        ),
+        grid=(B, Hkv),
+        in_specs=[
+            pl.BlockSpec(
+                (None, n_btab), lambda b, h: (b, 0), memory_space=pltpu.SMEM
+            ),
+            pl.BlockSpec((None, 1), lambda b, h: (b, 0), memory_space=pltpu.SMEM),
+            pl.BlockSpec((None, None, rep, D), lambda b, h: (b, h, 0, 0)),
+            pl.BlockSpec(memory_space=pltpu.ANY),
+            pl.BlockSpec(memory_space=pltpu.ANY),
+            pl.BlockSpec(memory_space=pltpu.ANY),
+        ],
+        out_specs=[
+            pl.BlockSpec((None, None, budget), lambda b, h: (b, h, 0)),
+            pl.BlockSpec((None, None, LANE), lambda b, h: (b, h, 0)),
+            pl.BlockSpec((None, None, LANE), lambda b, h: (b, h, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, Hkv, budget), jnp.int32),
+            jax.ShapeDtypeStruct((B, Hkv, LANE), jnp.float32),
+            jax.ShapeDtypeStruct((B, Hkv, LANE), jnp.int32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((2, block_size // 8, D), jnp.uint8),
+            pltpu.VMEM((2, block_size // group, D), scale.dtype),
+            pltpu.VMEM((2, block_size // group, D), zero.dtype),
+            pltpu.SemaphoreType.DMA((2, 3)),
+        ],
+        interpret=interpret,
+    )(block_table, lengths[:, None], q, codes, scale, zero)
+    return idx, tau[:, :, 0], m[:, :, 0]

@@ -257,3 +257,118 @@ def fused_fier_attention_decode(
         kv_scores = retrieval.reduce_over_query_group(scores, Hkv, group_reduce)
         idx = topk_select(kv_scores, budget, length, sink=sink, recent=recent)
     return fused_sparse_attention(q, K, V, idx, length, blk_k=blk_k)
+
+
+# ------------------------------------------------------------- paged variants
+
+def paged_fused_retrieve(
+    q: jax.Array,
+    meta: QuantizedKeys,
+    block_table: jax.Array,
+    budget: int,
+    length: jax.Array | None = None,
+    *,
+    group_reduce: str = "max",
+    sink: int = 0,
+    recent: int = 0,
+    return_stats: bool = False,
+):
+    """One-pass retrieval over a paged code pool.
+
+    q [B, Hq, D]; meta: paged side-car pools (codes [N, bs/8, Hkv, D],
+    scale/zero [N, bs/g, Hkv, D]); block_table [B, n_btab] → idx int32
+    [B, Hkv, budget] of *logical* token positions.  Same index set (and
+    identical array, since both compact ascending-by-position) as
+    ``fused_retrieve`` over the table-gathered logical cache — and unlike
+    the slab wrapper there are no head-major transposes here: the kernel
+    indexes the pool's head axis directly, so nothing pool-sized is
+    copied per step.
+    """
+    B, Hq, D = q.shape
+    Hkv = meta.codes.shape[2]
+    rep = Hq // Hkv
+    block_size = meta.codes.shape[1] * 8
+    n_btab = block_table.shape[1]
+    S = n_btab * block_size
+    q4 = q.reshape(B, Hkv, rep, D)
+    if length is None:
+        lens = jnp.full((B,), S, jnp.int32)
+        recent = 0  # masked_scores applies `recent` only with a length
+    else:
+        lens = length.astype(jnp.int32)
+    idx, tau, m = _fr.paged_fused_retrieve_hm(
+        q4, meta.codes, meta.scale, meta.zero, block_table, lens, budget,
+        group=meta.group, block_size=block_size, group_reduce=group_reduce,
+        sink=sink, recent=recent, interpret=_interpret(),
+    )
+    if return_stats:
+        return idx, tau, m
+    return idx
+
+
+def paged_fused_sparse_attention(
+    q: jax.Array,
+    k_pool: jax.Array,
+    v_pool: jax.Array,
+    block_table: jax.Array,
+    idx: jax.Array,
+    length: jax.Array | None,
+    *,
+    blk_k: int = 1024,
+) -> jax.Array:
+    """Paged fused decode attention: in-kernel (block, offset) translation
+    + per-row DMA gather from the block pool.
+
+    q [B, Hq, D]; k_pool/v_pool [N, bs, Hkv, D]; idx [B, Hkv, budget]
+    logical positions; length [B] → [B, Hq, D] (q.dtype).
+    """
+    B, Hq, D = q.shape
+    Hkv = k_pool.shape[2]
+    rep = Hq // Hkv
+    budget = idx.shape[2]
+    block_size = k_pool.shape[1]
+    q4 = q.reshape(B, Hkv, rep, D)
+    if length is not None:
+        valid = idx < length[:, None, None]
+    else:
+        valid = jnp.ones_like(idx, dtype=bool)
+    mask = valid[:, :, None, :].astype(jnp.int8)
+    blk = min(blk_k, budget)
+    while budget % blk:
+        blk //= 2
+    out = _sa.paged_fused_sparse_attention_hm(
+        q4, k_pool, v_pool, block_table, idx, mask,
+        block_size=block_size, blk_k=blk, interpret=_interpret(),
+    )
+    return out.reshape(B, Hq, D).astype(q.dtype)
+
+
+def paged_fused_fier_attention_decode(
+    q: jax.Array,
+    k_pool: jax.Array,
+    v_pool: jax.Array,
+    meta: QuantizedKeys,
+    block_table: jax.Array,
+    budget: int,
+    length: jax.Array | None = None,
+    *,
+    group_reduce: str = "max",
+    sink: int = 0,
+    recent: int = 0,
+    blk_k: int = 1024,
+) -> jax.Array:
+    """Fully fused paged FIER decode step — the paged serving fast path.
+
+    One-pass retrieval (per-token scores never in HBM) chained into the
+    paged select-and-attend kernel; both walk ``block_table`` in-kernel,
+    so no logical-slab view of the pool is ever materialised.  Bit-
+    identical to ``fused_fier_attention_decode`` on the same logical
+    cache contents (asserted across the GQA matrix in tests/test_paged.py).
+    """
+    idx = paged_fused_retrieve(
+        q, meta, block_table, budget, length,
+        group_reduce=group_reduce, sink=sink, recent=recent,
+    )
+    return paged_fused_sparse_attention(
+        q, k_pool, v_pool, block_table, idx, length, blk_k=blk_k
+    )

@@ -82,3 +82,59 @@ def fused_sparse_attention(
     (the unfused pipeline the fused path must agree with to tolerance)."""
     k_sel, v_sel = retrieval.gather_kv(K, V, idx)
     return retrieval.sparse_attention(q, k_sel, v_sel, idx, length)
+
+
+# ------------------------------------------------------------- paged oracles
+
+def paged_fused_retrieve(
+    q: jax.Array,
+    meta: qz.QuantizedKeys,
+    block_table: jax.Array,
+    budget: int,
+    length: jax.Array | None = None,
+    *,
+    group_reduce: str = "max",
+    sink: int = 0,
+    recent: int = 0,
+) -> jax.Array:
+    """Oracle for the paged one-pass kernel: materialise the logical
+    (table-gathered) side-car, then run the fully-materialised slab
+    pipeline.  Same index-set contract as ``fused_retrieve``."""
+    from repro.kvcache.paged import gather_block_rows
+
+    logical = qz.QuantizedKeys(
+        gather_block_rows(meta.codes, block_table),
+        gather_block_rows(meta.scale, block_table),
+        gather_block_rows(meta.zero, block_table),
+        meta.group,
+    )
+    return fused_retrieve(
+        q, logical, budget, length,
+        group_reduce=group_reduce, sink=sink, recent=recent,
+    )
+
+
+def paged_fused_fier_attention_decode(
+    q: jax.Array,
+    k_pool: jax.Array,
+    v_pool: jax.Array,
+    meta: qz.QuantizedKeys,
+    block_table: jax.Array,
+    budget: int,
+    length: jax.Array | None = None,
+    *,
+    group_reduce: str = "max",
+    sink: int = 0,
+    recent: int = 0,
+) -> jax.Array:
+    """Oracle for the paged fused decode: gather the logical K/V slab and
+    side-car through the block table, then run the unfused jnp pipeline."""
+    from repro.kvcache.paged import gather_paged_kv
+
+    K, V, logical = gather_paged_kv(k_pool, v_pool, meta, block_table)
+    Hkv = K.shape[2]
+    s = retrieval.approx_scores(q, logical)
+    kv = retrieval.reduce_over_query_group(s, Hkv, group_reduce)
+    idx = retrieval.select_topk(kv, budget, length, sink=sink, recent=recent)
+    k_sel, v_sel = retrieval.gather_kv(K, V, idx)
+    return retrieval.sparse_attention(q, k_sel, v_sel, idx, length)

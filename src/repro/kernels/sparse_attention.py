@@ -36,6 +36,32 @@ from jax.experimental.pallas import tpu as pltpu
 NEG_INF = -1e30
 
 
+def _softmax_accumulate(q, k, v, valid, out_ref, m_ref, d_ref, *, scale):
+    """One online-softmax block update, shared by every attend kernel.
+
+    q [rep, D] f32; k/v [blk_k, D]; valid bool [1, blk_k]; out [rep, D]
+    f32; m/d [rep, 128] f32 carries (lane-padded scalars).  Keeping this
+    expression shared is what makes the slab, fused, and paged attend
+    paths bit-identical at equal ``blk_k``.
+    """
+    s = jax.lax.dot_general(
+        q, k.astype(jnp.float32), (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    ) * scale                                            # [rep, blk_k]
+    s = jnp.where(valid, s, NEG_INF)
+
+    m_prev = m_ref[..., 0]                               # [rep]
+    m_new = jnp.maximum(m_prev, s.max(axis=-1))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new[:, None])
+    p = jnp.where(valid, p, 0.0)
+    out_ref[...] = out_ref[...] * alpha[:, None] + jax.lax.dot(
+        p, v.astype(jnp.float32), preferred_element_type=jnp.float32
+    )
+    d_ref[..., 0] = d_ref[..., 0] * alpha + p.sum(axis=-1)
+    m_ref[..., 0] = m_new
+
+
 def _kernel(q_ref, k_ref, v_ref, mask_ref, out_ref, m_ref, d_ref, *, scale):
     """Online-softmax step over one budget block.
 
@@ -50,25 +76,10 @@ def _kernel(q_ref, k_ref, v_ref, mask_ref, out_ref, m_ref, d_ref, *, scale):
         d_ref[...] = jnp.zeros_like(d_ref)
         out_ref[...] = jnp.zeros_like(out_ref)
 
-    q = q_ref[...].astype(jnp.float32)
-    k = k_ref[...].astype(jnp.float32)
-    s = jax.lax.dot_general(
-        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
-    ) * scale                                            # [rep, blk_k]
-    valid = mask_ref[...] > 0                            # [1, blk_k]
-    s = jnp.where(valid, s, NEG_INF)
-
-    m_prev = m_ref[..., 0]                               # [rep]
-    m_new = jnp.maximum(m_prev, s.max(axis=-1))
-    alpha = jnp.exp(m_prev - m_new)
-    p = jnp.exp(s - m_new[:, None])
-    p = jnp.where(valid, p, 0.0)
-    v = v_ref[...].astype(jnp.float32)
-    out_ref[...] = out_ref[...] * alpha[:, None] + jax.lax.dot(
-        p, v, preferred_element_type=jnp.float32
+    _softmax_accumulate(
+        q_ref[...].astype(jnp.float32), k_ref[...], v_ref[...],
+        mask_ref[...] > 0, out_ref, m_ref, d_ref, scale=scale,
     )
-    d_ref[..., 0] = d_ref[..., 0] * alpha + p.sum(axis=-1)
-    m_ref[..., 0] = m_new
 
 
 @functools.partial(jax.jit, static_argnames=("blk_k", "interpret"))
@@ -179,25 +190,10 @@ def _fused_kernel(
 
     jax.lax.fori_loop(0, blk_k, gather, 0)
 
-    q = q_ref[...].astype(jnp.float32)
-    k = k_vmem[...].astype(jnp.float32)
-    s = jax.lax.dot_general(
-        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
-    ) * scale                                            # [rep, blk_k]
-    valid = mask_ref[...] > 0                            # [1, blk_k]
-    s = jnp.where(valid, s, NEG_INF)
-
-    m_prev = m_ref[..., 0]
-    m_new = jnp.maximum(m_prev, s.max(axis=-1))
-    alpha = jnp.exp(m_prev - m_new)
-    p = jnp.exp(s - m_new[:, None])
-    p = jnp.where(valid, p, 0.0)
-    v = v_vmem[...].astype(jnp.float32)
-    out_ref[...] = out_ref[...] * alpha[:, None] + jax.lax.dot(
-        p, v, preferred_element_type=jnp.float32
+    _softmax_accumulate(
+        q_ref[...].astype(jnp.float32), k_vmem[...], v_vmem[...],
+        mask_ref[...] > 0, out_ref, m_ref, d_ref, scale=scale,
     )
-    d_ref[..., 0] = d_ref[..., 0] * alpha + p.sum(axis=-1)
-    m_ref[..., 0] = m_new
 
 
 @functools.partial(jax.jit, static_argnames=("blk_k", "interpret"))
@@ -259,5 +255,139 @@ def fused_sparse_attention_hm(
         ],
         interpret=interpret,
     )(idx, q, mask, K, V)
+    den = jnp.maximum(d[..., 0], 1e-30)
+    return out / den[..., None]
+
+
+# ------------------------------------------------- paged select+attend
+
+def _paged_fused_kernel(
+    bt_ref, idx_ref, q_ref, mask_ref, k_hbm, v_hbm, out_ref, m_ref, d_ref,
+    k_vmem, v_vmem, sems, *, scale, block_size,
+):
+    """One (batch, kv-head, budget-block) step of *paged* select-and-attend.
+
+    Identical to ``_fused_kernel`` except for row addressing: the cache
+    operands are the block-pool slabs [N, bs, Hkv, D] (ANY space) and the
+    selected *logical* token index ``t`` is translated in-kernel to
+    ``(block_table[t // bs], t % bs)`` via the SMEM-resident table row
+    ``bt_ref [n_btab]``.  The online-softmax epilogue is shared, so paged
+    and slab outputs are bit-identical at equal ``blk_k``.
+    """
+    h = pl.program_id(1)
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, -jnp.inf)
+        d_ref[...] = jnp.zeros_like(d_ref)
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    blk_k = k_vmem.shape[0]
+
+    def row_copies(i):
+        row = idx_ref[i]
+        phys = bt_ref[row // block_size]
+        off = jax.lax.rem(row, block_size)
+        slot = jax.lax.rem(i, 2)
+        kcp = pltpu.make_async_copy(
+            k_hbm.at[phys, pl.ds(off, 1), h, :], k_vmem.at[pl.ds(i, 1), :],
+            sems.at[slot, 0],
+        )
+        vcp = pltpu.make_async_copy(
+            v_hbm.at[phys, pl.ds(off, 1), h, :], v_vmem.at[pl.ds(i, 1), :],
+            sems.at[slot, 1],
+        )
+        return kcp, vcp
+
+    def start_row(i):
+        kcp, vcp = row_copies(i)
+        kcp.start()
+        vcp.start()
+
+    start_row(0)
+
+    def gather(i, _):
+        @pl.when(i + 1 < blk_k)
+        def _prefetch():
+            start_row(i + 1)
+
+        kcp, vcp = row_copies(i)
+        kcp.wait()
+        vcp.wait()
+        return 0
+
+    jax.lax.fori_loop(0, blk_k, gather, 0)
+
+    _softmax_accumulate(
+        q_ref[...].astype(jnp.float32), k_vmem[...], v_vmem[...],
+        mask_ref[...] > 0, out_ref, m_ref, d_ref, scale=scale,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("block_size", "blk_k", "interpret"))
+def paged_fused_sparse_attention_hm(
+    q: jax.Array,
+    k_pool: jax.Array,
+    v_pool: jax.Array,
+    block_table: jax.Array,
+    idx: jax.Array,
+    mask: jax.Array,
+    *,
+    block_size: int,
+    blk_k: int = 1024,
+    interpret: bool = True,
+) -> jax.Array:
+    """Paged fused select-and-attend decode attention.
+
+    q [B, Hkv, rep, D]; k_pool/v_pool block-pool slabs [N, bs, Hkv, D];
+    block_table int32 [B, n_btab]; idx int32 [B, Hkv, budget] (*logical*
+    token positions); mask int8 [B, Hkv, 1, budget] → out f32
+    [B, Hkv, rep, D].  As in the contiguous fused kernel, only the
+    ``budget`` selected rows move HBM→VMEM — no K'/V' copy, and no
+    materialised logical-slab view of the pool either.
+    """
+    B, Hkv, rep, D = q.shape
+    budget = idx.shape[2]
+    blk_k = min(blk_k, budget)
+    assert budget % blk_k == 0
+    assert k_pool.shape[1] == block_size, (k_pool.shape, block_size)
+    grid = (B, Hkv, budget // blk_k)
+    scale = 1.0 / (D**0.5)
+    n_btab = block_table.shape[1]
+    out, m, d = pl.pallas_call(
+        functools.partial(_paged_fused_kernel, scale=scale, block_size=block_size),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(
+                (None, n_btab), lambda b, h, j: (b, 0),
+                memory_space=pltpu.SMEM,
+            ),
+            pl.BlockSpec(
+                (None, None, blk_k), lambda b, h, j: (b, h, j),
+                memory_space=pltpu.SMEM,
+            ),
+            pl.BlockSpec((None, None, rep, D), lambda b, h, j: (b, h, 0, 0)),
+            pl.BlockSpec((None, None, 1, blk_k), lambda b, h, j: (b, h, 0, j)),
+            pl.BlockSpec(memory_space=pltpu.ANY),
+            pl.BlockSpec(memory_space=pltpu.ANY),
+        ],
+        out_specs=[
+            pl.BlockSpec((None, None, rep, D), lambda b, h, j: (b, h, 0, 0)),
+            pl.BlockSpec((None, None, rep, 128), lambda b, h, j: (b, h, 0, 0)),
+            pl.BlockSpec((None, None, rep, 128), lambda b, h, j: (b, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, Hkv, rep, D), jnp.float32),
+            jax.ShapeDtypeStruct((B, Hkv, rep, 128), jnp.float32),
+            jax.ShapeDtypeStruct((B, Hkv, rep, 128), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((blk_k, D), k_pool.dtype),
+            pltpu.VMEM((blk_k, D), v_pool.dtype),
+            pltpu.SemaphoreType.DMA((2, 2)),
+        ],
+        interpret=interpret,
+    )(block_table, idx, q, mask, k_pool, v_pool)
     den = jnp.maximum(d[..., 0], 1e-30)
     return out / den[..., None]

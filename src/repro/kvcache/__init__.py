@@ -1,3 +1,21 @@
 from .cache import append_kv, append_token_metadata, init_layer_cache
+from .paged import (
+    BlockAllocator,
+    block_hash_chain,
+    gather_paged_kv,
+    init_paged_pool,
+    paged_append_kv,
+    paged_append_token_metadata,
+)
 
-__all__ = ["append_kv", "append_token_metadata", "init_layer_cache"]
+__all__ = [
+    "BlockAllocator",
+    "append_kv",
+    "append_token_metadata",
+    "block_hash_chain",
+    "gather_paged_kv",
+    "init_layer_cache",
+    "init_paged_pool",
+    "paged_append_kv",
+    "paged_append_token_metadata",
+]

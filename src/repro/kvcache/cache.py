@@ -19,6 +19,19 @@ import jax.numpy as jnp
 from repro.core.policy import PolicyConfig
 
 
+def _check_capacity(capacity: int, group: int, *, what: str = "capacity") -> None:
+    """FIER side-car layout constraints: 8 tokens/byte, ``group`` tokens
+    per (scale, zero) cell — a non-divisible ``capacity`` (or paged
+    ``block_size``) silently truncates the ``// 8`` / ``// group``
+    side-car shapes and misallocates the codes."""
+    if capacity <= 0:
+        raise ValueError(f"{what} must be positive, got {capacity}")
+    if capacity % 8:
+        raise ValueError(f"{what} {capacity} not divisible by 8 (bit packing)")
+    if group and capacity % group:
+        raise ValueError(f"{what} {capacity} not divisible by group {group}")
+
+
 def init_layer_cache(
     n_layers: int,
     B: int,
@@ -28,7 +41,19 @@ def init_layer_cache(
     cfg: PolicyConfig | None,
     dtype=jnp.bfloat16,
 ) -> dict[str, Any]:
-    """Stacked [L, B, S, Hkv, D] K/V slabs (+ policy metadata side-car)."""
+    """Stacked [L, B, S, Hkv, D] K/V slabs (+ policy metadata side-car).
+
+    ``capacity`` must be divisible by 8 (bit packing) and by the policy's
+    group/page size — ``capacity // 8`` would otherwise silently truncate
+    and misallocate the code side-car (rows beyond the truncated count
+    would be scored from the wrong bytes)."""
+    if cfg is not None and cfg.kind == "fier":
+        _check_capacity(capacity, cfg.group, what="capacity")
+    elif cfg is not None and cfg.kind == "quest":
+        if capacity % cfg.page:
+            raise ValueError(
+                f"capacity {capacity} not divisible by quest page {cfg.page}"
+            )
     kv = dict(
         k=jnp.zeros((n_layers, B, capacity, n_kv, d_head), dtype),
         v=jnp.zeros((n_layers, B, capacity, n_kv, d_head), dtype),

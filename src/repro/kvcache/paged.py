@@ -1,0 +1,378 @@
+"""Paged KV cache: device-side block pool + host-side block allocator.
+
+Instead of one dense ``[L, B, capacity, Hkv, D]`` slab per engine slot
+(HBM provisioned for the worst-case context on every slot), the paged
+cache keeps a single pool of fixed-size blocks
+
+    k, v     [L, n_blocks, block_size, Hkv, D]      (bf16)
+    meta     codes [L, n_blocks, block_size//8,  Hkv, D]  uint8
+             scale [L, n_blocks, block_size//g,  Hkv, D]  bf16
+             zero  [L, n_blocks, block_size//g,  Hkv, D]  bf16
+
+and a per-request **block table** ``[B, capacity // block_size]`` int32
+mapping logical block ``j`` of request ``b`` to a physical pool block.
+Logical token ``t`` lives at ``(block_table[b, t // bs], t % bs)``.  The
+FIER 1-bit code side-car pages at the same granularity as the K/V rows it
+summarizes (``block_size`` is a multiple of 8 and of the quantization
+group ``g``, so a block holds whole bytes and whole (scale, zero) cells).
+
+Block id 0 is the reserved **null block**: it is never allocated, every
+block-table row starts as all-zeros, and out-of-range / inactive-slot
+writes are routed to it — so a freed slot's scratch decode writes can
+never corrupt a reallocated block.  Consumers mask by ``length``, so
+null-block garbage is never read into a result.
+
+Host side, :class:`BlockAllocator` owns the free list and the ref counts,
+with **hash-based prefix sharing**: each prefill-time block is registered
+under a chained hash of its token ids (``key_j = hash((key_{j-1},
+tokens_of_block_j))``), so a later prompt with the same prefix re-uses
+the physical blocks (ref-count incremented, no re-write).  Shared rows
+are immutable — decode only ever *appends* at ``length`` — so sharing a
+partially-filled tail block is safe until a writer appends into it, at
+which point the engine performs **copy-on-write** (``ref > 1`` → copy
+the block, remap the writer's table entry).  Blocks whose ref count
+drops to zero but that carry a registered hash are parked in an LRU
+"free-but-cached" pool: their contents stay valid for future prefix hits
+until the allocator has to evict them for a fresh allocation.
+
+Device primitives here mirror ``kvcache.cache`` exactly (same math per
+token, different addressing), so a paged decode is bit-identical to the
+slab decode on the same logical cache contents — asserted across the GQA
+matrix in tests/test_paged.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import OrderedDict, deque
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.policy import PolicyConfig
+
+NULL_BLOCK = 0  # reserved trash block: never allocated, masked everywhere
+
+
+def check_block_size(block_size: int, group: int = 0) -> None:
+    """A block must hold whole code bytes (8 tokens) and whole (scale,
+    zero) group cells, or the ``// 8`` / ``// group`` side-car shapes
+    silently truncate."""
+    from .cache import _check_capacity
+
+    _check_capacity(block_size, group, what="block_size")
+
+
+def init_paged_pool(
+    n_layers: int,
+    n_blocks: int,
+    block_size: int,
+    n_kv: int,
+    d_head: int,
+    cfg: PolicyConfig | None,
+    dtype=jnp.bfloat16,
+) -> dict[str, Any]:
+    """Block-pool K/V slabs [L, N, bs, Hkv, D] (+ paged FIER side-car)."""
+    check_block_size(
+        block_size, cfg.group if cfg is not None and cfg.kind == "fier" else 0
+    )
+    if n_blocks < 2:
+        raise ValueError(
+            f"pool needs >= 2 blocks (block 0 is the reserved null block), "
+            f"got {n_blocks}"
+        )
+    kv = dict(
+        k=jnp.zeros((n_layers, n_blocks, block_size, n_kv, d_head), dtype),
+        v=jnp.zeros((n_layers, n_blocks, block_size, n_kv, d_head), dtype),
+    )
+    if cfg is not None and cfg.kind == "fier":
+        from repro.core.quantize import QuantizedKeys
+
+        g = cfg.group
+        kv["meta"] = QuantizedKeys(
+            jnp.zeros((n_layers, n_blocks, block_size // 8, n_kv, d_head), jnp.uint8),
+            jnp.zeros((n_layers, n_blocks, block_size // g, n_kv, d_head), jnp.bfloat16),
+            jnp.zeros((n_layers, n_blocks, block_size // g, n_kv, d_head), jnp.bfloat16),
+            g,
+        )
+    elif cfg is not None and cfg.kind != "full":
+        raise ValueError(f"paged cache does not support policy {cfg.kind!r}")
+    return kv
+
+
+# ---------------------------------------------------------------- addressing
+
+def _write_target(
+    block_table: jax.Array, length: jax.Array, block_size: int
+) -> tuple[jax.Array, jax.Array]:
+    """(physical block, offset) of each sequence's append slot ``length``.
+
+    Out-of-range positions (length beyond the table) are routed to the
+    null block, so scratch writes from frozen/inactive slots land in
+    trash instead of clamping onto live data (the slab path's
+    dynamic_update_slice clamp had exactly that failure mode).
+    """
+    n_btab = block_table.shape[1]
+    bidx = jnp.clip(length // block_size, 0, n_btab - 1)
+    phys = jnp.take_along_axis(block_table, bidx[:, None], axis=1)[:, 0]
+    in_range = length < n_btab * block_size
+    return jnp.where(in_range, phys, NULL_BLOCK), length % block_size
+
+
+def gather_block_rows(pool: jax.Array, block_table: jax.Array) -> jax.Array:
+    """Materialise the logical per-request view of a pool leaf.
+
+    pool [N, pb, ...] × block_table [B, n_btab] → [B, n_btab * pb, ...]
+    (pb = rows per block for this leaf: bs for K/V, bs//8 for codes,
+    bs//g for scale/zero).  This is the jnp oracle / fallback path — the
+    paged kernels walk the table in-kernel instead of materialising this.
+    """
+    B, n_btab = block_table.shape
+    pb = pool.shape[1]
+    g = jnp.take(pool, block_table.reshape(-1), axis=0)  # [B*n_btab, pb, ...]
+    return g.reshape(B, n_btab * pb, *pool.shape[2:])
+
+
+def gather_paged_kv(
+    k_pool: jax.Array, v_pool: jax.Array, meta: Any, block_table: jax.Array
+) -> tuple[jax.Array, jax.Array, Any]:
+    """Logical [B, S, Hkv, D] slab views of the pool (+ side-car)."""
+    K = gather_block_rows(k_pool, block_table)
+    V = gather_block_rows(v_pool, block_table)
+    if meta is None:
+        return K, V, None
+    from repro.core.quantize import QuantizedKeys
+
+    m = QuantizedKeys(
+        gather_block_rows(meta.codes, block_table),
+        gather_block_rows(meta.scale, block_table),
+        gather_block_rows(meta.zero, block_table),
+        meta.group,
+    )
+    return K, V, m
+
+
+# -------------------------------------------------------------- append paths
+
+def paged_append_kv(
+    k_pool: jax.Array,
+    v_pool: jax.Array,
+    k_new: jax.Array,
+    v_new: jax.Array,
+    block_table: jax.Array,
+    length: jax.Array,
+) -> tuple[jax.Array, jax.Array]:
+    """Write one new token per sequence through the block table.
+
+    k_pool/v_pool [N, bs, Hkv, D]; k_new/v_new [B, 1, Hkv, D] (or
+    [B, Hkv, D]); length [B] → updated pools.  The engine guarantees each
+    *running* request's table has a writable tail block at ``length``
+    (allocated / copy-on-write'd before the decode step); retired slots
+    have zeroed rows, so their scratch writes hit the null block.
+    """
+    if k_new.ndim == 4:
+        k_new, v_new = k_new[:, 0], v_new[:, 0]
+    bs = k_pool.shape[1]
+    phys, off = _write_target(block_table, length, bs)
+    k_pool = k_pool.at[phys, off].set(k_new.astype(k_pool.dtype))
+    v_pool = v_pool.at[phys, off].set(v_new.astype(v_pool.dtype))
+    return k_pool, v_pool
+
+
+def paged_append_token_metadata(
+    meta: Any,
+    k_pool: jax.Array,
+    block_table: jax.Array,
+    length: jax.Array,
+    cfg: PolicyConfig,
+) -> Any:
+    """Incremental FIER side-car refresh after a paged 1-token append.
+
+    Identical math to ``cache.append_token_metadata`` (group min/max →
+    (scale, zero) → packed sign bits, recomputed for the one group
+    containing the written slot) — only the addressing changes: the group
+    lives inside the sequence's tail block, so one [bs, Hkv, D] block is
+    gathered per sequence and one group's side-car rows are scattered
+    back at the block's pool row.
+    """
+    if meta is None or cfg.kind == "full":
+        return meta
+    if cfg.kind != "fier":
+        raise ValueError(f"paged metadata refresh: unsupported policy {cfg.kind!r}")
+    from repro.core.quantize import QuantizedKeys
+
+    g = cfg.group
+    bs = k_pool.shape[1]
+    B = length.shape[0]
+    phys, off = _write_target(block_table, length, bs)
+    blk = jnp.take(k_pool, phys, axis=0)                     # [B, bs, H, D]
+    start = (off // g) * g                                   # [B]
+    grp = jax.vmap(
+        lambda b, s: jax.lax.dynamic_slice_in_dim(b, s, g, axis=0)
+    )(blk, start)                                            # [B, g, H, D]
+    kmax, kmin = grp.max(1), grp.min(1)                      # [B, H, D]
+    z, s = (kmax + kmin) * 0.5, (kmax - kmin) * 0.5
+    bits = (grp >= z[:, None].astype(grp.dtype)).astype(jnp.uint8)
+    shifts = jnp.arange(8, dtype=jnp.uint8).reshape(1, 1, 8, 1, 1)
+    packed = jnp.sum(
+        bits.reshape(B, g // 8, 8, *bits.shape[2:]) << shifts, axis=2
+    ).astype(jnp.uint8)                                      # [B, g//8, H, D]
+
+    rows8 = (start // 8)[:, None] + jnp.arange(g // 8, dtype=start.dtype)[None]
+    codes = meta.codes.at[phys[:, None], rows8].set(packed)
+    scale = meta.scale.at[phys, start // g].set(s.astype(meta.scale.dtype))
+    zero = meta.zero.at[phys, start // g].set(z.astype(meta.zero.dtype))
+    return QuantizedKeys(codes, scale, zero, g)
+
+
+# -------------------------------------------------------------- host allocator
+
+def block_hash_chain(tokens, block_size: int) -> list[int]:
+    """Chained content hashes, one per (possibly partial) prompt block.
+
+    ``key_j`` covers *all* tokens up to the end of block ``j``, so equal
+    keys ⇒ equal prefixes ⇒ equal K/V contents (causal attention,
+    absolute positions).  The final key identifies the whole prompt and
+    doubles as the full-prompt logits-cache key.
+    """
+    keys, prev = [], 0x9E3779B9
+    for i in range(0, len(tokens), block_size):
+        prev = hash((prev, tuple(int(t) for t in tokens[i : i + block_size])))
+        keys.append(prev)
+    return keys
+
+
+@dataclasses.dataclass
+class SeqBlocks:
+    """Host-side view of one request's block table row."""
+
+    blocks: list[int] = dataclasses.field(default_factory=list)
+    length: int = 0  # next write position (== tokens resident)
+
+
+class BlockAllocator:
+    """Free-list block allocator with ref counts and a prefix cache.
+
+    States of a block id (> 0):
+      * in use:        ref >= 1 (possibly shared; possibly hash-registered)
+      * free-cached:   ref == 0 but hash-registered; contents still valid
+                       for prefix hits, evicted LRU when the free list
+                       runs dry
+      * free:          ref == 0, no hash; next to be handed out
+
+    Block 0 (the null block) is never handed out.
+    """
+
+    def __init__(self, n_blocks: int, block_size: int):
+        if n_blocks < 2:
+            raise ValueError(f"pool needs >= 2 blocks, got {n_blocks}")
+        check_block_size(block_size)
+        self.n_blocks = n_blocks
+        self.block_size = block_size
+        self.ref = [0] * n_blocks
+        self._free: deque[int] = deque(range(1, n_blocks))
+        self._free_cached: OrderedDict[int, int] = OrderedDict()  # bid → key
+        self._by_hash: dict[int, int] = {}                        # key → bid
+        self._hash_of: dict[int, int] = {}                        # bid → key
+        self._in_use = 0
+        self.peak_in_use = 0
+        self.cow_copies = 0
+        self.prefix_block_hits = 0
+
+    # ------------------------------------------------------------- accounting
+    @property
+    def usable(self) -> int:
+        return self.n_blocks - 1
+
+    @property
+    def n_in_use(self) -> int:
+        return self._in_use
+
+    @property
+    def n_free(self) -> int:
+        """Blocks available to a fresh allocation (evictable cached ones
+        included — alloc() reclaims them LRU)."""
+        return len(self._free) + len(self._free_cached)
+
+    def utilization(self) -> float:
+        """Blocks resident (referenced) / blocks allocated (pool size)."""
+        return self.n_in_use / self.usable
+
+    # -------------------------------------------------------------- alloc/free
+    def alloc(self) -> int | None:
+        """Hand out a free block (ref=1), evicting the LRU free-cached
+        block's hash if the plain free list is empty.  None when dry."""
+        if self._free:
+            bid = self._free.popleft()
+        elif self._free_cached:
+            bid, key = self._free_cached.popitem(last=False)
+            del self._by_hash[key]
+            del self._hash_of[bid]
+        else:
+            return None
+        self.ref[bid] = 1
+        self._in_use += 1
+        self.peak_in_use = max(self.peak_in_use, self._in_use)
+        return bid
+
+    def free(self, bid: int) -> None:
+        """Drop one reference; at zero the block parks in the prefix cache
+        (if registered) or returns to the free list."""
+        assert bid != NULL_BLOCK and self.ref[bid] > 0, (bid, self.ref[bid])
+        self.ref[bid] -= 1
+        if self.ref[bid] == 0:
+            self._in_use -= 1
+            key = self._hash_of.get(bid)
+            if key is not None:
+                # fresh insertion lands at the OrderedDict's end — the
+                # LRU eviction order — since a block cannot already be
+                # parked while its ref count was > 0
+                self._free_cached[bid] = key
+            else:
+                self._free.append(bid)
+
+    # ------------------------------------------------------------ prefix cache
+    def register(self, bid: int, key: int) -> None:
+        """Publish an in-use block's content hash for future prefix hits.
+        First writer wins: an already-registered key keeps its block."""
+        assert self.ref[bid] > 0, bid
+        if key in self._by_hash:
+            return
+        self._by_hash[key] = bid
+        self._hash_of[bid] = key
+
+    def lookup(self, key: int) -> int | None:
+        """Prefix hit: take a reference on the block registered under
+        ``key`` (reviving it from the free-cached pool if parked)."""
+        bid = self._by_hash.get(key)
+        if bid is None:
+            return None
+        if self.ref[bid] == 0:
+            del self._free_cached[bid]
+            self._in_use += 1
+        self.ref[bid] += 1
+        self.peak_in_use = max(self.peak_in_use, self._in_use)
+        self.prefix_block_hits += 1
+        return bid
+
+    def peek(self, keys: list[int]) -> tuple[int, int]:
+        """(hit prefix length, hits currently parked free-cached) for an
+        admission-time block budget — no state change."""
+        n_hit = revivals = 0
+        for key in keys:
+            bid = self._by_hash.get(key)
+            if bid is None:
+                break
+            n_hit += 1
+            if self.ref[bid] == 0:
+                revivals += 1
+        return n_hit, revivals
+
+    def blocks_needed(self, n_tokens: int, keys: list[int] | None = None) -> int:
+        """Fresh blocks a prompt admission would consume (prefix-cache
+        revivals also come out of the free pool, so they count)."""
+        nb = -(-n_tokens // self.block_size)
+        if keys is None:
+            return nb
+        n_hit, revivals = self.peek(keys[:nb])
+        return nb - n_hit + revivals

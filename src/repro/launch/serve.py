@@ -35,6 +35,11 @@ def main() -> None:
     ap.add_argument("--capacity", type=int, default=128)
     ap.add_argument("--model-axis", type=int, default=1)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--paged", action="store_true",
+                    help="block-pool KV cache (prefix sharing + preemption)")
+    ap.add_argument("--block-size", type=int, default=16)
+    ap.add_argument("--pool-blocks", type=int, default=0,
+                    help="pool size in blocks; 0 = worst-case default")
     args = ap.parse_args()
 
     cfg = reduced_config(args.arch) if args.reduced else get_config(args.arch)
@@ -44,8 +49,17 @@ def main() -> None:
         pol = PolicyConfig(
             kind=args.policy, budget=args.budget, group=args.group,
             skip_layers=1 if args.reduced else 2,
+            fused=args.paged, paged=args.paged,
+            block_size=args.block_size, pool_blocks=args.pool_blocks,
+        )
+    elif args.paged:
+        pol = PolicyConfig(
+            kind="full", paged=True, block_size=args.block_size,
+            pool_blocks=args.pool_blocks,
         )
     dcfg = DistConfig(mesh=mesh, batch_axes=batch_axes(mesh))
+    if args.paged:
+        dcfg = DistConfig(mesh=None)  # paged + seq-sharding: follow-up PR
     bundle = build_model(cfg, pol, dcfg, max_positions=args.capacity)
     params = bundle.init(jax.random.PRNGKey(args.seed))
 
@@ -59,13 +73,16 @@ def main() -> None:
     out = sched.run(reqs)
     wall = time.time() - t0
     total_tokens = sum(len(v) for v in out.values())
-    print(json.dumps({
+    report = {
         "arch": cfg.name, "policy": args.policy, "requests": len(reqs),
         "tokens": total_tokens, "wall_s": round(wall, 2),
         "tok_per_s": round(total_tokens / wall, 1),
         "decode_steps": sched.steps,
         "mean_occupancy": round(sched.mean_occupancy, 2),
-    }))
+    }
+    if args.paged:
+        report.update(sched.engine.pool_stats(), preemptions=sched.preemptions)
+    print(json.dumps(report))
 
 
 if __name__ == "__main__":

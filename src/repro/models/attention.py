@@ -22,6 +22,7 @@ from repro.core import distributed as dist
 from repro.core import policy as core_policy
 from repro.core.policy import PolicyConfig
 from repro.kvcache import cache as kvcache
+from repro.kvcache import paged as kvcache_paged
 
 from .layers import apply_rope, flash_attention, init_linear, wuse
 
@@ -143,12 +144,19 @@ def decode_self_attention(
     dcfg: DistConfig | None = None,
     *,
     update_meta: bool = True,
+    block_table: jax.Array | None = None,
 ) -> tuple[jax.Array, dict]:
     """One-token decode self-attention with cache append + policy selection.
 
     x: [B, 1, d]; layer_cache: {k, v[, meta]} (single layer, no L axis);
     length: [B] current lengths (the new token is written at ``length``).
     Returns (out [B, 1, d], updated layer_cache).
+
+    ``block_table`` [B, n_btab] switches the layer to the *paged* cache:
+    layer_cache holds block-pool slabs [N, bs, Hkv, D] (+ paged side-car)
+    shared by all requests, the append and the metadata refresh write
+    through the table, and attention dispatches to the page-table-aware
+    kernels (``core.policy.decode_attention_paged``).
 
     When the cache is sequence-sharded (dcfg.seq_axes), the append, the
     metadata refresh AND the attention all run inside one shard_map — a
@@ -160,6 +168,30 @@ def decode_self_attention(
     q, k_new, v_new = qkv_proj(p, x, cfg, positions=length[:, None])
     qh = q.reshape(B, cfg.n_heads, cfg.d_head)
     meta = layer_cache.get("meta")
+
+    if block_table is not None:
+        if dcfg is not None and dcfg.seq_axes:
+            raise ValueError(
+                "paged KV cache + sequence-sharded decode is not supported "
+                "yet (sharded pools are a planned follow-up)"
+            )
+        k_pool, v_pool = kvcache_paged.paged_append_kv(
+            layer_cache["k"], layer_cache["v"], k_new, v_new,
+            block_table, length,
+        )
+        if meta is not None and update_meta:
+            meta = kvcache_paged.paged_append_token_metadata(
+                meta, k_pool, block_table, length, pol
+            )
+        out = core_policy.decode_attention_paged(
+            qh, k_pool, v_pool, meta, block_table, pol, length + 1,
+            layer=pol.skip_layers,
+        )
+        new_cache = dict(layer_cache, k=k_pool, v=v_pool)
+        if meta is not None:
+            new_cache["meta"] = meta
+        y = out.reshape(B, 1, cfg.n_heads * cfg.d_head) @ wuse(p["wo"], 0).astype(x.dtype)
+        return y, new_cache
 
     if dcfg is not None and dcfg.seq_axes:
         if pol.fused:

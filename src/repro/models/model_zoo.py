@@ -17,6 +17,11 @@ def build_model(
     remat: bool = True,
     max_positions: int | None = None,
 ) -> ModelBundle:
+    if pol is not None and pol.paged and cfg.family not in ("dense", "moe", "vlm"):
+        raise ValueError(
+            f"paged KV cache is only supported for transformer families, "
+            f"not {cfg.family!r}"
+        )
     if cfg.family in ("dense", "moe", "vlm"):
         return transformer.build(cfg, pol, dcfg, remat=remat)
     if cfg.family == "ssm":

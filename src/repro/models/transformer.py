@@ -25,6 +25,7 @@ import jax.numpy as jnp
 from repro.configs.base import ModelConfig, padded_vocab
 from repro.core.policy import PolicyConfig
 from repro.kvcache import cache as kvcache
+from repro.kvcache import paged as kvcache_paged
 
 from . import attention as attn
 from . import moe as moe_mod
@@ -43,6 +44,9 @@ class ModelBundle:
     decode_step: Callable         # (params, token [B], cache) -> (logits, cache)
     init_cache: Callable          # (B, capacity, length) -> cache
     param_count: Callable
+    policy: "PolicyConfig | None" = None  # the cache policy the bundle was
+                                          # built with (engine introspects
+                                          # paged/block_size from here)
 
 
 def _dtype(name: str):
@@ -191,6 +195,29 @@ def build(
         return {"front": front, "rest": rest, "length": lengths}
 
     def init_cache(B, capacity, length):
+        if pol.paged:
+            # one block pool shared by every request: a physical block id
+            # indexes the same row of every layer's pool slab, and the
+            # per-request [B, capacity/bs] block table (all-zeros = the
+            # reserved null block) is the only per-slot state
+            bs = pol.block_size
+            if capacity % bs:
+                raise ValueError(
+                    f"capacity {capacity} not divisible by block_size {bs}"
+                )
+            n_btab = capacity // bs
+            n_blocks = pol.pool_blocks or (B * n_btab + 1)
+            return {
+                "front": kvcache_paged.init_paged_pool(
+                    skip, n_blocks, bs, cfg.n_kv_heads, cfg.d_head, None
+                ),
+                "rest": kvcache_paged.init_paged_pool(
+                    cfg.n_layers - skip, n_blocks, bs, cfg.n_kv_heads,
+                    cfg.d_head, pol if pol.kind != "full" else None,
+                ),
+                "length": jnp.full((B,), length, jnp.int32),
+                "block_table": jnp.zeros((B, n_btab), jnp.int32),
+            }
         c = {
             "front": kvcache.init_layer_cache(
                 skip, B, capacity, cfg.n_kv_heads, cfg.d_head, None
@@ -206,6 +233,10 @@ def build(
     # -------------------------------------------------------------- decode
     def decode_step(params, token, cache):
         length = cache["length"]
+        # paged mode: the per-request block table rides in the cache
+        # pytree (host-updated between steps by the engine's allocator)
+        # and is closed over by both layer scans — it has no layer axis
+        block_table = cache.get("block_table") if pol.paged else None
         x = jnp.take(params["embed"], token, axis=0)[:, None, :].astype(cdt)
         B = x.shape[0]
 
@@ -215,6 +246,7 @@ def build(
                 o, lc = attn.decode_self_attention(
                     lp["attn"], apply_norm(h, lp["norm1"], cfg.norm), lc, length,
                     cfg, policy_cfg, dcfg if use_dist else None,
+                    block_table=block_table,
                 )
                 h = h + o
                 y, _ = _ffn(lp, apply_norm(h, lp["norm2"], cfg.norm), B, 1, "decode")
@@ -237,6 +269,8 @@ def build(
             "rest": rest_cache,
             "length": length + 1,
         }
+        if block_table is not None:
+            new_cache["block_table"] = block_table
         return logits, new_cache
 
     return ModelBundle(
@@ -247,6 +281,7 @@ def build(
         decode_step=decode_step,
         init_cache=init_cache,
         param_count=cfg.param_count,
+        policy=pol,
     )
 
 

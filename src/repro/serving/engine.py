@@ -14,18 +14,35 @@ Slot insertion runs a B=1 prefill and scatters the resulting cache into
 the batched cache; the batch axis of every cache leaf is discovered
 automatically by diffing ``init_cache`` shapes at two batch sizes (no
 per-model bookkeeping).
+
+Paged mode (``Engine.build(..., paged=True)``; DESIGN.md §Paged KV
+cache): the cache is a shared block pool + per-request block tables, the
+engine owns the host-side ``BlockAllocator`` (prefix sharing via chained
+block hashes, full-prompt hits skip prefill entirely, copy-on-write on
+shared tails), and insertion scatters the prefilled slab block-wise into
+the pool — HBM is bounded by tokens resident, not slots × capacity.
 """
 from __future__ import annotations
 
 import dataclasses
+from collections import OrderedDict
 from functools import partial
 from typing import Any
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.policy import PolicyConfig
+from repro.kvcache.paged import (
+    NULL_BLOCK,
+    BlockAllocator,
+    SeqBlocks,
+    block_hash_chain,
+)
 from repro.models.model_zoo import ModelBundle
+
+MAX_CACHED_PROMPT_LOGITS = 1024  # LRU bound on the full-prompt logits cache
 
 
 def serving_policy(
@@ -102,7 +119,8 @@ class Engine:
         # fallback sampling rng: split per decode call so stochastic
         # sampling never reuses a key (callers may still pass rng=...)
         self._rng = jax.random.PRNGKey(seed)
-        self._batch_axes = _cache_batch_axes(bundle, capacity)
+        pol = bundle.policy
+        self.paged = bool(pol is not None and pol.paged)
         self._prefill = jax.jit(partial(bundle.prefill, capacity=capacity))
         donate = (2,) if donate_cache else ()
         self._decode = jax.jit(bundle.decode_step, donate_argnums=donate)
@@ -116,7 +134,44 @@ class Engine:
             return logits, new_cache
 
         self._decode_active = jax.jit(_decode_active_impl, donate_argnums=donate)
-        self._insert = jax.jit(self._insert_impl, donate_argnums=(0,))
+
+        if self.paged:
+            # paged mode: slot insertion scatters prefix blocks into the
+            # shared pool through the allocator instead of writing one
+            # batch row, so the batch-axis discovery is neither possible
+            # (pool leaves have no batch axis) nor needed
+            self.block_size = pol.block_size
+            if capacity % self.block_size:
+                raise ValueError(
+                    f"capacity {capacity} not divisible by "
+                    f"block_size {self.block_size}"
+                )
+            self.n_btab = capacity // self.block_size
+            self.pool_blocks = pol.pool_blocks or (n_slots * self.n_btab + 1)
+            if self.pool_blocks - 1 < self.n_btab:
+                raise ValueError(
+                    f"pool_blocks={self.pool_blocks} cannot hold one "
+                    f"worst-case context ({self.n_btab} blocks + null): a "
+                    f"lone request could deadlock the scheduler"
+                )
+            self.allocator = BlockAllocator(self.pool_blocks, self.block_size)
+            self._seq: dict[int, SeqBlocks] = {}
+            self._prompt_logits: OrderedDict[int, np.ndarray] = OrderedDict()
+            self.prefill_count = 0
+            self.prefix_hits = 0
+            self._paged_scatter = jax.jit(
+                self._paged_scatter_impl, donate_argnums=(0,)
+            )
+            self._set_slot_state = jax.jit(
+                self._set_slot_state_impl, donate_argnums=(0,)
+            )
+            self._set_table_entry = jax.jit(
+                self._set_table_entry_impl, donate_argnums=(0,)
+            )
+            self._copy_block = jax.jit(self._copy_block_impl, donate_argnums=(0,))
+        else:
+            self._batch_axes = _cache_batch_axes(bundle, capacity)
+            self._insert = jax.jit(self._insert_impl, donate_argnums=(0,))
 
     @classmethod
     def build(
@@ -127,13 +182,23 @@ class Engine:
         capacity: int,
         policy: PolicyConfig | None = None,
         sampling: SamplingConfig = SamplingConfig(),
+        paged: bool = False,
+        block_size: int = 32,
+        pool_blocks: int = 0,
         **build_kwargs,
     ) -> "Engine":
         """Build bundle + engine with the serving defaults: when ``policy``
         is None the fused FIER fast path (``serving_policy()``) is used,
         with the budget clamped to ``capacity`` (a budget larger than the
         cache would otherwise fail the kernel's budget ≤ S check at the
-        first decode step)."""
+        first decode step).
+
+        ``paged=True`` switches the cache to the block-pool layout
+        (``pool_blocks`` physical blocks of ``block_size`` tokens, prefix
+        sharing + copy-on-write; see DESIGN.md §Paged KV cache), so HBM
+        is bounded by *tokens resident* instead of n_slots × worst-case
+        capacity.  ``pool_blocks=0`` keeps the worst-case pool size (no
+        memory saving, useful for A/B testing the layouts)."""
         from repro.models import build_model
 
         if policy is not None:
@@ -141,15 +206,32 @@ class Engine:
         else:
             base = serving_policy()
             pol = dataclasses.replace(base, budget=min(base.budget, capacity))
+        if paged and not pol.paged:
+            pol = dataclasses.replace(
+                pol, paged=True, block_size=block_size, pool_blocks=pool_blocks
+            )
         bundle = build_model(cfg, pol, **build_kwargs)
         return cls(bundle, n_slots=n_slots, capacity=capacity, sampling=sampling)
 
     # ------------------------------------------------------------ lifecycle
     def new_cache(self, length: int = 0):
+        if self.paged:
+            # the pool restarts empty: reset the allocator and drop the
+            # prompt caches (their contents describe the old pool / the
+            # params used with it)
+            self.allocator = BlockAllocator(self.pool_blocks, self.block_size)
+            self._seq = {}
+            self._prompt_logits = OrderedDict()
         return self.bundle.init_cache(self.n_slots, self.capacity, length)
 
     def prefill_batch(self, params, batch):
         """Whole-batch prefill (offline / static batching path)."""
+        if self.paged:
+            raise NotImplementedError(
+                "paged engines insert requests one by one (Engine.insert / "
+                "ContinuousScheduler); whole-batch prefill returns a slab "
+                "cache the paged decode step cannot consume"
+            )
         return self._prefill(params, batch)
 
     def _insert_impl(self, batched_cache, single_cache, slot):
@@ -160,12 +242,216 @@ class Engine:
 
     def insert(self, params, batched_cache, tokens_1xS, length: int, slot: int, extras=None):
         """Prefill one request and place it into ``slot``.  Returns
-        (first sampled token logits, updated batched cache)."""
+        (first sampled token logits, updated batched cache).
+
+        Paged mode: allocates/shares blocks through the allocator; a
+        full-prompt prefix hit skips the prefill computation entirely
+        (the first-token logits are replayed from the prompt cache)."""
+        if self.paged:
+            return self._insert_paged(
+                params, batched_cache, tokens_1xS, length, slot, extras
+            )
         batch = {"tokens": tokens_1xS, "lengths": jnp.array([length], jnp.int32)}
         if extras:
             batch.update(extras)
         logits, single = self._prefill(params, batch)
         return logits, self._insert(batched_cache, single, jnp.int32(slot))
+
+    # ------------------------------------------------------- paged lifecycle
+    def _paged_scatter_impl(self, cache, single, row, wmask, slot, length):
+        """Scatter a prefilled single-request slab cache into the pool.
+
+        ``row`` [n_btab] int32: this request's physical block ids (null-
+        padded); ``wmask`` [n_btab] bool: which of them to actually write
+        (False = prefix-shared block, its identical contents are already
+        resident — the write is redirected to the null block).
+        """
+        ids = jnp.where(wmask, row, NULL_BLOCK)
+
+        def put(pool, slab):
+            # pool [L, N, pb, ...]; slab [L, 1, n_btab·pb, ...]
+            L, _, pb = pool.shape[:3]
+            blocks = slab.reshape(L, -1, pb, *pool.shape[3:])
+            return pool.at[:, ids].set(blocks.astype(pool.dtype))
+
+        pools = {"front": cache["front"], "rest": cache["rest"]}
+        slabs = {"front": single["front"], "rest": single["rest"]}
+        out = jax.tree.map(put, pools, slabs)
+        return dict(
+            cache,
+            front=out["front"],
+            rest=out["rest"],
+            block_table=cache["block_table"].at[slot].set(row),
+            length=cache["length"].at[slot].set(length),
+        )
+
+    def _set_slot_state_impl(self, cache, slot, row, length):
+        return dict(
+            cache,
+            block_table=cache["block_table"].at[slot].set(row),
+            length=cache["length"].at[slot].set(length),
+        )
+
+    def _set_table_entry_impl(self, cache, slot, j, bid):
+        return dict(
+            cache, block_table=cache["block_table"].at[slot, j].set(bid)
+        )
+
+    def _copy_block_impl(self, cache, src, dst):
+        """Copy-on-write: duplicate pool block ``src`` into ``dst`` across
+        every layer of every pool leaf (K/V and the code side-car)."""
+
+        def cp(pool):
+            return pool.at[:, dst].set(pool[:, src])
+
+        return dict(
+            cache,
+            front=jax.tree.map(cp, cache["front"]),
+            rest=jax.tree.map(cp, cache["rest"]),
+        )
+
+    def _insert_paged(self, params, cache, tokens_1xS, length, slot, extras):
+        toks = [int(t) for t in np.asarray(tokens_1xS)[0, :length]]
+        keys = block_hash_chain(toks, self.block_size)
+        nb = len(keys)
+        if nb > self.n_btab:
+            raise ValueError(
+                f"prompt of {length} tokens exceeds capacity {self.capacity}"
+            )
+        if slot in self._seq:
+            raise ValueError(f"slot {slot} still holds blocks; release first")
+        # longest shared prefix: take a reference on every hit block
+        blocks: list[int] = []
+        for key in keys:
+            bid = self.allocator.lookup(key)
+            if bid is None:
+                break
+            blocks.append(bid)
+        n_hit = len(blocks)
+        # empty prompt: no blocks, no hash chain — prefill runs, nothing
+        # is registered or replayed
+        full_key = keys[-1] if keys else None
+        row = np.zeros((self.n_btab,), np.int32)
+
+        if keys and n_hit == nb and full_key in self._prompt_logits:
+            # full-prompt hit: every block is resident and the first-token
+            # logits are cached — no prefill FLOPs at all
+            self.prefix_hits += 1
+            self._prompt_logits.move_to_end(full_key)
+            row[:nb] = blocks
+            cache = self._set_slot_state(
+                cache, jnp.int32(slot), jnp.asarray(row), jnp.int32(length)
+            )
+            self._seq[slot] = SeqBlocks(blocks=blocks, length=length)
+            return jnp.asarray(self._prompt_logits[full_key]), cache
+
+        for _ in range(n_hit, nb):
+            bid = self.allocator.alloc()
+            if bid is None:
+                for b in blocks:
+                    self.allocator.free(b)
+                raise RuntimeError(
+                    "block pool exhausted during insert — admit on "
+                    "Engine.blocks_needed() <= Engine.free_blocks first"
+                )
+            blocks.append(bid)
+        batch = {"tokens": tokens_1xS, "lengths": jnp.array([length], jnp.int32)}
+        if extras:
+            batch.update(extras)
+        logits, single = self._prefill(params, batch)
+        self.prefill_count += 1
+        row[:nb] = blocks
+        wmask = np.zeros((self.n_btab,), bool)
+        wmask[n_hit:nb] = True
+        cache = self._paged_scatter(
+            cache, {"front": single["front"], "rest": single["rest"]},
+            jnp.asarray(row), jnp.asarray(wmask), jnp.int32(slot),
+            jnp.int32(length),
+        )
+        for i in range(n_hit, nb):
+            self.allocator.register(blocks[i], keys[i])
+        if full_key is not None:
+            self._prompt_logits[full_key] = np.asarray(logits)
+            while len(self._prompt_logits) > MAX_CACHED_PROMPT_LOGITS:
+                self._prompt_logits.popitem(last=False)
+        self._seq[slot] = SeqBlocks(blocks=blocks, length=length)
+        return logits, cache
+
+    @property
+    def free_blocks(self) -> int:
+        return self.allocator.n_free
+
+    def blocks_needed(self, tokens) -> int:
+        """Fresh pool blocks an admission of ``tokens`` would consume
+        (prefix-cache hits subtracted, free-cached revivals charged)."""
+        keys = block_hash_chain(tokens, self.block_size)
+        return self.allocator.blocks_needed(len(tokens), keys)
+
+    def advance_slot(self, cache, slot: int):
+        """Guarantee the next decode write of ``slot`` lands in a private,
+        allocated block: allocate a fresh tail block on a block boundary,
+        or copy-on-write a shared tail.  Returns (ok, cache); ok=False
+        means the pool is dry — the caller preempts someone and retries.
+        Must be called once per running slot before every decode step.
+        """
+        seq = self._seq[slot]
+        pos = seq.length
+        if pos >= self.capacity:
+            # at capacity: the write routes to the null block; the
+            # scheduler retires the request at this boundary
+            return True, cache
+        j, off = divmod(pos, self.block_size)
+        if off == 0:
+            bid = self.allocator.alloc()
+            if bid is None:
+                return False, cache
+            seq.blocks.append(bid)
+            cache = self._set_table_entry(
+                cache, jnp.int32(slot), jnp.int32(j), jnp.int32(bid)
+            )
+        else:
+            b = seq.blocks[j]
+            if self.allocator.ref[b] > 1:
+                bid = self.allocator.alloc()
+                if bid is None:
+                    return False, cache
+                cache = self._copy_block(cache, jnp.int32(b), jnp.int32(bid))
+                self.allocator.free(b)
+                self.allocator.cow_copies += 1
+                seq.blocks[j] = bid
+                cache = self._set_table_entry(
+                    cache, jnp.int32(slot), jnp.int32(j), jnp.int32(bid)
+                )
+        seq.length = pos + 1
+        return True, cache
+
+    def release_slot(self, cache, slot: int):
+        """Free a retired/preempted slot: drop the block references (hash-
+        registered blocks park in the prefix cache) and zero the table
+        row, so the slot's scratch decode writes hit the null block."""
+        seq = self._seq.pop(slot, None)
+        if seq is not None:
+            for b in seq.blocks:
+                self.allocator.free(b)
+            cache = self._set_slot_state(
+                cache, jnp.int32(slot),
+                jnp.zeros((self.n_btab,), jnp.int32), jnp.int32(0),
+            )
+        return cache
+
+    def pool_stats(self) -> dict:
+        """Blocks resident / allocated, peak, sharing and CoW counters."""
+        a = self.allocator
+        return dict(
+            blocks_in_use=a.n_in_use,
+            blocks_allocated=a.usable,
+            utilization=a.utilization(),
+            peak_in_use=a.peak_in_use,
+            prefix_block_hits=a.prefix_block_hits,
+            cow_copies=a.cow_copies,
+            prefix_hits=self.prefix_hits,
+            prefills=self.prefill_count,
+        )
 
     def decode(self, params, tokens, cache, active=None, rng=None):
         """One decode step for all slots; inactive slots don't advance.
@@ -196,6 +482,12 @@ class Engine:
         ``max_new`` tokens.  prompts [B, S]; returns tokens [B, max_new].
         Without an explicit ``rng``, each call draws a fresh key off the
         engine rng (same contract as ``decode``)."""
+        if self.paged:
+            raise NotImplementedError(
+                "paged engines generate through the ContinuousScheduler "
+                "(per-request insert + block accounting), not the "
+                "static-batch generate path"
+            )
         if rng is None:
             self._rng, rng = jax.random.split(self._rng)
         batch = {"tokens": prompts, "lengths": lengths}

@@ -6,16 +6,30 @@ call.  Straggler note (DESIGN.md §4): at pod scale the per-step barrier is
 the decode psum; a slow host shows up as step-time EWMA inflation, which
 ``repro.runtime.fault.StragglerMonitor`` watches — the same monitor object
 is reused here.
+
+Paged engines change the admission contract: a request is admitted when a
+*slot* is free AND the block pool can hold its prompt (prefix-cache hits
+discounted) — batch size is bounded by tokens actually resident, not by
+n_slots × worst-case capacity.  When the pool runs dry mid-decode (a
+running request needs a fresh tail block and none is free), the scheduler
+**preempts** the youngest running request: its blocks are freed and it is
+re-queued at the head with its generated tokens folded into the prompt,
+so the re-admission prefill recomputes the identical continuation (greedy
+decoding: bit-identical outputs with or without preemption — covered in
+tests/test_paged.py).
 """
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from collections import deque
 from typing import Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from . import engine as engine_mod
 
 
 @dataclasses.dataclass
@@ -26,6 +40,7 @@ class Request:
     eos: int | None = None
     out: list[int] = dataclasses.field(default_factory=list)
     done: bool = False
+    rejected: bool = False          # prompt longer than engine capacity
 
 
 class ContinuousScheduler:
@@ -40,18 +55,53 @@ class ContinuousScheduler:
         self.params = params
         self.pad = pad_prompt_to
         self.free = list(range(engine.n_slots))
-        self.running: dict[int, Request] = {}   # slot → request
+        self.running: dict[int, Request] = {}   # slot → request, admission order
         self.steps = 0
         self.occupancy: list[int] = []
-        # sampling rng, split once per decode step: consecutive steps of a
-        # temperature > 0 deployment draw from distinct keys
+        self.preemptions = 0
+        # sampling rng, split once per admission/decode step: every sampled
+        # token — including the prefill-produced first token — draws from
+        # this stream (the old _admit always took argmax(logits), so
+        # temperature > 0 deployments sampled the first token greedily)
         self._rng = rng if rng is not None else jax.random.PRNGKey(0)
+
+    def _sample(self, logits) -> int:
+        self._rng, k = jax.random.split(self._rng)
+        return int(engine_mod.sample_token(k, logits, self.engine.sampling)[0])
+
+    def _release(self, cache, slot: int):
+        if self.engine.paged:
+            cache = self.engine.release_slot(cache, slot)
+        self.free.append(slot)
+        return cache
 
     def _admit(self, queue: deque[Request], cache, cur_tokens):
         while queue and self.free:
+            req = queue[0]
+            # preempted requests carry their generated tokens: the
+            # re-admission prompt is prompt + out so prefill recomputes
+            # the cache the preemption dropped
+            toks_list = req.tokens + req.out
+            if len(toks_list) > self.engine.capacity:
+                # a longer prompt would write out of range (the slab
+                # path's dynamic_update_slice silently clamps onto live
+                # rows): reject instead of corrupting the cache
+                queue.popleft()
+                warnings.warn(
+                    f"request {req.rid}: prompt of {len(toks_list)} tokens "
+                    f"exceeds engine capacity {self.engine.capacity}; rejected"
+                )
+                req.done = True
+                req.rejected = True
+                continue
+            if (
+                self.engine.paged
+                and self.engine.blocks_needed(toks_list) > self.engine.free_blocks
+            ):
+                break  # pool full: wait for running requests to retire
             slot = self.free.pop()
-            req = queue.popleft()
-            toks = np.asarray(req.tokens, np.int32)
+            queue.popleft()
+            toks = np.asarray(toks_list, np.int32)
             S = self.pad or len(toks)
             S = max(S, len(toks))
             padded = np.zeros((1, S), np.int32)
@@ -59,16 +109,50 @@ class ContinuousScheduler:
             logits, cache = self.engine.insert(
                 self.params, cache, jnp.asarray(padded), len(toks), slot
             )
-            first = int(jnp.argmax(logits[0]))
+            first = self._sample(logits)
             req.out.append(first)
             # the prefill-produced token counts: check termination before
-            # the slot ever decodes
-            if len(req.out) >= req.max_new or (req.eos is not None and first == req.eos):
+            # the slot ever decodes.  at_capacity: a full-capacity prompt
+            # has nowhere to write the next token's KV — retire now rather
+            # than let the first decode step write out of range
+            at_capacity = (
+                len(req.tokens) + len(req.out) - 1 >= self.engine.capacity
+            )
+            if (
+                len(req.out) >= req.max_new
+                or (req.eos is not None and first == req.eos)
+                or at_capacity
+            ):
                 req.done = True
-                self.free.append(slot)
+                cache = self._release(cache, slot)
                 continue
             cur_tokens[slot] = first
             self.running[slot] = req
+        return cache
+
+    def _preempt_youngest(self, queue: deque[Request], cache) -> tuple[int, Any]:
+        """Free the most recently admitted running request and push it
+        back to the queue head (its generated tokens become prompt suffix
+        on re-admission).  Returns (victim slot, cache)."""
+        slot = next(reversed(self.running))
+        req = self.running.pop(slot)
+        cache = self._release(cache, slot)
+        queue.appendleft(req)
+        self.preemptions += 1
+        return slot, cache
+
+    def _ensure_append_capacity(self, queue: deque[Request], cache):
+        """Paged: every running slot must own a writable tail block before
+        the decode step (fresh block on a boundary, copy-on-write on a
+        shared tail).  Preempts youngest-first while the pool is dry."""
+        for slot in list(self.running):
+            while slot in self.running:
+                ok, cache = self.engine.advance_slot(cache, slot)
+                if ok:
+                    break
+                victim, cache = self._preempt_youngest(queue, cache)
+                # if the dry slot itself was youngest, it is preempted
+                # and the loop guard exits; it re-admits from the queue
         return cache
 
     def run(self, requests: Sequence[Request]) -> dict[int, list[int]]:
@@ -79,6 +163,21 @@ class ContinuousScheduler:
         cur = np.zeros((self.engine.n_slots,), np.int32)
         cache = self._admit(queue, cache, cur)
         while self.running or queue:
+            if not self.running:
+                # everything got preempted/retired while the queue head
+                # waited on blocks; with the pool now empty it must fit
+                cache = self._admit(queue, cache, cur)
+                if not self.running:
+                    if queue:
+                        raise RuntimeError(
+                            "scheduler stalled: queued request cannot be "
+                            "admitted into an empty engine"
+                        )
+                    break
+            if self.engine.paged:
+                cache = self._ensure_append_capacity(queue, cache)
+                if not self.running:
+                    continue
             active_np = np.zeros((self.engine.n_slots,), bool)
             for s in self.running:
                 active_np[s] = True
@@ -94,10 +193,17 @@ class ContinuousScheduler:
                 tok = int(nxt[slot])
                 req.out.append(tok)
                 cur[slot] = tok
-                if len(req.out) >= req.max_new or (req.eos is not None and tok == req.eos):
+                at_capacity = (
+                    len(req.tokens) + len(req.out) - 1 >= self.engine.capacity
+                )
+                if (
+                    len(req.out) >= req.max_new
+                    or (req.eos is not None and tok == req.eos)
+                    or at_capacity
+                ):
                     req.done = True
                     del self.running[slot]
-                    self.free.append(slot)
+                    cache = self._release(cache, slot)
             cache = self._admit(queue, cache, cur)
         return {r.rid: r.out for r in requests}
 
