@@ -54,17 +54,23 @@ def gather_copy_bytes(cfg, budget: int, B: int, n_sparse: int) -> int:
     return 2 * budget * cfg.n_kv_heads * cfg.d_head * 2 * B * n_sparse
 
 
+def _fier_slab_pipelines():
+    """The registered (slab) fier pipelines, straight off the backend's
+    capability matrix — new pipelines benchmark without editing this file."""
+    from repro.core.policy import get_backend
+
+    return sorted(p for lo, p in get_backend("fier").supports if lo == "slab")
+
+
 def run():
     cfg, params = train_tiny_lm("lm")
     params = jax.tree.map(jnp.asarray, params)
     B = 4
     budget = 64
-    variants = (
-        ("full", dict(kind="full")),
-        ("fier", dict(kind="fier")),
-        ("fier_fused", dict(kind="fier", fused=True, one_pass=False)),
-        ("fier_onepass", dict(kind="fier", fused=True, one_pass=True)),
-    )
+    variants = [("full", dict(kind="full"))] + [
+        (f"fier_{p}", dict(kind="fier", pipeline=p))
+        for p in _fier_slab_pipelines()
+    ]
     for S in (512, 1024, 2048):
         tok = jnp.zeros((B,), jnp.int32)
         gbytes = {}
@@ -82,12 +88,11 @@ def run():
         # unfused − fused == the analytic gather bytes (embedding-lookup
         # gathers etc. are common to both and cancel)
         copies = gather_copy_bytes(cfg, budget, B, cfg.n_layers - 1)
+        eliminated = gbytes["fier_reference"] - gbytes["fier_one_pass"]
         emit(
             f"decode_gather_bytes_ctx{S}", 0.0,
-            f"unfused={gbytes['fier']:.0f} fused={gbytes['fier_fused']:.0f} "
-            f"onepass={gbytes['fier_onepass']:.0f} "
-            f"eliminated={gbytes['fier'] - gbytes['fier_onepass']:.0f} "
-            f"analytic_kv_copies={copies}",
+            " ".join(f"{n}={v:.0f}" for n, v in sorted(gbytes.items()))
+            + f" eliminated={eliminated:.0f} analytic_kv_copies={copies}",
         )
         # the one-pass retrieval kernel must additionally eliminate the
         # f32 score-tensor round trip between scoring and selection
@@ -114,18 +119,37 @@ def smoke():
     full ≥ 2·4·Hq·S round trip) at a tiny config — the perf property is
     *gated*, not just benchmarked.  No model training involved.
 
-    The paged step asserts the same contract for the page-table-aware
-    one-pass pipeline: walking the block table in-kernel must not
-    reintroduce any score-tensor (or logical-slab) HBM traffic."""
+    The gate iterates the backend registry's capability matrix instead
+    of hard-coding variant names: every layout the fier backend registers
+    a ``one_pass`` pipeline for is asserted zero-score-byte, so a new
+    layout cannot land without passing (or explicitly skipping) the gate."""
+    from repro.core.policy import get_backend
+
     cfg = bench_model_cfg()
-    sb = emit_score_traffic(cfg.n_heads, cfg.n_kv_heads, cfg.d_head,
-                            budget=32, B=1, S=256, check=True)
-    psb = emit_paged_score_traffic(cfg.n_heads, cfg.n_kv_heads, cfg.d_head,
-                                   budget=32, B=1, S=256, block_size=32,
-                                   check=True)
-    emit("bench_smoke_ok", 0.0,
-         f"one_pass=0 paged_one_pass={psb:.0f} "
-         f"two_pass={sb['two_pass']:.0f} unfused={sb['unfused']:.0f}")
+    parts = []
+    one_pass_layouts = sorted(
+        lo for lo, p in get_backend("fier").supports if p == "one_pass"
+    )
+    assert one_pass_layouts, "fier registers no one_pass pipeline?"
+    for layout in one_pass_layouts:
+        if layout == "slab":
+            sb = emit_score_traffic(cfg.n_heads, cfg.n_kv_heads, cfg.d_head,
+                                    budget=32, B=1, S=256, check=True)
+            parts.append(
+                " ".join(f"slab_{p}={sb[p]:.0f}" for p in sorted(sb))
+            )
+        elif layout == "paged":
+            psb = emit_paged_score_traffic(
+                cfg.n_heads, cfg.n_kv_heads, cfg.d_head,
+                budget=32, B=1, S=256, block_size=32, check=True,
+            )
+            parts.append(f"paged_onepass={psb:.0f}")
+        else:
+            raise AssertionError(
+                f"fier registers one_pass for unknown layout {layout!r}: "
+                f"extend the smoke gate"
+            )
+    emit("bench_smoke_ok", 0.0, " ".join(parts))
 
 
 def main():

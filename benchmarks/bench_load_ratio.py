@@ -26,7 +26,6 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import quantize as qz, quest
-from repro.core import retrieval as rt
 
 from .common import bench_model_cfg, emit, emit_paged_score_traffic, emit_score_traffic
 from .flopcount import count_fn_gather_bytes
@@ -60,7 +59,7 @@ def run():
     emit("load_ratio_pairing_g32_p16", 0.0, "both=0.125")
 
     # ------------------------------------------- attend-phase gather bytes
-    from repro.kernels import ops as kops
+    from repro.core.policy import CacheView, DecodePlan, PolicyConfig, decode_attention
 
     Bq, Sq, Hkv, Hq, Dq, g = 1, 2048, 4, 8, 64, 32
     ks = jax.random.split(jax.random.PRNGKey(1), 3)
@@ -71,21 +70,21 @@ def run():
     length = jnp.full((Bq,), Sq, jnp.int32)
     budget = 256
 
-    unfused = count_fn_gather_bytes(
-        lambda q, K, V: rt.fier_attention_decode(q, K, V, qk, budget, length),
-        q, Kc, Vc,
-    )
-    fused = count_fn_gather_bytes(
-        lambda q, K, V: kops.fused_fier_attention_decode(
-            q, K, V, qk, budget, length
-        ),
-        q, Kc, Vc,
-    )
+    pol = PolicyConfig(kind="fier", budget=budget, group=g, skip_layers=0)
+
+    def decode_with(pipeline):
+        plan = DecodePlan.build(pol, pipeline=pipeline)
+        return lambda q, K, V: decode_attention(
+            q, CacheView.slab(K, V, qk, length), plan, layer=1
+        )
+
+    unfused = count_fn_gather_bytes(decode_with("reference"), q, Kc, Vc)
+    fused = count_fn_gather_bytes(decode_with("one_pass"), q, Kc, Vc)
     copies = 2 * budget * Hkv * Dq * 2 * Bq  # K'+V' bf16, materialised once
     assert unfused >= copies, (unfused, copies)
     emit(
         "attend_gather_bytes_fused_vs_unfused", 0.0,
-        f"unfused={unfused:.0f} fused={fused:.0f} kv_copies={copies} "
+        f"reference={unfused:.0f} onepass={fused:.0f} kv_copies={copies} "
         f"eliminated={unfused - fused:.0f}",
     )
 
@@ -115,8 +114,9 @@ def pool_utilization():
     cfg = bench_model_cfg()
     capacity, bs, n_slots, pool_blocks = 64, 8, 4, 11
     pol = PolicyConfig(
-        kind="fier", budget=16, group=8, skip_layers=1, fused=True,
-        one_pass=True, paged=True, block_size=bs, pool_blocks=pool_blocks,
+        kind="fier", budget=16, group=8, skip_layers=1,
+        pipeline="one_pass", layout="paged", block_size=bs,
+        pool_blocks=pool_blocks,
     )
     bundle = build_model(cfg, pol)
     params = bundle.init(jax.random.PRNGKey(0))

@@ -67,10 +67,10 @@ def train_tiny_lm(kind: str = "lm", steps: int = 300, seq: int = 256,
 
 
 def policy_bundle(cfg, kind: str, budget: int, group: int = 8, page: int = 8,
-                  skip: int = 1, fused: bool = False, one_pass: bool = True):
+                  skip: int = 1, pipeline: str = "reference"):
     pol = None if kind == "full" else PolicyConfig(
         kind=kind, budget=budget, group=group, page=page, skip_layers=skip,
-        fused=fused, one_pass=one_pass,
+        pipeline=pipeline,
     )
     return build_model(cfg, pol)
 
@@ -79,11 +79,11 @@ def score_traffic_bytes(Hq: int, Hkv: int, D: int, *, budget: int, B: int,
                         S: int, group: int = 8, seed: int = 0) -> dict:
     """Materialised score-tensor bytes per *retrieval+attend op* (one
     layer, isolated from the model so skip-layer full attention and
-    embedding lookups don't blur the accounting) for the three fier
-    pipelines.  The one-pass path must be exactly zero."""
+    embedding lookups don't blur the accounting) for every registered
+    fier slab pipeline (registry-iterated, not hard-coded).  The
+    one-pass pipeline must be exactly zero."""
     from repro.core import quantize as qz
-    from repro.core import retrieval as rt
-    from repro.kernels import ops as kops
+    from repro.core.policy import CacheView, DecodePlan, PolicyConfig, decode_attention, get_backend
 
     from .flopcount import count_fn_score_bytes
 
@@ -93,24 +93,19 @@ def score_traffic_bytes(Hq: int, Hkv: int, D: int, *, budget: int, B: int,
     q = jax.random.normal(ks[2], (B, Hq, D))
     qk = qz.quantize(Kc.astype(jnp.float32), group)
     length = jnp.full((B,), S, jnp.int32)
-    return {
-        "unfused": count_fn_score_bytes(
-            lambda q, K, V: rt.fier_attention_decode(q, K, V, qk, budget, length),
-            S, q, Kc, Vc,
-        ),
-        "two_pass": count_fn_score_bytes(
-            lambda q, K, V: kops.fused_fier_attention_decode(
-                q, K, V, qk, budget, length, one_pass=False
+    pol = PolicyConfig(kind="fier", budget=budget, group=group, skip_layers=0)
+    out = {}
+    for layout, pipeline in sorted(get_backend("fier").supports):
+        if layout != "slab":
+            continue  # the paged matrix is gated by paged_score_traffic_bytes
+        plan = DecodePlan.build(pol, pipeline=pipeline)
+        out[pipeline] = count_fn_score_bytes(
+            lambda q, K, V, plan=plan: decode_attention(
+                q, CacheView.slab(K, V, qk, length), plan, layer=1
             ),
             S, q, Kc, Vc,
-        ),
-        "one_pass": count_fn_score_bytes(
-            lambda q, K, V: kops.fused_fier_attention_decode(
-                q, K, V, qk, budget, length, one_pass=True
-            ),
-            S, q, Kc, Vc,
-        ),
-    }
+        )
+    return out
 
 
 def emit_score_traffic(Hq: int, Hkv: int, D: int, *, budget: int, B: int,
@@ -122,13 +117,13 @@ def emit_score_traffic(Hq: int, Hkv: int, D: int, *, budget: int, B: int,
     floor = 2 * 4 * Hq * S * B  # write+read of the f32 [B, Hq, S] scores
     emit(
         f"retrieval_score_bytes_ctx{S}", 0.0,
-        f"unfused={sb['unfused']:.0f} two_pass={sb['two_pass']:.0f} "
-        f"one_pass={sb['one_pass']:.0f} floor_2x4HqS={floor}",
+        " ".join(f"{p}={sb[p]:.0f}" for p in sorted(sb))
+        + f" floor_2x4HqS={floor}",
     )
     if check:
         assert sb["one_pass"] == 0.0, sb
         assert sb["two_pass"] >= floor, (sb, floor)
-        assert sb["unfused"] > 0.0, sb
+        assert sb["reference"] > 0.0, sb
     return sb
 
 
@@ -141,7 +136,7 @@ def paged_score_traffic_bytes(Hq: int, Hkv: int, D: int, *, budget: int,
     the cache must not reintroduce any score (or logical-slab) HBM
     round trip."""
     from repro.core import quantize as qz
-    from repro.kernels import ops as kops
+    from repro.core.policy import CacheView, DecodePlan, PolicyConfig, decode_attention
 
     from .flopcount import count_fn_score_bytes
 
@@ -165,9 +160,12 @@ def paged_score_traffic_bytes(Hq: int, Hkv: int, D: int, *, budget: int,
         to_pool(qk.codes), to_pool(qk.scale), to_pool(qk.zero), group
     )
     length = jnp.full((B,), S, jnp.int32)
+    pol = PolicyConfig(kind="fier", budget=budget, group=group, skip_layers=0,
+                       block_size=block_size)
+    plan = DecodePlan.build(pol, layout="paged", pipeline="one_pass")
     return count_fn_score_bytes(
-        lambda q, kp, vp: kops.paged_fused_fier_attention_decode(
-            q, kp, vp, meta, table, budget, length
+        lambda q, kp, vp: decode_attention(
+            q, CacheView.paged(kp, vp, meta, table, length), plan, layer=1
         ),
         S, q, k_pool, v_pool,
     )
@@ -183,7 +181,7 @@ def emit_paged_score_traffic(Hq: int, Hkv: int, D: int, *, budget: int,
     )
     emit(
         f"retrieval_score_bytes_paged_ctx{S}", 0.0,
-        f"paged_one_pass={sb:.0f} block_size={block_size}",
+        f"paged_onepass={sb:.0f} block_size={block_size}",
     )
     if check:
         assert sb == 0.0, sb

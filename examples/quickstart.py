@@ -19,7 +19,10 @@ from repro.models import build_model
 def generate(bundle, params, prompt, n_new=12):
     B, S = prompt.shape
     pre = {"tokens": prompt, "lengths": jnp.full((B,), S, jnp.int32)}
-    logits, cache = jax.jit(lambda p, b: bundle.prefill(p, b, capacity=S + n_new + 8))(
+    # cache capacity must be a multiple of the FIER group (the 1-bit
+    # side-car packs 8 tokens/byte, one (scale, zero) cell per group)
+    cap = -(-(S + n_new) // 16) * 16
+    logits, cache = jax.jit(lambda p, b: bundle.prefill(p, b, capacity=cap))(
         params, pre
     )
     out = []
@@ -36,8 +39,13 @@ def main():
     cfg = reduced_config("olmo-1b")
     print(f"model: {cfg.name} (reduced) — {cfg.n_layers}L d={cfg.d_model}")
 
-    # FIER: 1-bit quantized key retrieval, token budget 16, group size 8
-    fier = PolicyConfig(kind="fier", budget=16, group=8, skip_layers=1)
+    # FIER: 1-bit quantized key retrieval, token budget 16, group size 8.
+    # pipeline="reference" is the pure-jnp oracle pipeline (easy to read
+    # and step through); serving uses pipeline="one_pass" — the fused
+    # Pallas fast path (see examples/serve_longcontext.py and DESIGN.md
+    # §Backend registry & DecodePlan)
+    fier = PolicyConfig(kind="fier", budget=16, group=8, skip_layers=1,
+                        pipeline="reference")
     bundle_fier = build_model(cfg, fier)
     bundle_full = build_model(cfg, PolicyConfig(kind="full"))
 

@@ -20,11 +20,13 @@ from repro.serving import ContinuousScheduler, Engine, Request
 
 def main():
     cfg = reduced_config("llava-next-mistral-7b")  # mistral-like backbone
-    # fused=True (+ the default one_pass=True): the serving default —
-    # one-pass retrieval (scores never touch HBM) + select-and-attend,
-    # no materialised K'/V' gather (DESIGN.md §One-pass retrieval)
+    # pipeline="one_pass": the serving default — one-pass retrieval
+    # (scores never touch HBM) + fused select-and-attend, no materialised
+    # K'/V' gather (DESIGN.md §One-pass retrieval).  Other pipelines:
+    # "two_pass" (kernel ablation), "reference" (jnp oracle); add
+    # layout="paged" for the block-pool cache.
     pol = PolicyConfig(kind="fier", budget=24, group=8, skip_layers=1,
-                       fused=True)
+                       pipeline="one_pass")
     bundle = build_model(cfg, pol)
     params = bundle.init(jax.random.PRNGKey(0))
 

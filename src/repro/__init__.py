@@ -1,0 +1,59 @@
+"""FIER reproduction: fine-grained 1-bit KV-cache retrieval for
+long-context LLM decode, on JAX/Pallas.
+
+The public surface below is snapshot-guarded in CI
+(``tools/check_api_snapshot.py`` against ``api_snapshot.txt``): changing
+``__all__`` — or the decode-backend registry in ``repro.core.policy`` —
+without regenerating the snapshot fails the lint/API lane.
+
+Submodules are imported lazily so ``import repro`` stays cheap.
+"""
+from __future__ import annotations
+
+import importlib
+
+__all__ = [
+    # subpackages
+    "configs",
+    "core",
+    "data",
+    "kernels",
+    "kvcache",
+    "launch",
+    "models",
+    "serving",
+    # decode-attention API (re-exported from repro.core.policy)
+    "AttentionBackend",
+    "CacheView",
+    "DecodePlan",
+    "PolicyConfig",
+    "UnsupportedPlanError",
+    "decode_attention",
+    "get_backend",
+    "register_backend",
+]
+
+_POLICY_NAMES = {
+    "AttentionBackend",
+    "CacheView",
+    "DecodePlan",
+    "PolicyConfig",
+    "UnsupportedPlanError",
+    "decode_attention",
+    "get_backend",
+    "register_backend",
+}
+
+
+def __getattr__(name: str):
+    if name in _POLICY_NAMES:
+        from repro.core import policy
+
+        return getattr(policy, name)
+    if name in __all__:
+        return importlib.import_module(f"repro.{name}")
+    raise AttributeError(f"module 'repro' has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(set(globals()) | set(__all__))

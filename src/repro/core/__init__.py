@@ -5,26 +5,62 @@ Public surface:
     retrieval     — approx scores, top-k select, sparse attention (Alg. 1)
     quest         — Quest page-level baseline
     eviction      — H2O / StreamingLLM / SnapKV / TOVA baselines
-    policy        — PolicyConfig + registry used by models & serving
+    policy        — CacheView + DecodePlan + the AttentionBackend registry
+                    (the decode-attention API used by models & serving)
     distributed   — sequence-sharded FIER with log-sum-exp merge
 """
 from . import distributed, eviction, quantize, quest, retrieval
-from .policy import POLICIES, PolicyConfig, build_metadata, decode_attention, update_metadata
+from .policy import (
+    LAYOUTS,
+    PIPELINES,
+    AttentionBackend,
+    CacheView,
+    DecodePlan,
+    PolicyConfig,
+    UnsupportedPlanError,
+    build_metadata,
+    decode_attention,
+    get_backend,
+    register_backend,
+    registered_backends,
+    update_metadata,
+)
 from .quantize import QuantizedKeys, dequantize, load_ratio, quantize as quantize_keys
 
+
+def __getattr__(name):
+    # POLICIES mirrors the live registry (register_backend rebinds
+    # policy.POLICIES); resolving it lazily here keeps repro.core.POLICIES
+    # from freezing at import time while third-party backends register
+    if name == "POLICIES":
+        from . import policy
+
+        return policy.POLICIES
+    raise AttributeError(f"module 'repro.core' has no attribute {name!r}")
+
+
 __all__ = [
+    "LAYOUTS",
+    "PIPELINES",
     "POLICIES",
+    "AttentionBackend",
+    "CacheView",
+    "DecodePlan",
     "PolicyConfig",
     "QuantizedKeys",
+    "UnsupportedPlanError",
     "build_metadata",
     "decode_attention",
     "dequantize",
     "distributed",
     "eviction",
+    "get_backend",
     "load_ratio",
     "quantize",
     "quantize_keys",
     "quest",
+    "register_backend",
+    "registered_backends",
     "retrieval",
     "update_metadata",
 ]

@@ -1,29 +1,64 @@
-"""Cache-policy registry: pluggable decode-attention policies.
+"""Decode-attention backend registry: ``CacheView`` + ``DecodePlan``.
 
-``full`` / ``fier`` / ``quest`` are the serving fast paths (stateless
-selection + static metadata, jit-friendly); eviction baselines live in
-``eviction.py`` and are wired directly by the quality benchmarks.
+Three first-class objects replace the boolean-flag dispatch the first
+three PRs accreted (``use_kernels`` × ``fused`` × ``one_pass`` ×
+``paged`` and a family of parallel entrypoints):
 
-The serving engine and the model zoo only see this interface:
+``CacheView``
+    A pytree bundling everything a decode step reads: the K/V slabs (or
+    the paged block pool), the policy's side-car metadata, the block
+    table, and the per-sequence ``length``.  Slab vs paged is a
+    ``layout`` field, not a separate signature.
+
+``DecodePlan``
+    The resolved execution plan — ``policy × layout × pipeline`` with
+    ``pipeline ∈ {reference, two_pass, one_pass}`` — validated at build
+    time against the backend's capability matrix.  An unsupported
+    combination (e.g. ``quest`` on a paged cache) raises
+    :class:`UnsupportedPlanError` listing the supported matrix instead
+    of silently falling back.
+
+``AttentionBackend``
+    Registry entries (``full`` / ``fier`` / ``quest`` / ``slm``), each
+    declaring ``build_metadata`` / ``update_metadata`` / ``decode`` and
+    its supported ``(layout, pipeline)`` set.  Third-party backends
+    register with :func:`register_backend` (DESIGN.md §Backend registry
+    & DecodePlan).
+
+The serving engine and the model zoo only see this interface::
+
+    plan  = DecodePlan.build(cfg, capacity=capacity)
     meta  = build_metadata(K, cfg)            # after prefill
-    meta  = update_metadata(meta, K, pos)     # after each appended token
-    out   = decode_attention(q, K, V, meta, cfg, length, layer)
+    meta  = update_metadata(meta, K, pos, cfg)  # after each appended token
+    out   = decode_attention(q, view, plan, layer=layer)
+
+Pipelines (the FIER backend; ``full``/``quest``/``slm`` are
+reference-only):
+
+* ``reference`` — the pure-jnp oracle pipeline (score → top-k → gather →
+  attend); ``PolicyConfig.use_kernels`` swaps the scoring step for the
+  Pallas score kernel (ablation).
+* ``two_pass``  — score-scan kernel → threshold-select kernel → fused
+  select-and-attend (f32 score tensor materialised between kernels).
+* ``one_pass``  — single-kernel retrieval (scores never touch HBM) →
+  fused select-and-attend; the serving default.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any
+import warnings
+from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
 
 from . import quantize, quest, retrieval
 
-# full/fier/quest: serving fast paths.  slm: StreamingLLM as a *policy*
-# (sink ∪ recent window — the strongest eviction baseline that needs no
-# per-step state), used by the generation-level quality benchmarks.
-POLICIES = ("full", "fier", "quest", "slm")
+PIPELINES = ("reference", "two_pass", "one_pass")
+LAYOUTS = ("slab", "paged")
 
+
+# --------------------------------------------------------------- PolicyConfig
 
 @dataclasses.dataclass(frozen=True)
 class PolicyConfig:
@@ -35,42 +70,316 @@ class PolicyConfig:
     sink: int = 0            # forced sink tokens (0 = paper-faithful)
     recent: int = 0          # forced recent window (0 = paper-faithful)
     skip_layers: int = 2     # full attention on first N layers (paper/Quest setup)
-    use_kernels: bool = False  # Pallas fast path for the score scan
-    fused: bool = False      # fused select-and-attend decode (fier only):
-                             # threshold top-k + in-kernel gather, no
-                             # materialised K'/V' copies (serving default
-                             # via serving.engine.serving_policy)
-    one_pass: bool = True    # with fused: single-kernel retrieval (score
-                             # scan + group-reduce + mask + threshold
-                             # top-k in one pass — per-token scores never
-                             # touch HBM).  False = two-pass kernel
-                             # pipeline, kept for ablation.
-    paged: bool = False      # paged KV cache: device-side block pool +
-                             # host-side BlockAllocator (prefix sharing,
-                             # copy-on-write) instead of per-slot capacity
-                             # slabs — see kvcache.paged / DESIGN.md
-                             # §Paged KV cache
-    block_size: int = 32     # tokens per cache block (paged mode); must be
-                             # a multiple of 8 and of `group`
-    pool_blocks: int = 0     # physical blocks in the pool (paged mode);
+    use_kernels: bool = False  # reference pipeline only: Pallas score scan
+                             # instead of the jnp score (ablation)
+    pipeline: str = "reference"  # reference | two_pass | one_pass — which
+                             # decode pipeline the plan resolves to
+                             # (serving default via serving_policy() is
+                             # one_pass; validated against the backend's
+                             # capability matrix by DecodePlan.build)
+    layout: str = "slab"     # slab | paged — per-slot capacity slabs vs
+                             # block-pool + block tables (kvcache.paged,
+                             # DESIGN.md §Paged KV cache)
+    block_size: int = 32     # tokens per cache block (paged layout); must
+                             # be a multiple of 8 and of `group` —
+                             # validated by DecodePlan.build
+    pool_blocks: int = 0     # physical blocks in the pool (paged layout);
                              # 0 → worst-case default n_slots·capacity/bs+1
 
-    def __post_init__(self):
-        if self.kind not in POLICIES:
-            raise ValueError(f"unknown policy {self.kind!r}; choose from {POLICIES}")
-        if self.paged:
+    # Deprecated boolean dispatch flags (pre-registry API).  They are
+    # init-only: accepted, translated onto pipeline/layout with a
+    # DeprecationWarning, and never stored.
+    fused: dataclasses.InitVar[bool | None] = None
+    one_pass: dataclasses.InitVar[bool | None] = None
+    paged: dataclasses.InitVar[bool | None] = None
+
+    def __post_init__(self, fused, one_pass, paged):
+        if fused is not None or one_pass is not None or paged is not None:
+            _warn_deprecated(
+                "PolicyConfig's `fused` / `one_pass` / `paged` booleans",
+                "pipeline='reference'|'two_pass'|'one_pass' and "
+                "layout='slab'|'paged'",
+            )
+            if paged is not None:
+                object.__setattr__(self, "layout", "paged" if paged else "slab")
+            if fused is not None:
+                if fused:
+                    # the pre-registry paged dispatch ignored the
+                    # `one_pass` flag (the paged fast path was always the
+                    # one-pass kernels), so fused+paged maps to one_pass
+                    # even when the flag is False — keeping that combo
+                    # serving instead of tripping the (paged, two_pass)
+                    # matrix hole
+                    on_paged = self.layout == "paged"
+                    pipe = (
+                        "two_pass" if (one_pass is False and not on_paged)
+                        else "one_pass"
+                    )
+                else:
+                    pipe = "reference"
+                object.__setattr__(self, "pipeline", pipe)
+        if self.kind not in _REGISTRY:
+            raise ValueError(
+                f"unknown policy {self.kind!r}; registered: {tuple(_REGISTRY)}"
+            )
+        if self.pipeline not in PIPELINES:
+            raise ValueError(
+                f"unknown pipeline {self.pipeline!r}; choose from {PIPELINES}"
+            )
+        if self.layout not in LAYOUTS:
+            raise ValueError(f"unknown layout {self.layout!r}; choose from {LAYOUTS}")
+        # NOTE: the legacy flags are accepted but never stored — reading
+        # ``cfg.fused`` / ``cfg.one_pass`` / ``cfg.paged`` yields the
+        # InitVar default (None), not the truth.  Read ``cfg.pipeline``
+        # / ``cfg.layout`` instead.  (They cannot be exposed as
+        # properties: ``dataclasses.replace`` re-feeds InitVar values via
+        # ``getattr``, so properties would resurrect stale flags and
+        # override explicit ``replace(cfg, layout=...)`` changes.)
+
+
+# ------------------------------------------------------------------ CacheView
+
+@jax.tree_util.register_pytree_node_class
+class CacheView:
+    """Everything one decode-attention call reads, as a single pytree.
+
+    ``layout='slab'``: ``k``/``v`` are per-slot capacity slabs
+    [B, S, Hkv, D] and ``block_table`` is None.  ``layout='paged'``:
+    ``k``/``v`` are the shared block pool [N, bs, Hkv, D] and
+    ``block_table`` [B, n_btab] maps logical blocks to pool rows.
+    ``meta`` is the policy side-car (``QuantizedKeys`` for fier,
+    ``PageMeta`` for quest, None for full), in the matching layout.
+    ``length`` [B] int32 masks unwritten positions (None = all valid).
+
+    ``layout`` is static pytree aux data, so a jitted function traced on
+    a slab view re-traces (rather than mis-dispatches) on a paged one.
+    """
+
+    __slots__ = ("k", "v", "meta", "block_table", "length", "layout")
+
+    def __init__(self, k, v, meta=None, block_table=None, length=None,
+                 *, layout: str = "slab"):
+        if layout not in LAYOUTS:
+            raise ValueError(f"unknown layout {layout!r}; choose from {LAYOUTS}")
+        if layout == "paged" and block_table is None:
+            raise ValueError("paged CacheView requires a block_table")
+        self.k = k
+        self.v = v
+        self.meta = meta
+        self.block_table = block_table
+        self.length = length
+        self.layout = layout
+
+    @classmethod
+    def slab(cls, k, v, meta=None, length=None) -> "CacheView":
+        return cls(k, v, meta, None, length, layout="slab")
+
+    @classmethod
+    def paged(cls, k, v, meta, block_table, length=None) -> "CacheView":
+        return cls(k, v, meta, block_table, length, layout="paged")
+
+    def logical(self):
+        """(K, V, meta) as logical per-request slabs — gathers the pool
+        through the block table for the paged layout (the oracle /
+        reference-pipeline path; the fused kernels walk the table
+        in-kernel instead).  Absent leaves (e.g. a metadata-only
+        retrieval view with no K/V) pass through as None."""
+        if self.layout == "slab":
+            return self.k, self.v, self.meta
+        from repro.kvcache.paged import gather_block_rows
+
+        def g(a):
+            return None if a is None else gather_block_rows(a, self.block_table)
+
+        meta = (
+            None if self.meta is None
+            else jax.tree.map(g, self.meta)  # side-car pytree, any policy
+        )
+        return g(self.k), g(self.v), meta
+
+    def tree_flatten(self):
+        return (self.k, self.v, self.meta, self.block_table, self.length), self.layout
+
+    @classmethod
+    def tree_unflatten(cls, layout, children):
+        k, v, meta, block_table, length = children
+        view = object.__new__(cls)
+        view.k, view.v, view.meta = k, v, meta
+        view.block_table, view.length, view.layout = block_table, length, layout
+        return view
+
+    def __repr__(self):
+        sh = lambda a: getattr(a, "shape", None)
+        return (
+            f"CacheView(layout={self.layout!r}, k={sh(self.k)}, "
+            f"meta={type(self.meta).__name__ if self.meta is not None else None}, "
+            f"block_table={sh(self.block_table)})"
+        )
+
+
+# ----------------------------------------------------------- backend registry
+
+class UnsupportedPlanError(ValueError):
+    """(policy, layout, pipeline) combination outside the backend's
+    declared capability matrix."""
+
+
+@dataclasses.dataclass(frozen=True)
+class AttentionBackend:
+    """One registered decode-attention policy.
+
+    ``supports`` is the declared (layout, pipeline) capability matrix —
+    ``DecodePlan.build`` refuses anything outside it.  The three callables
+    take the same arguments for every backend, so a third-party policy
+    registers without touching the dispatch:
+
+        register_backend(AttentionBackend(
+            name="mypolicy",
+            supports=frozenset({("slab", "reference")}),
+            build_metadata=...,      # (K, cfg) -> meta
+            update_metadata=...,     # (meta, K, pos, cfg) -> meta
+            decode=...,              # (q, view, plan) -> out [B, Hq, D]
+        ))
+    """
+
+    name: str
+    supports: frozenset
+    build_metadata: Callable[[jax.Array, PolicyConfig], Any]
+    update_metadata: Callable[[Any, jax.Array, jax.Array, PolicyConfig], Any]
+    decode: Callable[[jax.Array, CacheView, "DecodePlan"], jax.Array]
+    # a backend whose selection needs side-car metadata falls back to
+    # dense attention when the view carries none (e.g. the skip-layer
+    # front caches); metadata-less backends (slm, or third parties whose
+    # build_metadata returns None) set False so their decode always runs
+    needs_metadata: bool = True
+    # whether `layer < skip_layers` falls back to dense attention; False
+    # for backends that are their own full-attention substitute (full,
+    # slm)
+    skip_layers_fallback: bool = True
+
+    def supports_str(self) -> str:
+        return ", ".join(f"{lo}×{pi}" for lo, pi in sorted(self.supports))
+
+
+_REGISTRY: dict[str, AttentionBackend] = {}
+
+
+def register_backend(backend: AttentionBackend, *, overwrite: bool = False) -> None:
+    global POLICIES
+    if backend.name in _REGISTRY and not overwrite:
+        raise ValueError(f"backend {backend.name!r} already registered")
+    bad = {c for c in backend.supports if c[0] not in LAYOUTS or c[1] not in PIPELINES}
+    if bad:
+        raise ValueError(f"backend {backend.name!r}: invalid capabilities {bad}")
+    _REGISTRY[backend.name] = backend
+    POLICIES = tuple(_REGISTRY)
+
+
+def get_backend(name: str) -> AttentionBackend:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown policy {name!r}; registered: {tuple(_REGISTRY)}"
+        ) from None
+
+
+def registered_backends() -> tuple[str, ...]:
+    return tuple(_REGISTRY)
+
+
+# ----------------------------------------------------------------- DecodePlan
+
+@dataclasses.dataclass(frozen=True)
+class DecodePlan:
+    """A validated ``policy × layout × pipeline`` execution plan.
+
+    Build via :meth:`build` — the constructor performs no validation, so
+    a hand-rolled instance can bypass the capability matrix (don't).
+    Plans are static/hashable: bundles build them once and close over
+    them; kernels never see the plan, only the view.
+    """
+
+    policy: PolicyConfig
+    layout: str = "slab"
+    pipeline: str = "reference"
+
+    @property
+    def backend(self) -> AttentionBackend:
+        return get_backend(self.policy.kind)
+
+    @classmethod
+    def build(
+        cls,
+        policy: PolicyConfig,
+        *,
+        layout: str | None = None,
+        pipeline: str | None = None,
+        capacity: int | None = None,
+    ) -> "DecodePlan":
+        """Resolve and validate a plan.
+
+        Validation hoisted here (out of ``PolicyConfig.__post_init__``
+        and the kernels' deep shape asserts): the capability matrix, the
+        paged ``block_size`` divisibility rules, and — when ``capacity``
+        is known — ``budget``/``sink``/``recent`` bounds that previously
+        failed only deep inside a kernel at the first decode step.
+        """
+        layout = layout if layout is not None else policy.layout
+        pipeline = pipeline if pipeline is not None else policy.pipeline
+        backend = get_backend(policy.kind)
+        if (layout, pipeline) not in backend.supports:
+            raise UnsupportedPlanError(
+                f"policy {policy.kind!r} does not support layout={layout!r} "
+                f"with pipeline={pipeline!r}; supported: {backend.supports_str()}"
+            )
+        if policy.budget <= 0:
+            raise ValueError(f"budget must be positive, got {policy.budget}")
+        if policy.sink < 0 or policy.recent < 0:
+            raise ValueError(
+                f"sink/recent must be >= 0, got ({policy.sink}, {policy.recent})"
+            )
+        if layout == "paged":
             from repro.kvcache.paged import check_block_size
 
-            check_block_size(self.block_size, self.group if self.kind == "fier" else 0)
+            check_block_size(
+                policy.block_size, policy.group if policy.kind == "fier" else 0
+            )
+        plan = cls(policy, layout, pipeline)
+        if capacity is not None:
+            plan.validate_capacity(capacity)
+        return plan
 
+    def validate_capacity(self, capacity: int) -> "DecodePlan":
+        """Check the plan against a concrete cache capacity (called by
+        ``init_cache`` / the engine, where capacity is first known)."""
+        pol = self.policy
+        if pol.kind != "full" and pol.budget > capacity:
+            raise ValueError(
+                f"policy budget {pol.budget} exceeds cache capacity "
+                f"{capacity}: the selection kernels require budget <= S "
+                f"(clamp the budget or grow the cache)"
+            )
+        # no sink/recent bound: the guard-rails are score *overrides*
+        # and decode-time masking clamps them to the valid prefix, so
+        # any non-negative value is safe at any capacity
+        if self.layout == "paged" and capacity % pol.block_size:
+            raise ValueError(
+                f"capacity {capacity} not divisible by block_size "
+                f"{pol.block_size}"
+            )
+        return self
+
+    def with_pipeline(self, pipeline: str) -> "DecodePlan":
+        """Re-resolve (and re-validate) this plan with another pipeline."""
+        return DecodePlan.build(self.policy, layout=self.layout, pipeline=pipeline)
+
+
+# --------------------------------------------------------- metadata dispatch
 
 def build_metadata(K: jax.Array, cfg: PolicyConfig) -> Any:
     """Selection metadata over a (capacity-sized) key slab [B,S,Hkv,D]."""
-    if cfg.kind == "fier":
-        return quantize.quantize(K, cfg.group)
-    if cfg.kind == "quest":
-        return quest.build_page_meta(K, cfg.page)
-    return None
+    return get_backend(cfg.kind).build_metadata(K, cfg)
 
 
 def update_metadata(meta: Any, K: jax.Array, pos: jax.Array, cfg: PolicyConfig) -> Any:
@@ -83,79 +392,221 @@ def update_metadata(meta: Any, K: jax.Array, pos: jax.Array, cfg: PolicyConfig) 
     """
     if meta is None:
         return None
+    return get_backend(cfg.kind).update_metadata(meta, K, pos, cfg)
+
+
+# ------------------------------------------------------------------ dispatch
+
+def _dense_decode(q: jax.Array, view: CacheView) -> jax.Array:
+    """Full attention over the logical cache (skip-layer / full fallback)."""
+    K, V, _ = view.logical()
+    return retrieval.full_attention_decode(q, K, V, view.length)
+
+
+def decode_attention(q: jax.Array, *args, **kwargs) -> jax.Array:
+    """The single decode-attention entrypoint: ``decode_attention(q, view,
+    plan, layer=...)``.
+
+    ``layer < plan.policy.skip_layers`` falls back to dense attention
+    (the paper's skip-layers); a traced ``layer`` selects at runtime.
+    ``slm`` ignores ``skip_layers`` (it is itself the full-attention
+    eviction baseline).
+
+    The pre-registry signature ``decode_attention(q, K, V, meta, cfg,
+    length, layer)`` still forwards (with a DeprecationWarning).
+    """
+    if (args and isinstance(args[0], CacheView)) or "view" in kwargs:
+        view = args[0] if args else kwargs.pop("view")
+        plan = args[1] if len(args) > 1 else kwargs.pop("plan")
+        layer = args[2] if len(args) > 2 else kwargs.pop("layer", 0)
+        if kwargs or len(args) > 3:
+            raise TypeError(f"unexpected arguments: {args[3:]} {kwargs}")
+        return _decode_attention(q, view, plan, layer)
+    # ---- deprecated flat-argument form
+    _warn_deprecated(
+        "decode_attention(q, K, V, meta, cfg, length, layer)",
+        "decode_attention(q, CacheView.slab(K, V, meta, length), "
+        "DecodePlan.build(cfg), layer=layer)",
+    )
+    names = ("K", "V", "meta", "cfg", "length", "layer")
+    flat = dict(zip(names, args))
+    flat.update(kwargs)
+    cfg = flat["cfg"]
+    view = CacheView.slab(flat["K"], flat["V"], flat.get("meta"), flat.get("length"))
+    return _decode_attention(q, view, DecodePlan.build(cfg), flat.get("layer", 0))
+
+
+def _decode_attention(
+    q: jax.Array, view: CacheView, plan: DecodePlan, layer: int | jax.Array
+) -> jax.Array:
+    if plan.layout != view.layout:
+        raise UnsupportedPlanError(
+            f"plan layout {plan.layout!r} does not match view layout "
+            f"{view.layout!r}: the plan's build-time validation covered a "
+            f"different cache layout than the one being decoded"
+        )
+    cfg = plan.policy
+    backend = plan.backend
+    if backend.needs_metadata and view.meta is None:
+        return _dense_decode(q, view)
+    sparse = backend.decode(q, view, plan)
+    if not backend.skip_layers_fallback:
+        return sparse
+    if isinstance(layer, int):
+        if layer < cfg.skip_layers:
+            return _dense_decode(q, view)
+        return sparse
+    # traced layer index (scan-over-layers): select at runtime
+    full = _dense_decode(q, view)
+    return jnp.where(layer < cfg.skip_layers, full, sparse)
+
+
+# ---------------------------------------------------------- builtin backends
+
+def _fier_build_metadata(K, cfg):
+    return quantize.quantize(K, cfg.group)
+
+
+def _fier_update_metadata(meta, K, pos, cfg):
     B, S, H, D = K.shape
-    if cfg.kind == "fier":
-        g = cfg.group
-        start = (pos // g) * g
-        blk = jax.lax.dynamic_slice_in_dim(K, start, g, axis=1)  # [B,g,H,D]
-        scale, zero = quantize.group_stats(blk, g)  # [B,1,H,D]
-        bits = quantize.sign_bits(blk, zero, g)
-        codes = quantize.pack_bits(bits)  # [B,g//8,H,D]
-        return quantize.QuantizedKeys(
-            jax.lax.dynamic_update_slice_in_dim(meta.codes, codes, start // 8, axis=1),
-            jax.lax.dynamic_update_slice_in_dim(meta.scale, scale, start // g, axis=1),
-            jax.lax.dynamic_update_slice_in_dim(meta.zero, zero, start // g, axis=1),
-            g,
-        )
-    if cfg.kind == "quest":
-        L = cfg.page
-        start = (pos // L) * L
-        blk = jax.lax.dynamic_slice_in_dim(K, start, L, axis=1)
-        kmax = blk.max(axis=1, keepdims=True).astype(jnp.bfloat16)
-        kmin = blk.min(axis=1, keepdims=True).astype(jnp.bfloat16)
-        return quest.PageMeta(
-            jax.lax.dynamic_update_slice_in_dim(meta.kmax, kmax, start // L, axis=1),
-            jax.lax.dynamic_update_slice_in_dim(meta.kmin, kmin, start // L, axis=1),
-            L,
-        )
+    g = cfg.group
+    start = (pos // g) * g
+    blk = jax.lax.dynamic_slice_in_dim(K, start, g, axis=1)  # [B,g,H,D]
+    scale, zero = quantize.group_stats(blk, g)  # [B,1,H,D]
+    bits = quantize.sign_bits(blk, zero, g)
+    codes = quantize.pack_bits(bits)  # [B,g//8,H,D]
+    return quantize.QuantizedKeys(
+        jax.lax.dynamic_update_slice_in_dim(meta.codes, codes, start // 8, axis=1),
+        jax.lax.dynamic_update_slice_in_dim(meta.scale, scale, start // g, axis=1),
+        jax.lax.dynamic_update_slice_in_dim(meta.zero, zero, start // g, axis=1),
+        g,
+    )
+
+
+def _fier_decode(q, view, plan):
+    cfg = plan.policy
+    sel = dict(group_reduce=cfg.group_reduce, sink=cfg.sink, recent=cfg.recent)
+    if plan.pipeline in ("one_pass", "two_pass"):
+        from repro.kernels import ops as kops
+
+        if plan.pipeline == "one_pass":
+            return kops.fier_decode_one_pass(q, view, cfg.budget, **sel)
+        return kops.fier_decode_two_pass(q, view, cfg.budget, **sel)
+    K, V, meta = view.logical()
+    return retrieval.fier_decode_reference(
+        q, K, V, meta, cfg.budget, view.length,
+        use_kernels=cfg.use_kernels, **sel,
+    )
+
+
+def _quest_build_metadata(K, cfg):
+    return quest.build_page_meta(K, cfg.page)
+
+
+def _quest_update_metadata(meta, K, pos, cfg):
+    L = cfg.page
+    start = (pos // L) * L
+    blk = jax.lax.dynamic_slice_in_dim(K, start, L, axis=1)
+    kmax = blk.max(axis=1, keepdims=True).astype(jnp.bfloat16)
+    kmin = blk.min(axis=1, keepdims=True).astype(jnp.bfloat16)
+    return quest.PageMeta(
+        jax.lax.dynamic_update_slice_in_dim(meta.kmax, kmax, start // L, axis=1),
+        jax.lax.dynamic_update_slice_in_dim(meta.kmin, kmin, start // L, axis=1),
+        L,
+    )
+
+
+def _quest_decode(q, view, plan):
+    cfg = plan.policy
+    K, V, meta = view.logical()
+    return quest.quest_attention_decode(
+        q, K, V, meta, cfg.budget, view.length, group_reduce=cfg.group_reduce
+    )
+
+
+def _slm_decode(q, view, plan):
+    cfg = plan.policy
+    K, V, _ = view.logical()
+    B, Hq, _ = q.shape
+    Hkv = K.shape[2]
+    sink = max(cfg.sink, 4)
+    zeros = jnp.zeros((B, Hkv, K.shape[1]), jnp.float32)
+    idx = retrieval.select_topk(
+        zeros, cfg.budget, view.length, sink=sink, recent=cfg.budget - sink
+    )
+    Ksel, Vsel = retrieval.gather_kv(K, V, idx)
+    return retrieval.sparse_attention(q, Ksel, Vsel, idx, view.length)
+
+
+def _no_metadata(K, cfg):
+    return None
+
+
+def _keep_metadata(meta, K, pos, cfg):
     return meta
 
 
-def decode_attention(
-    q: jax.Array,
-    K: jax.Array,
-    V: jax.Array,
-    meta: Any,
-    cfg: PolicyConfig,
-    length: jax.Array,
-    layer: int | jax.Array = 0,
-) -> jax.Array:
-    """Policy-dispatched decode attention.  Static dispatch on cfg.kind;
-    ``layer < skip_layers`` and ``length <= budget`` fall back to full."""
-    if cfg.kind == "slm":
-        # eviction baseline: fixed sink + recent window, no metadata
-        B, Hq, _ = q.shape
-        Hkv = K.shape[2]
-        sink = max(cfg.sink, 4)
-        zeros = jnp.zeros((B, Hkv, K.shape[1]), jnp.float32)
-        idx = retrieval.select_topk(
-            zeros, cfg.budget, length, sink=sink, recent=cfg.budget - sink
-        )
-        Ksel, Vsel = retrieval.gather_kv(K, V, idx)
-        return retrieval.sparse_attention(q, Ksel, Vsel, idx, length)
+register_backend(AttentionBackend(
+    name="full",
+    supports=frozenset({("slab", "reference"), ("paged", "reference")}),
+    build_metadata=_no_metadata,
+    update_metadata=_keep_metadata,
+    decode=lambda q, view, plan: _dense_decode(q, view),
+    needs_metadata=False,
+    skip_layers_fallback=False,  # decode *is* dense attention
+))
 
-    if cfg.kind == "full" or meta is None:
-        return retrieval.full_attention_decode(q, K, V, length)
+register_backend(AttentionBackend(
+    name="fier",
+    supports=frozenset({
+        ("slab", "reference"), ("slab", "two_pass"), ("slab", "one_pass"),
+        ("paged", "reference"), ("paged", "one_pass"),
+    }),
+    build_metadata=_fier_build_metadata,
+    update_metadata=_fier_update_metadata,
+    decode=_fier_decode,
+))
 
-    if cfg.kind == "fier":
-        sparse = retrieval.fier_attention_decode(
-            q, K, V, meta, cfg.budget, length,
-            group_reduce=cfg.group_reduce, sink=cfg.sink, recent=cfg.recent,
-            use_kernels=cfg.use_kernels, fused=cfg.fused,
-            one_pass=cfg.one_pass,
-        )
-    else:
-        sparse = quest.quest_attention_decode(
-            q, K, V, meta, cfg.budget, length, group_reduce=cfg.group_reduce
-        )
+register_backend(AttentionBackend(
+    name="quest",
+    supports=frozenset({("slab", "reference")}),
+    build_metadata=_quest_build_metadata,
+    update_metadata=_quest_update_metadata,
+    decode=_quest_decode,
+))
 
-    if isinstance(layer, int):
-        if layer < cfg.skip_layers:
-            return retrieval.full_attention_decode(q, K, V, length)
-        return sparse
-    # traced layer index (scan-over-layers): select at runtime
-    full = retrieval.full_attention_decode(q, K, V, length)
-    return jnp.where(layer < cfg.skip_layers, full, sparse)
+# slm: StreamingLLM as a *policy* (sink ∪ recent window — the strongest
+# eviction baseline that needs no per-step state), used by the
+# generation-level quality benchmarks.
+register_backend(AttentionBackend(
+    name="slm",
+    supports=frozenset({("slab", "reference")}),
+    build_metadata=_no_metadata,
+    update_metadata=_keep_metadata,
+    decode=_slm_decode,
+    needs_metadata=False,
+    skip_layers_fallback=False,  # its own full-attention substitute
+))
+# POLICIES mirrors the registry (register_backend refreshes it); the
+# builtin registrations above make it ("full", "fier", "quest", "slm")
+
+
+# ---------------------------------------------------------------- deprecation
+
+_warned: set[str] = set()
+
+
+def _warn_deprecated(old: str, new: str) -> None:
+    """One DeprecationWarning per deprecated entrypoint per process."""
+    if old in _warned:
+        return
+    _warned.add(old)
+    warnings.warn(
+        f"{old} is deprecated; use {new} (DESIGN.md §Backend registry & "
+        f"DecodePlan)",
+        DeprecationWarning,
+        stacklevel=3,
+    )
 
 
 def decode_attention_paged(
@@ -168,34 +619,14 @@ def decode_attention_paged(
     length: jax.Array,
     layer: int = 0,
 ) -> jax.Array:
-    """Policy-dispatched decode attention over a paged block pool.
-
-    q [B, Hq, D]; k_pool/v_pool [N, bs, Hkv, D]; block_table [B, n_btab].
-    The fier fused fast path walks the block table *in-kernel* (paged
-    one-pass retrieval → paged select-and-attend, nothing pool-sized
-    materialised); the full / unfused paths gather the logical slab view
-    through the table and reuse the slab reference pipeline — they are
-    the oracle, not the serving path.
-    """
-    if cfg.kind not in ("full", "fier"):
-        raise ValueError(f"paged decode: unsupported policy {cfg.kind!r}")
-    full_path = (
-        cfg.kind == "full" or meta is None or layer < cfg.skip_layers
+    """Deprecated: build a paged ``CacheView`` + ``DecodePlan`` and call
+    :func:`decode_attention`."""
+    _warn_deprecated(
+        "decode_attention_paged(q, k_pool, v_pool, meta, block_table, cfg, "
+        "length)",
+        "decode_attention(q, CacheView.paged(...), DecodePlan.build(cfg, "
+        "layout='paged'))",
     )
-    if cfg.kind == "fier" and cfg.fused and not full_path:
-        from repro.kernels import ops as kops
-
-        return kops.paged_fused_fier_attention_decode(
-            q, k_pool, v_pool, meta, block_table, cfg.budget, length,
-            group_reduce=cfg.group_reduce, sink=cfg.sink, recent=cfg.recent,
-        )
-    from repro.kvcache.paged import gather_paged_kv
-
-    K, V, logical = gather_paged_kv(k_pool, v_pool, meta, block_table)
-    if full_path:
-        return retrieval.full_attention_decode(q, K, V, length)
-    return retrieval.fier_attention_decode(
-        q, K, V, logical, cfg.budget, length,
-        group_reduce=cfg.group_reduce, sink=cfg.sink, recent=cfg.recent,
-        use_kernels=cfg.use_kernels, fused=False,
-    )
+    view = CacheView.paged(k_pool, v_pool, meta, block_table, length)
+    plan = DecodePlan.build(cfg, layout="paged")
+    return _decode_attention(q, view, plan, layer)

@@ -230,6 +230,41 @@ def full_attention_decode(
     return out.reshape(B, Hq, D).astype(q.dtype)
 
 
+def fier_decode_reference(
+    q: jax.Array,
+    K: jax.Array,
+    V: jax.Array,
+    qk: QuantizedKeys,
+    budget: int,
+    length: jax.Array | None = None,
+    *,
+    group_reduce: str = "max",
+    sink: int = 0,
+    recent: int = 0,
+    use_kernels: bool = False,
+) -> jax.Array:
+    """End-to-end FIER decode step (Alg. 1 steps 2–4) for batched GQA —
+    the *reference* pipeline: score → ``select_topk`` → ``gather_kv`` →
+    ``sparse_attention``, every intermediate materialised.  This is the
+    validation oracle the kernel pipelines (``two_pass`` / ``one_pass``,
+    see ``core.policy.DecodePlan``) are tested against, and the backend's
+    ``pipeline='reference'`` implementation.  ``use_kernels=True`` swaps
+    the scoring step for the Pallas score kernel (ablation; selection and
+    attention stay jnp).
+    """
+    Hkv = K.shape[2]
+    if use_kernels:
+        from repro.kernels import ops as kops
+
+        scores = kops.fier_score(q, qk)
+    else:
+        scores = approx_scores(q, qk)
+    kv_scores = reduce_over_query_group(scores, Hkv, group_reduce)
+    idx = select_topk(kv_scores, budget, length, sink=sink, recent=recent)
+    Ksel, Vsel = gather_kv(K, V, idx)
+    return sparse_attention(q, Ksel, Vsel, idx, length)
+
+
 def fier_attention_decode(
     q: jax.Array,
     K: jax.Array,
@@ -245,36 +280,26 @@ def fier_attention_decode(
     fused: bool = False,
     one_pass: bool = True,
 ) -> jax.Array:
-    """End-to-end FIER decode step (Alg. 1 steps 2–4) for batched GQA.
+    """Deprecated boolean-flag entrypoint: forwards to the plan-selected
+    pipeline (``fused`` → the kernel pipelines, else the reference one).
+    Use ``core.policy.decode_attention(q, view, plan)`` instead."""
+    from .policy import CacheView, _warn_deprecated
 
-    ``fused=True`` routes through the fused select-and-attend Pallas
-    pipeline (``kernels.ops.fused_fier_attention_decode``): with
-    ``one_pass=True`` (the serving default) retrieval is a *single*
-    kernel — score scan, GQA group-reduce, masking and exact threshold
-    top-k fused so the per-token score tensors never exist in HBM —
-    followed by attention that reads the selected rows straight out of
-    the cache slabs (no materialised K'/V' gather).  ``one_pass=False``
-    keeps the two-pass kernel pipeline (score tensor materialised between
-    the score and select kernels).  The jnp path below (score →
-    ``select_topk`` → ``gather_kv`` → ``sparse_attention``) stays as the
-    validation oracle the fused paths are tested against.
-    """
+    _warn_deprecated(
+        "retrieval.fier_attention_decode(..., use_kernels/fused/one_pass)",
+        "policy.decode_attention(q, view, plan) with "
+        "pipeline='reference'|'two_pass'|'one_pass'",
+    )
     if fused:
         from repro.kernels import ops as kops
 
-        return kops.fused_fier_attention_decode(
-            q, K, V, qk, budget, length,
-            group_reduce=group_reduce, sink=sink, recent=recent,
-            one_pass=one_pass,
+        view = CacheView.slab(K, V, qk, length)
+        fn = kops.fier_decode_one_pass if one_pass else kops.fier_decode_two_pass
+        return fn(
+            q, view, budget, group_reduce=group_reduce, sink=sink, recent=recent
         )
-    Hkv = K.shape[2]
-    if use_kernels:
-        from repro.kernels import ops as kops
-
-        scores = kops.fier_score(q, qk)
-    else:
-        scores = approx_scores(q, qk)
-    kv_scores = reduce_over_query_group(scores, Hkv, group_reduce)
-    idx = select_topk(kv_scores, budget, length, sink=sink, recent=recent)
-    Ksel, Vsel = gather_kv(K, V, idx)
-    return sparse_attention(q, Ksel, Vsel, idx, length)
+    return fier_decode_reference(
+        q, K, V, qk, budget, length,
+        group_reduce=group_reduce, sink=sink, recent=recent,
+        use_kernels=use_kernels,
+    )

@@ -19,7 +19,11 @@ DESIGN.md §2 and §Fused decode):
                        row gather from the block pool)
     pack_quantize    — prefill-time group quantize + bit-pack
 
-``ops``: jit'd wrappers (interpret=True off-TPU).  ``ref``: jnp oracles.
+``ops``: jit'd wrappers (interpret=True off-TPU) — layout dispatch goes
+through ``repro.core.policy.CacheView`` (``ops.retrieve`` /
+``ops.attend_selected`` / the ``fier_decode_*`` pipelines); the old
+``fused_* / paged_fused_*`` names remain as deprecation shims.
+``ref``: jnp oracles, including the plan-level ``ref.decode_attention``.
 """
 from . import ops, ref
 

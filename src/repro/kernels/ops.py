@@ -8,14 +8,21 @@ Layout note: the cache is seq-major [B, S, H, D] (sequence sharding);
 kernels want head-major [B·H, S, D] so the scan streams contiguously.
 The transposes below are the *baseline*; the §Perf layout iteration
 measures a head-major cache variant that removes them (EXPERIMENTS.md).
+
+Cache-layout dispatch happens on :class:`repro.core.policy.CacheView`:
+``retrieve`` / ``attend_selected`` read the slab-vs-paged choice off
+``view.layout`` instead of forking into ``fused_*`` / ``paged_fused_*``
+entrypoint pairs (those names remain as deprecation shims below).
+``fier_decode_one_pass`` / ``fier_decode_two_pass`` are the kernel
+pipelines the ``fier`` backend registers.
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
+from repro.core.policy import CacheView, _warn_deprecated
 from repro.core.quantize import QuantizedKeys
-from repro.core.retrieval import NEG_INF
 
 from . import fier_score as _fs
 from . import fused_retrieval as _fr
@@ -114,47 +121,12 @@ def topk_select(
     return idx.reshape(B, Hkv, budget)
 
 
-def fused_sparse_attention(
+# --------------------------------------------------- CacheView-based dispatch
+
+def retrieve(
     q: jax.Array,
-    K: jax.Array,
-    V: jax.Array,
-    idx: jax.Array,
-    length: jax.Array | None,
-    *,
-    blk_k: int = 1024,
-) -> jax.Array:
-    """Fused decode attention: gathers selected rows inside the kernel.
-
-    q [B,Hq,D]; K/V seq-major slabs [B,S,Hkv,D]; idx [B,Hkv,budget];
-    length [B] → [B,Hq,D] (q.dtype).  Unlike ``sparse_attention`` there is
-    no K'/V' operand: the slabs are passed whole (ANY memory space) and
-    only the selected rows move HBM→VMEM.  The q/idx/mask reshapes below
-    touch O(Hq·D + budget) bytes — nothing cache-sized is copied.
-    """
-    B, Hq, D = q.shape
-    Hkv = K.shape[2]
-    rep = Hq // Hkv
-    budget = idx.shape[2]
-    q4 = q.reshape(B, Hkv, rep, D)
-    if length is not None:
-        valid = idx < length[:, None, None]
-    else:
-        valid = jnp.ones_like(idx, dtype=bool)
-    mask = valid[:, :, None, :].astype(jnp.int8)
-    blk = min(blk_k, budget)
-    while budget % blk:
-        blk //= 2
-    out = _sa.fused_sparse_attention_hm(
-        q4, K, V, idx, mask, blk_k=blk, interpret=_interpret()
-    )
-    return out.reshape(B, Hq, D).astype(q.dtype)
-
-
-def fused_retrieve(
-    q: jax.Array,
-    qk: QuantizedKeys,
+    view: CacheView,
     budget: int,
-    length: jax.Array | None = None,
     *,
     group_reduce: str = "max",
     sink: int = 0,
@@ -162,21 +134,45 @@ def fused_retrieve(
     blk_s: int = 512,
     return_stats: bool = False,
 ):
-    """One-pass retrieval: packed codes → top-``budget`` indices, with the
-    per-token scores never materialised in HBM.
+    """One-pass retrieval over a ``CacheView``: packed codes →
+    top-``budget`` *logical* token indices, with the per-token scores
+    never materialised in HBM.
 
-    q [B,Hq,D], qk seq-major → idx int32 [B,Hkv,budget] (same index set
-    as ``select_topk`` over the masked, group-reduced ``fier_score``
-    scores).  One Pallas kernel streams the codes, scores each block in
-    VREGs, group-reduces and masks in-register, radix-searches τ and
-    compacts — neither the [B,Hq,S] nor the [B,Hkv,S] score tensor ever
-    exists as an array.  ``return_stats=True`` additionally returns
-    (tau f32 [B,Hkv], m int32 [B,Hkv]) — the budget-th score and the
-    strictly-greater count per row.
+    q [B, Hq, D]; ``view.meta`` is the ``QuantizedKeys`` side-car (slab
+    layout: seq-major [B, S/8, Hkv, D]; paged layout: pool
+    [N, bs/8, Hkv, D] walked through ``view.block_table`` in-kernel) →
+    idx int32 [B, Hkv, budget], the same index set as ``select_topk``
+    over the masked, group-reduced ``fier_score`` scores.  One Pallas
+    kernel streams the codes, scores each block in VREGs, group-reduces
+    and masks in-register, radix-searches τ and compacts — neither the
+    [B,Hq,S] nor the [B,Hkv,S] score tensor ever exists as an array.
+    ``return_stats=True`` additionally returns (tau f32 [B,Hkv],
+    m int32 [B,Hkv]) — the budget-th score and the strictly-greater
+    count per row.
     """
+    qk = view.meta
+    length = view.length
     B, Hq, D = q.shape
     Hkv = qk.codes.shape[2]
     rep = Hq // Hkv
+    if view.layout == "paged":
+        block_size = qk.codes.shape[1] * 8
+        n_btab = view.block_table.shape[1]
+        S = n_btab * block_size
+        q4 = q.reshape(B, Hkv, rep, D)
+        if length is None:
+            lens = jnp.full((B,), S, jnp.int32)
+            recent = 0  # masked_scores applies `recent` only with a length
+        else:
+            lens = length.astype(jnp.int32)
+        idx, tau, m = _fr.paged_fused_retrieve_hm(
+            q4, qk.codes, qk.scale, qk.zero, view.block_table, lens, budget,
+            group=qk.group, block_size=block_size, group_reduce=group_reduce,
+            sink=sink, recent=recent, interpret=_interpret(),
+        )
+        if return_stats:
+            return idx, tau, m
+        return idx
     S = qk.seq_len
     qhm = q.reshape(B, Hkv, rep, D).reshape(B * Hkv, rep, D)
     to_hm = lambda a: jnp.moveaxis(a, 2, 1).reshape(B * Hkv, a.shape[1], D)
@@ -198,6 +194,148 @@ def fused_retrieve(
     return idx
 
 
+def attend_selected(
+    q: jax.Array,
+    view: CacheView,
+    idx: jax.Array,
+    *,
+    blk_k: int = 1024,
+) -> jax.Array:
+    """Fused select-and-attend over a ``CacheView``: the selected rows are
+    gathered *inside* the kernel (per-row DMA; paged layout additionally
+    translates logical→(block, offset) through ``view.block_table`` in
+    SMEM), so no K'/V' copies — and nothing cache-sized — is ever
+    materialised.
+
+    q [B, Hq, D]; idx [B, Hkv, budget] logical positions → [B, Hq, D]
+    (q.dtype).
+    """
+    B, Hq, D = q.shape
+    Hkv = view.k.shape[2]
+    rep = Hq // Hkv
+    budget = idx.shape[2]
+    length = view.length
+    if length is not None:
+        valid = idx < length[:, None, None]
+    else:
+        valid = jnp.ones_like(idx, dtype=bool)
+    mask = valid[:, :, None, :].astype(jnp.int8)
+    blk = min(blk_k, budget)
+    while budget % blk:
+        blk //= 2
+    q4 = q.reshape(B, Hkv, rep, D)
+    if view.layout == "paged":
+        block_size = view.k.shape[1]
+        out = _sa.paged_fused_sparse_attention_hm(
+            q4, view.k, view.v, view.block_table, idx, mask,
+            block_size=block_size, blk_k=blk, interpret=_interpret(),
+        )
+    else:
+        out = _sa.fused_sparse_attention_hm(
+            q4, view.k, view.v, idx, mask, blk_k=blk, interpret=_interpret()
+        )
+    return out.reshape(B, Hq, D).astype(q.dtype)
+
+
+# --------------------------------------------------------- backend pipelines
+
+def fier_decode_one_pass(
+    q: jax.Array,
+    view: CacheView,
+    budget: int,
+    *,
+    group_reduce: str = "max",
+    sink: int = 0,
+    recent: int = 0,
+    blk_k: int = 1024,
+) -> jax.Array:
+    """The ``one_pass`` FIER pipeline — the serving decode fast path for
+    both layouts: single-kernel retrieval (per-token scores never in
+    HBM) chained into the fused select-and-attend kernel.  Bit-identical
+    to ``fier_decode_two_pass`` (same scores → same index set in the
+    same compaction order → same attend kernel), and across layouts on
+    the same logical cache contents."""
+    idx = retrieve(
+        q, view, budget, group_reduce=group_reduce, sink=sink, recent=recent
+    )
+    return attend_selected(q, view, idx, blk_k=blk_k)
+
+
+def fier_decode_two_pass(
+    q: jax.Array,
+    view: CacheView,
+    budget: int,
+    *,
+    group_reduce: str = "max",
+    sink: int = 0,
+    recent: int = 0,
+    blk_k: int = 1024,
+) -> jax.Array:
+    """The ``two_pass`` FIER pipeline (slab layout only): score-scan
+    kernel → threshold top-k kernel (f32 score tensors materialised
+    between them) → fused select-and-attend.  Kept for ablation and the
+    byte-accounting benchmarks."""
+    from repro.core import retrieval
+
+    if view.layout != "slab":
+        raise ValueError("two_pass pipeline supports the slab layout only")
+    Hkv = view.k.shape[2]
+    scores = fier_score(q, view.meta)
+    kv_scores = retrieval.reduce_over_query_group(scores, Hkv, group_reduce)
+    idx = topk_select(
+        kv_scores, budget, view.length, sink=sink, recent=recent
+    )
+    return attend_selected(q, view, idx, blk_k=blk_k)
+
+
+# ---------------------------------------------------------- deprecated shims
+# Pre-registry entrypoints: thin forwards onto the CacheView-based API,
+# kept for external callers.  Each warns (DeprecationWarning) once per
+# process on first call.
+
+def fused_sparse_attention(
+    q: jax.Array,
+    K: jax.Array,
+    V: jax.Array,
+    idx: jax.Array,
+    length: jax.Array | None,
+    *,
+    blk_k: int = 1024,
+) -> jax.Array:
+    """Deprecated: ``attend_selected(q, CacheView.slab(K, V), idx)``."""
+    _warn_deprecated(
+        "kernels.ops.fused_sparse_attention",
+        "kernels.ops.attend_selected(q, CacheView.slab(K, V, length=length), idx)",
+    )
+    return attend_selected(
+        q, CacheView.slab(K, V, length=length), idx, blk_k=blk_k
+    )
+
+
+def fused_retrieve(
+    q: jax.Array,
+    qk: QuantizedKeys,
+    budget: int,
+    length: jax.Array | None = None,
+    *,
+    group_reduce: str = "max",
+    sink: int = 0,
+    recent: int = 0,
+    blk_s: int = 512,
+    return_stats: bool = False,
+):
+    """Deprecated: ``retrieve(q, view, budget, ...)`` on a slab view."""
+    _warn_deprecated(
+        "kernels.ops.fused_retrieve",
+        "kernels.ops.retrieve(q, CacheView.slab(..., meta=qk, length=length), budget)",
+    )
+    view = CacheView.slab(None, None, qk, length)
+    return retrieve(
+        q, view, budget, group_reduce=group_reduce, sink=sink, recent=recent,
+        blk_s=blk_s, return_stats=return_stats,
+    )
+
+
 def fier_attention_decode(
     q: jax.Array,
     K: jax.Array,
@@ -208,10 +346,16 @@ def fier_attention_decode(
     *,
     group_reduce: str = "max",
 ) -> jax.Array:
-    """Kernel-path end-to-end FIER decode (Alg. 1 steps 2–4), unfused:
-    kernel scoring but XLA top-k + materialised gather."""
+    """Deprecated kernel-path unfused decode (kernel scoring + XLA top-k +
+    materialised gather + kernel attend) — compose the building blocks or
+    use a ``DecodePlan`` pipeline instead."""
     from repro.core import retrieval
 
+    _warn_deprecated(
+        "kernels.ops.fier_attention_decode",
+        "policy.decode_attention(q, view, plan) or the fier_score / "
+        "topk_select / sparse_attention building blocks",
+    )
     Hkv = K.shape[2]
     scores = fier_score(q, qk)
     kv_scores = retrieval.reduce_over_query_group(scores, Hkv, group_reduce)
@@ -234,32 +378,22 @@ def fused_fier_attention_decode(
     blk_k: int = 1024,
     one_pass: bool = True,
 ) -> jax.Array:
-    """Fully fused FIER decode step — the serving decode fast path.
-
-    ``one_pass=True`` (default): single-kernel retrieval
-    (``fused_retrieve``: scores never in HBM) → fused select-and-attend.
-    ``one_pass=False``: the two-pass pipeline (score-scan kernel →
-    threshold top-k kernel, f32 score tensors materialised between them),
-    kept for ablation and the byte-accounting benchmarks.  Both return
-    bit-identical attention outputs: they select the same index set from
-    the same (bit-identical) scores and feed the same attend kernel.
-    """
-    if one_pass:
-        idx = fused_retrieve(
-            q, qk, budget, length,
-            group_reduce=group_reduce, sink=sink, recent=recent,
-        )
-    else:
-        from repro.core import retrieval
-
-        Hkv = K.shape[2]
-        scores = fier_score(q, qk)
-        kv_scores = retrieval.reduce_over_query_group(scores, Hkv, group_reduce)
-        idx = topk_select(kv_scores, budget, length, sink=sink, recent=recent)
-    return fused_sparse_attention(q, K, V, idx, length, blk_k=blk_k)
+    """Deprecated: ``fier_decode_one_pass`` / ``fier_decode_two_pass`` on
+    a slab ``CacheView`` (or ``policy.decode_attention`` with a plan)."""
+    _warn_deprecated(
+        "kernels.ops.fused_fier_attention_decode",
+        "kernels.ops.fier_decode_one_pass / fier_decode_two_pass, or "
+        "policy.decode_attention(q, view, plan)",
+    )
+    view = CacheView.slab(K, V, qk, length)
+    fn = fier_decode_one_pass if one_pass else fier_decode_two_pass
+    return fn(
+        q, view, budget, group_reduce=group_reduce, sink=sink, recent=recent,
+        blk_k=blk_k,
+    )
 
 
-# ------------------------------------------------------------- paged variants
+# ------------------------------------------------- deprecated paged variants
 
 def paged_fused_retrieve(
     q: jax.Array,
@@ -273,37 +407,16 @@ def paged_fused_retrieve(
     recent: int = 0,
     return_stats: bool = False,
 ):
-    """One-pass retrieval over a paged code pool.
-
-    q [B, Hq, D]; meta: paged side-car pools (codes [N, bs/8, Hkv, D],
-    scale/zero [N, bs/g, Hkv, D]); block_table [B, n_btab] → idx int32
-    [B, Hkv, budget] of *logical* token positions.  Same index set (and
-    identical array, since both compact ascending-by-position) as
-    ``fused_retrieve`` over the table-gathered logical cache — and unlike
-    the slab wrapper there are no head-major transposes here: the kernel
-    indexes the pool's head axis directly, so nothing pool-sized is
-    copied per step.
-    """
-    B, Hq, D = q.shape
-    Hkv = meta.codes.shape[2]
-    rep = Hq // Hkv
-    block_size = meta.codes.shape[1] * 8
-    n_btab = block_table.shape[1]
-    S = n_btab * block_size
-    q4 = q.reshape(B, Hkv, rep, D)
-    if length is None:
-        lens = jnp.full((B,), S, jnp.int32)
-        recent = 0  # masked_scores applies `recent` only with a length
-    else:
-        lens = length.astype(jnp.int32)
-    idx, tau, m = _fr.paged_fused_retrieve_hm(
-        q4, meta.codes, meta.scale, meta.zero, block_table, lens, budget,
-        group=meta.group, block_size=block_size, group_reduce=group_reduce,
-        sink=sink, recent=recent, interpret=_interpret(),
+    """Deprecated: ``retrieve(q, view, budget, ...)`` on a paged view."""
+    _warn_deprecated(
+        "kernels.ops.paged_fused_retrieve",
+        "kernels.ops.retrieve(q, CacheView.paged(..., meta, block_table, length), budget)",
     )
-    if return_stats:
-        return idx, tau, m
-    return idx
+    view = CacheView.paged(None, None, meta, block_table, length)
+    return retrieve(
+        q, view, budget, group_reduce=group_reduce, sink=sink, recent=recent,
+        return_stats=return_stats,
+    )
 
 
 def paged_fused_sparse_attention(
@@ -316,31 +429,13 @@ def paged_fused_sparse_attention(
     *,
     blk_k: int = 1024,
 ) -> jax.Array:
-    """Paged fused decode attention: in-kernel (block, offset) translation
-    + per-row DMA gather from the block pool.
-
-    q [B, Hq, D]; k_pool/v_pool [N, bs, Hkv, D]; idx [B, Hkv, budget]
-    logical positions; length [B] → [B, Hq, D] (q.dtype).
-    """
-    B, Hq, D = q.shape
-    Hkv = k_pool.shape[2]
-    rep = Hq // Hkv
-    budget = idx.shape[2]
-    block_size = k_pool.shape[1]
-    q4 = q.reshape(B, Hkv, rep, D)
-    if length is not None:
-        valid = idx < length[:, None, None]
-    else:
-        valid = jnp.ones_like(idx, dtype=bool)
-    mask = valid[:, :, None, :].astype(jnp.int8)
-    blk = min(blk_k, budget)
-    while budget % blk:
-        blk //= 2
-    out = _sa.paged_fused_sparse_attention_hm(
-        q4, k_pool, v_pool, block_table, idx, mask,
-        block_size=block_size, blk_k=blk, interpret=_interpret(),
+    """Deprecated: ``attend_selected`` on a paged view."""
+    _warn_deprecated(
+        "kernels.ops.paged_fused_sparse_attention",
+        "kernels.ops.attend_selected(q, CacheView.paged(k, v, None, block_table, length), idx)",
     )
-    return out.reshape(B, Hq, D).astype(q.dtype)
+    view = CacheView.paged(k_pool, v_pool, None, block_table, length)
+    return attend_selected(q, view, idx, blk_k=blk_k)
 
 
 def paged_fused_fier_attention_decode(
@@ -357,18 +452,15 @@ def paged_fused_fier_attention_decode(
     recent: int = 0,
     blk_k: int = 1024,
 ) -> jax.Array:
-    """Fully fused paged FIER decode step — the paged serving fast path.
-
-    One-pass retrieval (per-token scores never in HBM) chained into the
-    paged select-and-attend kernel; both walk ``block_table`` in-kernel,
-    so no logical-slab view of the pool is ever materialised.  Bit-
-    identical to ``fused_fier_attention_decode`` on the same logical
-    cache contents (asserted across the GQA matrix in tests/test_paged.py).
-    """
-    idx = paged_fused_retrieve(
-        q, meta, block_table, budget, length,
-        group_reduce=group_reduce, sink=sink, recent=recent,
+    """Deprecated: ``fier_decode_one_pass`` on a paged ``CacheView`` (or
+    ``policy.decode_attention`` with a paged plan)."""
+    _warn_deprecated(
+        "kernels.ops.paged_fused_fier_attention_decode",
+        "kernels.ops.fier_decode_one_pass(q, CacheView.paged(...), budget) "
+        "or policy.decode_attention(q, view, plan)",
     )
-    return paged_fused_sparse_attention(
-        q, k_pool, v_pool, block_table, idx, length, blk_k=blk_k
+    view = CacheView.paged(k_pool, v_pool, meta, block_table, length)
+    return fier_decode_one_pass(
+        q, view, budget, group_reduce=group_reduce, sink=sink, recent=recent,
+        blk_k=blk_k,
     )

@@ -11,6 +11,7 @@ import jax.numpy as jnp
 
 from repro.core import quantize as qz
 from repro.core import retrieval
+from repro.core.policy import CacheView, DecodePlan
 
 
 def fier_score(q: jax.Array, qk: qz.QuantizedKeys) -> jax.Array:
@@ -82,6 +83,75 @@ def fused_sparse_attention(
     (the unfused pipeline the fused path must agree with to tolerance)."""
     k_sel, v_sel = retrieval.gather_kv(K, V, idx)
     return retrieval.sparse_attention(q, k_sel, v_sel, idx, length)
+
+
+# --------------------------------------------------- CacheView/plan oracles
+
+def retrieve(
+    q: jax.Array,
+    view: CacheView,
+    budget: int,
+    *,
+    group_reduce: str = "max",
+    sink: int = 0,
+    recent: int = 0,
+) -> jax.Array:
+    """Oracle for ``ops.retrieve``: materialise the logical side-car
+    (paged layouts gather through the block table), then run the fully
+    materialised jnp pipeline ``approx_scores → reduce_over_query_group →
+    select_topk`` (global lax.top_k sort).  Same index *set* as the
+    kernel for any input — the kernels' scores round identically."""
+    _, _, meta = view.logical()
+    Hkv = meta.codes.shape[2]
+    s = retrieval.approx_scores(q, meta)
+    kv = retrieval.reduce_over_query_group(s, Hkv, group_reduce)
+    return retrieval.select_topk(
+        kv, budget, view.length, sink=sink, recent=recent
+    )
+
+
+def decode_attention(q: jax.Array, view: CacheView, plan: DecodePlan) -> jax.Array:
+    """The pure-jnp oracle for ``policy.decode_attention`` at *any*
+    registered (policy, layout, pipeline): materialise the logical cache
+    view and run the policy's reference pipeline with every intermediate
+    written out.  The compatibility-matrix test (tests/test_backends.py)
+    holds each plan's output to this: bit-identical for reference
+    pipelines, exact index set + attend-kernel tolerance for the fused
+    ones.
+
+    Note the reference pipelines *are* these jnp building blocks, so for
+    those matrix rows this oracle pins dispatch plumbing and the paged
+    logical-gather, not the math — the math itself is anchored
+    independently (``exact_scores`` / ``full_attention_decode``
+    comparisons in tests/test_retrieval.py and the degenerate
+    budget >= length cases)."""
+    from repro.core import quest as quest_mod
+
+    cfg = plan.policy
+    K, V, meta = view.logical()
+    length = view.length
+    if cfg.kind == "full" or meta is None and cfg.kind != "slm":
+        return retrieval.full_attention_decode(q, K, V, length)
+    if cfg.kind == "fier":
+        return retrieval.fier_decode_reference(
+            q, K, V, meta, cfg.budget, length,
+            group_reduce=cfg.group_reduce, sink=cfg.sink, recent=cfg.recent,
+        )
+    if cfg.kind == "quest":
+        return quest_mod.quest_attention_decode(
+            q, K, V, meta, cfg.budget, length, group_reduce=cfg.group_reduce
+        )
+    if cfg.kind == "slm":
+        B, Hq, _ = q.shape
+        Hkv = K.shape[2]
+        sink = max(cfg.sink, 4)
+        zeros = jnp.zeros((B, Hkv, K.shape[1]), jnp.float32)
+        idx = retrieval.select_topk(
+            zeros, cfg.budget, length, sink=sink, recent=cfg.budget - sink
+        )
+        Ksel, Vsel = retrieval.gather_kv(K, V, idx)
+        return retrieval.sparse_attention(q, Ksel, Vsel, idx, length)
+    raise ValueError(f"no oracle for policy {cfg.kind!r}")
 
 
 # ------------------------------------------------------------- paged oracles

@@ -44,17 +44,23 @@ def main() -> None:
 
     cfg = reduced_config(args.arch) if args.reduced else get_config(args.arch)
     mesh = make_local_mesh(model_axis=args.model_axis)
+    layout = "paged" if args.paged else "slab"
     pol = None
     if args.policy != "full" and not cfg.attention_free:
+        # paged fier serves through the one-pass kernel pipeline (the
+        # only paged fier pipeline in the capability matrix besides the
+        # reference oracle); slab mode keeps the reference pipeline so
+        # the driver exercises both ends of the matrix
         pol = PolicyConfig(
             kind=args.policy, budget=args.budget, group=args.group,
             skip_layers=1 if args.reduced else 2,
-            fused=args.paged, paged=args.paged,
+            pipeline="one_pass" if args.paged else "reference",
+            layout=layout,
             block_size=args.block_size, pool_blocks=args.pool_blocks,
         )
     elif args.paged:
         pol = PolicyConfig(
-            kind="full", paged=True, block_size=args.block_size,
+            kind="full", layout="paged", block_size=args.block_size,
             pool_blocks=args.pool_blocks,
         )
     dcfg = DistConfig(mesh=mesh, batch_axes=batch_axes(mesh))

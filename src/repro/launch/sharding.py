@@ -119,11 +119,31 @@ def opt_shardings(opt_shape: Any, params_sh: Any, mesh: Mesh) -> Any:
 
 # ------------------------------------------------------------ cache / batch
 
-def cache_batch_axes(init_cache) -> Any:
+def cache_batch_axes(init_cache, capacity: int | None = None) -> Any:
     """Discover every cache leaf's batch-axis index by shape-diffing
-    ``init_cache`` at two batch sizes (same trick as serving.Engine)."""
-    c2 = jax.eval_shape(lambda: init_cache(2, 64, 0))
-    c3 = jax.eval_shape(lambda: init_cache(3, 64, 0))
+    ``init_cache`` at two batch sizes (same trick as serving.Engine).
+
+    The probe capacity must satisfy the bundle plan's capacity validation
+    (budget <= capacity, block divisibility).  Pass the cell's real
+    capacity when known; with ``capacity=None`` the probe grows a dummy
+    capacity until validation accepts it (shape-only ``eval_shape``, so
+    over-sizing costs nothing).  The odd multipliers cover paged block
+    sizes with an odd factor (24, 40, 48, …), which no power of two
+    divides."""
+    if capacity is not None:
+        caps = [capacity]
+    else:
+        caps = [b * m for b in (64, 1024, 8192, 1 << 20) for m in (1, 3, 5, 7)]
+    err = None
+    for cap in caps:
+        try:
+            c2 = jax.eval_shape(lambda: init_cache(2, cap, 0))
+            c3 = jax.eval_shape(lambda: init_cache(3, cap, 0))
+            break
+        except ValueError as e:
+            err = e
+    else:
+        raise err
 
     def axis(a, b):
         diffs = [i for i, (x, y) in enumerate(zip(a.shape, b.shape)) if x != y]

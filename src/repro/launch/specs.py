@@ -192,7 +192,7 @@ def build_cell(
     B, S = shape.global_batch, shape.seq_len
     step_fn = make_serve_step(bundle)
     cache_shape = jax.eval_shape(lambda: bundle.init_cache(B, S, S - 1))
-    baxes_tree = shard.cache_batch_axes(bundle.init_cache)
+    baxes_tree = shard.cache_batch_axes(bundle.init_cache, S)
     cache_sh = shard.cache_shardings(cache_shape, mesh, cell_b_axes, s_axes, baxes_tree)
     token_struct = jax.ShapeDtypeStruct(
         (B,), jnp.int32,

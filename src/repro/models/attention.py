@@ -20,7 +20,7 @@ from repro.compat import shard_map
 from repro.configs.base import ModelConfig
 from repro.core import distributed as dist
 from repro.core import policy as core_policy
-from repro.core.policy import PolicyConfig
+from repro.core.policy import CacheView, DecodePlan, PolicyConfig
 from repro.kvcache import cache as kvcache
 from repro.kvcache import paged as kvcache_paged
 
@@ -140,30 +140,38 @@ def decode_self_attention(
     layer_cache: dict,
     length: jax.Array,
     cfg: ModelConfig,
-    pol: PolicyConfig,
+    plan: DecodePlan | PolicyConfig,
     dcfg: DistConfig | None = None,
     *,
     update_meta: bool = True,
     block_table: jax.Array | None = None,
 ) -> tuple[jax.Array, dict]:
-    """One-token decode self-attention with cache append + policy selection.
+    """One-token decode self-attention with cache append + plan-dispatched
+    attention.
 
     x: [B, 1, d]; layer_cache: {k, v[, meta]} (single layer, no L axis);
     length: [B] current lengths (the new token is written at ``length``).
-    Returns (out [B, 1, d], updated layer_cache).
+    ``plan`` is the resolved ``DecodePlan`` (a bare ``PolicyConfig`` is
+    wrapped via ``DecodePlan.build`` as a convenience).  Returns
+    (out [B, 1, d], updated layer_cache).
 
     ``block_table`` [B, n_btab] switches the layer to the *paged* cache:
     layer_cache holds block-pool slabs [N, bs, Hkv, D] (+ paged side-car)
     shared by all requests, the append and the metadata refresh write
-    through the table, and attention dispatches to the page-table-aware
-    kernels (``core.policy.decode_attention_paged``).
+    through the table, and attention dispatches through a paged
+    ``CacheView`` to the page-table-aware kernels.
 
     When the cache is sequence-sharded (dcfg.seq_axes), the append, the
     metadata refresh AND the attention all run inside one shard_map — a
     traced-index dynamic_update_slice along a GSPMD-sharded dim would
     otherwise all-gather the whole slab (observed: 2.13 GB/chip/layer on
-    the first dry-run; EXPERIMENTS.md §Perf iteration 1).
+    the first dry-run; EXPERIMENTS.md §Perf iteration 1).  This path is
+    its own reference implementation (``core.distributed`` LSE merge):
+    the single-shard kernel pipelines never run under GSPMD.
     """
+    if isinstance(plan, PolicyConfig):
+        plan = DecodePlan.build(plan)
+    pol = plan.policy
     B = x.shape[0]
     q, k_new, v_new = qkv_proj(p, x, cfg, positions=length[:, None])
     qh = q.reshape(B, cfg.n_heads, cfg.d_head)
@@ -183,9 +191,9 @@ def decode_self_attention(
             meta = kvcache_paged.paged_append_token_metadata(
                 meta, k_pool, block_table, length, pol
             )
-        out = core_policy.decode_attention_paged(
-            qh, k_pool, v_pool, meta, block_table, pol, length + 1,
-            layer=pol.skip_layers,
+        view = CacheView.paged(k_pool, v_pool, meta, block_table, length + 1)
+        out = core_policy.decode_attention(
+            qh, view, plan, layer=pol.skip_layers
         )
         new_cache = dict(layer_cache, k=k_pool, v=v_pool)
         if meta is not None:
@@ -194,13 +202,6 @@ def decode_self_attention(
         return y, new_cache
 
     if dcfg is not None and dcfg.seq_axes:
-        if pol.fused:
-            # the fused select-and-attend kernel is single-shard for now:
-            # inside the shard_map body each shard selects over its local
-            # slab via the distributed LSE-merge path instead.  Strip the
-            # flag explicitly so the dispatch below never silently runs a
-            # DMA kernel under GSPMD.
-            pol = dataclasses.replace(pol, fused=False)
         out, k_slab, v_slab, meta = _sharded_decode_step(
             qh, k_new, v_new, layer_cache["k"], layer_cache["v"], meta,
             length, cfg, pol, dcfg,
@@ -211,8 +212,9 @@ def decode_self_attention(
         )
         if meta is not None and update_meta:
             meta = kvcache.append_token_metadata(meta, k_slab, length, pol)
+        view = CacheView.slab(k_slab, v_slab, meta, length + 1)
         out = core_policy.decode_attention(
-            qh, k_slab, v_slab, meta, pol, length + 1, layer=pol.skip_layers
+            qh, view, plan, layer=pol.skip_layers
         )
     new_cache = dict(layer_cache, k=k_slab, v=v_slab)
     if meta is not None:

@@ -17,7 +17,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig, padded_vocab
-from repro.core.policy import PolicyConfig, build_metadata
+from repro.core.policy import DecodePlan, PolicyConfig, build_metadata
 from repro.kvcache import cache as kvcache
 
 from . import attention as attn
@@ -78,7 +78,8 @@ def build(
     max_positions: int | None = None,
 ) -> ModelBundle:
     pol = pol or PolicyConfig(kind="full")
-    pol_full = PolicyConfig(kind="full", skip_layers=0)
+    plan = DecodePlan.build(pol)
+    plan_full = DecodePlan.build(PolicyConfig(kind="full", skip_layers=0))
     Vp = padded_vocab(cfg)
     cdt = jnp.bfloat16 if cfg.compute_dtype == "bfloat16" else jnp.float32
     skip = min(pol.skip_layers if pol.kind != "full" else 0, cfg.n_layers)
@@ -213,12 +214,12 @@ def build(
         pos = jnp.clip(length, 0, max_pos - 1)
         x = (x + jnp.take(params["pos_dec"], pos, axis=0)[:, None, :]).astype(cdt)
 
-        def mk_body(policy_cfg, use_dist):
+        def mk_body(layer_plan, use_dist):
             def body(h, xs):
                 lp, lc, kc, vc = xs
                 o, lc = attn.decode_self_attention(
                     lp["self_attn"], apply_norm(h, lp["norm1"], cfg.norm), lc,
-                    length, cfg, policy_cfg, dcfg if use_dist else None,
+                    length, cfg, layer_plan, dcfg if use_dist else None,
                 )
                 h = h + o
                 h = h + _cross_attention_decode(
@@ -235,11 +236,11 @@ def build(
         front_cache = cache["front"]
         if skip:
             h, front_cache = maybe_scan(
-                mk_body(pol_full, False), x,
+                mk_body(plan_full, False), x,
                 (front_p, cache["front"], cache["cross_k"][:skip], cache["cross_v"][:skip]),
             )
         h, rest_cache = maybe_scan(
-            mk_body(pol, True), h,
+            mk_body(plan, True), h,
             (rest_p, cache["rest"], cache["cross_k"][skip:], cache["cross_v"][skip:]),
         )
         h = apply_norm(h, params["dec_norm"], cfg.norm)[:, 0]
@@ -268,5 +269,5 @@ def build(
     return ModelBundle(
         cfg=cfg, init=init, train_loss=train_loss, prefill=prefill,
         decode_step=decode_step, init_cache=init_cache,
-        param_count=cfg.param_count,
+        param_count=cfg.param_count, policy=pol, plan=plan,
     )

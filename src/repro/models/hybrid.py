@@ -19,7 +19,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig, padded_vocab
-from repro.core.policy import PolicyConfig, build_metadata
+from repro.core.policy import DecodePlan, PolicyConfig, build_metadata
 from repro.kvcache import cache as kvcache
 
 from . import attention as attn
@@ -66,6 +66,7 @@ def build(
     loss_chunk: int = 1024,
 ) -> ModelBundle:
     pol = pol or PolicyConfig(kind="full")
+    plan = DecodePlan.build(pol)
     Vp = padded_vocab(cfg)
     cdt = jnp.bfloat16 if cfg.compute_dtype == "bfloat16" else jnp.float32
     n_apps, tail = _n_apps(cfg)
@@ -192,7 +193,7 @@ def build(
             xin = jnp.concatenate([hc, x0], axis=-1)
             o, ac = attn.decode_self_attention(
                 sp["attn"], apply_norm(xin, sp["norm1"], cfg.norm), ac, length,
-                cfg, pol, dcfg,
+                cfg, plan, dcfg,
             )
             hc = hc + o
             hc = hc + mlp_apply(apply_norm(hc, sp["norm2"], cfg.norm), sp["mlp"], cfg.act)
@@ -236,7 +237,7 @@ def build(
     return ModelBundle(
         cfg=cfg, init=init, train_loss=train_loss, prefill=prefill,
         decode_step=decode_step, init_cache=init_cache,
-        param_count=cfg.param_count,
+        param_count=cfg.param_count, policy=pol, plan=plan,
     )
 
 

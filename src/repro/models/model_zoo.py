@@ -17,7 +17,11 @@ def build_model(
     remat: bool = True,
     max_positions: int | None = None,
 ) -> ModelBundle:
-    if pol is not None and pol.paged and cfg.family not in ("dense", "moe", "vlm"):
+    if (
+        pol is not None
+        and pol.layout == "paged"
+        and cfg.family not in ("dense", "moe", "vlm")
+    ):
         raise ValueError(
             f"paged KV cache is only supported for transformer families, "
             f"not {cfg.family!r}"

@@ -23,7 +23,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig, padded_vocab
-from repro.core.policy import PolicyConfig
+from repro.core.policy import DecodePlan, PolicyConfig
 from repro.kvcache import cache as kvcache
 from repro.kvcache import paged as kvcache_paged
 
@@ -46,7 +46,9 @@ class ModelBundle:
     param_count: Callable
     policy: "PolicyConfig | None" = None  # the cache policy the bundle was
                                           # built with (engine introspects
-                                          # paged/block_size from here)
+                                          # layout/block_size from here)
+    plan: "DecodePlan | None" = None      # the resolved DecodePlan the
+                                          # decode path dispatches through
 
 
 def _dtype(name: str):
@@ -62,7 +64,15 @@ def build(
     loss_chunk: int = 1024,
 ) -> ModelBundle:
     pol = pol or PolicyConfig(kind="full")
-    pol_full = PolicyConfig(kind="full", skip_layers=0)
+    # resolve + validate the decode plan once (capability matrix, paged
+    # block-size rules); capacity-dependent checks re-run in init_cache
+    plan = DecodePlan.build(pol)
+    pol_full = PolicyConfig(
+        kind="full", skip_layers=0,
+        layout=pol.layout, block_size=pol.block_size,
+        pool_blocks=pol.pool_blocks,
+    )
+    plan_full = DecodePlan.build(pol_full)
     Vp = padded_vocab(cfg)
     cdt = _dtype(cfg.compute_dtype)
     pdt = _dtype(cfg.param_dtype)
@@ -195,7 +205,10 @@ def build(
         return {"front": front, "rest": rest, "length": lengths}
 
     def init_cache(B, capacity, length):
-        if pol.paged:
+        # capacity-dependent plan validation happens here, where capacity
+        # is first known (budget/sink/recent bounds, block divisibility)
+        plan.validate_capacity(capacity)
+        if pol.layout == "paged":
             # one block pool shared by every request: a physical block id
             # indexes the same row of every layer's pool slab, and the
             # per-request [B, capacity/bs] block table (all-zeros = the
@@ -233,19 +246,21 @@ def build(
     # -------------------------------------------------------------- decode
     def decode_step(params, token, cache):
         length = cache["length"]
-        # paged mode: the per-request block table rides in the cache
+        # paged layout: the per-request block table rides in the cache
         # pytree (host-updated between steps by the engine's allocator)
         # and is closed over by both layer scans — it has no layer axis
-        block_table = cache.get("block_table") if pol.paged else None
+        block_table = (
+            cache.get("block_table") if plan.layout == "paged" else None
+        )
         x = jnp.take(params["embed"], token, axis=0)[:, None, :].astype(cdt)
         B = x.shape[0]
 
-        def mk_body(policy_cfg, use_dist):
+        def mk_body(layer_plan, use_dist):
             def body(h, xs):
                 lp, lc = xs
                 o, lc = attn.decode_self_attention(
                     lp["attn"], apply_norm(h, lp["norm1"], cfg.norm), lc, length,
-                    cfg, policy_cfg, dcfg if use_dist else None,
+                    cfg, layer_plan, dcfg if use_dist else None,
                     block_table=block_table,
                 )
                 h = h + o
@@ -257,10 +272,10 @@ def build(
         front_params = jax.tree.map(lambda a: a[:skip], params["layers"])
         rest_params = jax.tree.map(lambda a: a[skip:], params["layers"])
         h, front_cache = maybe_scan(
-            mk_body(pol_full, use_dist=False), x, (front_params, cache["front"])
+            mk_body(plan_full, use_dist=False), x, (front_params, cache["front"])
         ) if skip else (x, cache["front"])
         h, rest_cache = maybe_scan(
-            mk_body(pol, use_dist=True), h, (rest_params, cache["rest"])
+            mk_body(plan, use_dist=True), h, (rest_params, cache["rest"])
         )
         h = apply_norm(h, params["final_norm"], cfg.norm)[:, 0]
         logits = _masked_logits(h, _head(params), cfg.vocab, Vp)
@@ -282,6 +297,7 @@ def build(
         init_cache=init_cache,
         param_count=cfg.param_count,
         policy=pol,
+        plan=plan,
     )
 
 

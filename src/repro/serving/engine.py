@@ -15,7 +15,7 @@ the batched cache; the batch axis of every cache leaf is discovered
 automatically by diffing ``init_cache`` shapes at two batch sizes (no
 per-model bookkeeping).
 
-Paged mode (``Engine.build(..., paged=True)``; DESIGN.md §Paged KV
+Paged mode (``Engine.build(..., layout='paged')``; DESIGN.md §Paged KV
 cache): the cache is a shared block pool + per-request block tables, the
 engine owns the host-side ``BlockAllocator`` (prefix sharing via chained
 block hashes, full-prompt hits skip prefill entirely, copy-on-write on
@@ -52,20 +52,38 @@ def serving_policy(
     skip_layers: int = 2,
     sink: int = 4,
     recent: int = 64,
-    fused: bool = True,
-    one_pass: bool = True,
+    pipeline: str = "one_pass",
+    layout: str = "slab",
+    fused: bool | None = None,
+    one_pass: bool | None = None,
 ) -> PolicyConfig:
-    """The serving-default FIER policy: one-pass fused retrieval (score
+    """The serving-default FIER policy: the ``one_pass`` pipeline (score
     scan + group-reduce + mask + exact threshold top-k in a single
     kernel — per-token scores never touch HBM) chained into the fused
     select-and-attend kernel, with the standard sink/recent guard-rails
-    for generation quality.  ``one_pass=False`` keeps the two-pass kernel
-    retrieval (score tensor materialised between kernels);
-    ``fused=False`` falls back to the unfused top-k + gather pipeline
-    (the validation oracle)."""
+    for generation quality.  ``pipeline='two_pass'`` keeps the two-pass
+    kernel retrieval (score tensor materialised between kernels);
+    ``pipeline='reference'`` is the unfused top-k + gather oracle.
+    ``layout='paged'`` serves from the block-pool cache.
+
+    The pre-registry ``fused`` / ``one_pass`` booleans are accepted as
+    deprecated aliases and translated onto ``pipeline``."""
+    if fused is not None or one_pass is not None:
+        from repro.core.policy import _warn_deprecated
+
+        _warn_deprecated(
+            "serving_policy's `fused` / `one_pass` booleans",
+            "pipeline='reference'|'two_pass'|'one_pass'",
+        )
+        if fused is False:
+            pipeline = "reference"
+        elif one_pass is False:
+            pipeline = "two_pass"
+        else:
+            pipeline = "one_pass"
     return PolicyConfig(
         kind="fier", budget=budget, group=group, skip_layers=skip_layers,
-        sink=sink, recent=recent, fused=fused, one_pass=one_pass,
+        sink=sink, recent=recent, pipeline=pipeline, layout=layout,
     )
 
 
@@ -120,7 +138,11 @@ class Engine:
         # sampling never reuses a key (callers may still pass rng=...)
         self._rng = jax.random.PRNGKey(seed)
         pol = bundle.policy
-        self.paged = bool(pol is not None and pol.paged)
+        self.paged = bool(pol is not None and pol.layout == "paged")
+        if bundle.plan is not None:
+            # fail fast at engine construction instead of deep inside the
+            # first decode kernel (budget/sink/recent vs capacity)
+            bundle.plan.validate_capacity(capacity)
         self._prefill = jax.jit(partial(bundle.prefill, capacity=capacity))
         donate = (2,) if donate_cache else ()
         self._decode = jax.jit(bundle.decode_step, donate_argnums=donate)
@@ -182,18 +204,17 @@ class Engine:
         capacity: int,
         policy: PolicyConfig | None = None,
         sampling: SamplingConfig = SamplingConfig(),
-        paged: bool = False,
+        layout: str | None = None,
         block_size: int = 32,
         pool_blocks: int = 0,
         **build_kwargs,
     ) -> "Engine":
         """Build bundle + engine with the serving defaults: when ``policy``
-        is None the fused FIER fast path (``serving_policy()``) is used,
-        with the budget clamped to ``capacity`` (a budget larger than the
-        cache would otherwise fail the kernel's budget ≤ S check at the
-        first decode step).
+        is None the one-pass FIER fast path (``serving_policy()``) is
+        used, with the budget clamped to ``capacity`` (a budget larger
+        than the cache would otherwise fail plan validation).
 
-        ``paged=True`` switches the cache to the block-pool layout
+        ``layout='paged'`` switches the cache to the block-pool layout
         (``pool_blocks`` physical blocks of ``block_size`` tokens, prefix
         sharing + copy-on-write; see DESIGN.md §Paged KV cache), so HBM
         is bounded by *tokens resident* instead of n_slots × worst-case
@@ -201,14 +222,34 @@ class Engine:
         memory saving, useful for A/B testing the layouts)."""
         from repro.models import build_model
 
+        if "paged" in build_kwargs:
+            # pre-registry kwarg: forward onto layout= with a deprecation
+            # warning instead of dying in build_model's signature
+            from repro.core.policy import _warn_deprecated
+
+            _warn_deprecated(
+                "Engine.build's `paged` boolean", "layout='paged'"
+            )
+            if build_kwargs.pop("paged") and layout is None:
+                layout = "paged"
+                # legacy semantics: the pre-registry paged dispatch
+                # ignored the one_pass flag, so a two_pass policy paged
+                # through this deprecated kwarg keeps serving via the
+                # one-pass kernels instead of tripping the
+                # (paged, two_pass) capability-matrix hole.  The new
+                # layout= parameter does NOT remap — an explicit
+                # two_pass+paged plan raises UnsupportedPlanError.
+                if policy is not None and policy.pipeline == "two_pass":
+                    policy = dataclasses.replace(policy, pipeline="one_pass")
         if policy is not None:
             pol = policy
         else:
             base = serving_policy()
             pol = dataclasses.replace(base, budget=min(base.budget, capacity))
-        if paged and not pol.paged:
+        if layout is not None and layout != pol.layout:
             pol = dataclasses.replace(
-                pol, paged=True, block_size=block_size, pool_blocks=pool_blocks
+                pol, layout=layout, block_size=block_size,
+                pool_blocks=pool_blocks,
             )
         bundle = build_model(cfg, pol, **build_kwargs)
         return cls(bundle, n_slots=n_slots, capacity=capacity, sampling=sampling)

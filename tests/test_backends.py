@@ -1,0 +1,546 @@
+"""Backend registry: the (policy × layout × pipeline) compatibility
+matrix against the kernels/ref.py oracle, plan validation, and the
+deprecation shims for the pre-registry boolean-flag API.
+
+This file is the home of the compat-shim tests — it is the only place
+outside the shims themselves allowed to spell the deprecated
+``fused=`` / ``one_pass=`` / ``paged=`` kwargs.
+"""
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import policy as pol
+from repro.core import quantize as qz
+from repro.core import retrieval as rt
+from repro.core.policy import (
+    CacheView,
+    DecodePlan,
+    PolicyConfig,
+    UnsupportedPlanError,
+    build_metadata,
+    decode_attention,
+    get_backend,
+    registered_backends,
+)
+from repro.kernels import ops, ref
+
+# (B, S, Hkv, Hq, D, g, bs): the GQA grid of test_kernels with a cache
+# block size dividing S (bs % 8 == 0, bs % g == 0) for the paged combos
+GRID = [
+    (2, 256, 2, 4, 64, 32, 32),
+    (1, 512, 1, 8, 128, 32, 64),
+    (2, 128, 4, 4, 32, 16, 16),
+    (1, 1024, 2, 2, 128, 64, 128),
+    (3, 192, 3, 6, 16, 8, 24),
+]
+
+COMBOS = [
+    (name, layout, pipeline)
+    for name in registered_backends()
+    for layout, pipeline in sorted(get_backend(name).supports)
+]
+
+
+def _inputs(B, S, Hkv, Hq, D, seed=0):
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(seed), 3)
+    K = jax.random.normal(k1, (B, S, Hkv, D), jnp.bfloat16)
+    V = jax.random.normal(k2, (B, S, Hkv, D), jnp.bfloat16)
+    q = jax.random.normal(k3, (B, Hq, D))
+    return q, K, V
+
+
+def _slab_to_pool(arr, table, N):
+    B, S = arr.shape[:2]
+    nb = table.shape[1]
+    pb = S // nb
+    pool = jnp.zeros((N, pb, *arr.shape[2:]), arr.dtype)
+    blocks = arr.reshape(B, nb, pb, *arr.shape[2:])
+    return pool.at[table.reshape(-1)].set(blocks.reshape(B * nb, pb, *arr.shape[2:]))
+
+
+def _make_view(layout, K, V, meta, length, bs, seed=0):
+    """A CacheView over the given logical contents in either layout (the
+    paged pool scatters the slab's blocks at a permuted physical order)."""
+    if layout == "slab":
+        return CacheView.slab(K, V, meta, length)
+    B, S = K.shape[:2]
+    nb = S // bs
+    N = B * nb + 1
+    rng = np.random.default_rng(seed)
+    table = jnp.asarray(1 + rng.permutation(B * nb).reshape(B, nb), jnp.int32)
+    pk, pv = _slab_to_pool(K, table, N), _slab_to_pool(V, table, N)
+    pmeta = meta
+    if meta is not None:
+        pmeta = qz.QuantizedKeys(
+            _slab_to_pool(meta.codes, table, N),
+            _slab_to_pool(meta.scale, table, N),
+            _slab_to_pool(meta.zero, table, N),
+            meta.group,
+        )
+    return CacheView.paged(pk, pv, pmeta, table, length)
+
+
+def _combo_out(name, layout, pipeline, B, S, Hkv, Hq, D, g, bs, seed=0):
+    q, K, V = _inputs(B, S, Hkv, Hq, D, seed=seed)
+    cfg = PolicyConfig(
+        kind=name, budget=min(64, S), group=g, page=8, skip_layers=0,
+        pipeline=pipeline, layout=layout, block_size=bs,
+    )
+    meta = build_metadata(K, cfg)
+    view = _make_view(layout, K, V, meta, jnp.full((B,), S - 3, jnp.int32), bs)
+    plan = DecodePlan.build(cfg)
+    out = decode_attention(q, view, plan, layer=1)
+    # the oracle always evaluates the reference pipeline over the logical
+    # slab contents (ref.decode_attention materialises paged views)
+    oracle = ref.decode_attention(q, view, plan)
+    return q, view, plan, np.asarray(out), np.asarray(oracle)
+
+
+@pytest.mark.parametrize("name,layout,pipeline", COMBOS)
+@pytest.mark.parametrize("B,S,Hkv,Hq,D,g,bs", GRID)
+def test_matrix_combo_matches_oracle(name, layout, pipeline, B, S, Hkv, Hq, D, g, bs):
+    """Every registered (policy, layout, pipeline) combination agrees with
+    the kernels/ref.py oracle across the GQA grid: bit-identical for the
+    reference pipelines (same jnp ops on the same logical contents —
+    gathering a paged pool is exact), and for the kernel pipelines an
+    exact index *set* (asserted below via ops.retrieve vs ref.retrieve)
+    with attend-kernel tolerance on the output."""
+    _, _, _, out, oracle = _combo_out(name, layout, pipeline, B, S, Hkv, Hq, D, g, bs)
+    if pipeline == "reference":
+        np.testing.assert_array_equal(out, oracle)
+    else:
+        np.testing.assert_allclose(
+            out.astype(np.float32), oracle.astype(np.float32),
+            rtol=5e-2, atol=5e-2,
+        )
+
+
+@pytest.mark.parametrize("B,S,Hkv,Hq,D,g,bs", GRID)
+def test_matrix_fier_pipelines_bit_identical(B, S, Hkv, Hq, D, g, bs):
+    """Within the fier backend the kernel pipelines are *bit-identical*
+    across every registered combo that shares the logical cache contents:
+    slab one_pass == slab two_pass == paged one_pass (same scores → same
+    index set in the same compaction order → same attend kernel), and the
+    paged reference gather reproduces the slab reference bitwise."""
+    outs = {}
+    for layout, pipeline in sorted(get_backend("fier").supports):
+        *_, out, _ = _combo_out("fier", layout, pipeline, B, S, Hkv, Hq, D, g, bs)
+        outs[(layout, pipeline)] = out
+    np.testing.assert_array_equal(
+        outs[("slab", "one_pass")], outs[("slab", "two_pass")]
+    )
+    np.testing.assert_array_equal(
+        outs[("slab", "one_pass")], outs[("paged", "one_pass")]
+    )
+    np.testing.assert_array_equal(
+        outs[("slab", "reference")], outs[("paged", "reference")]
+    )
+
+
+@pytest.mark.parametrize("layout", ["slab", "paged"])
+def test_matrix_retrieval_exact_index_set(layout):
+    """The retrieval stage of the kernel pipelines returns exactly the
+    oracle's index set in both layouts (the bit-level half of the matrix
+    contract that the attend-tolerance comparison above cannot see)."""
+    B, S, Hkv, Hq, D, g, bs = GRID[0]
+    q, K, V = _inputs(B, S, Hkv, Hq, D, seed=3)
+    meta = qz.quantize(K.astype(jnp.float32), g)
+    view = _make_view(layout, K, V, meta, jnp.full((B,), S - 5, jnp.int32), bs)
+    for budget, sink, recent in [(64, 0, 0), (32, 4, 8)]:
+        got = np.asarray(ops.retrieve(q, view, budget, sink=sink, recent=recent))
+        want = np.asarray(ref.retrieve(q, view, budget, sink=sink, recent=recent))
+        np.testing.assert_array_equal(np.sort(got, -1), np.sort(want, -1))
+
+
+def test_registry_contents():
+    assert registered_backends() == ("full", "fier", "quest", "slm")
+    assert pol.POLICIES == registered_backends()
+    assert get_backend("fier").supports == frozenset({
+        ("slab", "reference"), ("slab", "two_pass"), ("slab", "one_pass"),
+        ("paged", "reference"), ("paged", "one_pass"),
+    })
+
+
+def test_third_party_backend_registration():
+    """A backend registered from outside the repo plugs into the same
+    dispatch: DecodePlan resolves it and decode_attention routes to it."""
+    calls = []
+
+    def dummy_decode(q, view, plan):
+        calls.append(plan.pipeline)
+        K, V, _ = view.logical()
+        return rt.full_attention_decode(q, K, V, view.length)
+
+    backend = pol.AttentionBackend(
+        name="thirdparty",
+        supports=frozenset({("slab", "reference")}),
+        build_metadata=lambda K, cfg: None,
+        update_metadata=lambda meta, K, pos, cfg: meta,
+        decode=dummy_decode,
+        needs_metadata=False,  # metadata-less: decode must still be called
+    )
+    pol.register_backend(backend)
+    try:
+        with pytest.raises(ValueError, match="already registered"):
+            pol.register_backend(backend)
+        import repro.core as core
+
+        assert "thirdparty" in pol.POLICIES
+        assert "thirdparty" in core.POLICIES  # lazy re-export, not frozen
+        cfg = PolicyConfig(kind="thirdparty", budget=16, skip_layers=0)
+        plan = DecodePlan.build(cfg)
+        q, K, V = _inputs(1, 64, 2, 4, 16, seed=5)
+        out = decode_attention(
+            q, CacheView.slab(K, V, None, jnp.array([64], jnp.int32)), plan
+        )
+        # needs_metadata=False routed a meta-less view to the backend's
+        # own decode, not the dense fallback
+        assert calls == ["reference"]
+        assert np.isfinite(np.asarray(out)).all()
+        with pytest.raises(UnsupportedPlanError):
+            DecodePlan.build(cfg, layout="paged")
+    finally:
+        pol._REGISTRY.pop("thirdparty", None)
+        pol.POLICIES = pol.registered_backends()
+
+
+# ------------------------------------------------------------ plan validation
+
+def test_unsupported_plan_lists_matrix():
+    """quest on a paged cache (or any kernel pipeline) must raise a clear
+    UnsupportedPlanError listing the supported matrix — the old dispatch
+    silently fell through to the unfused slab path."""
+    cfg = PolicyConfig(kind="quest", budget=16, page=8)
+    with pytest.raises(UnsupportedPlanError, match=r"slab×reference"):
+        DecodePlan.build(cfg, layout="paged")
+    with pytest.raises(UnsupportedPlanError, match="quest"):
+        DecodePlan.build(cfg, pipeline="one_pass")
+    with pytest.raises(UnsupportedPlanError):
+        DecodePlan.build(
+            PolicyConfig(kind="fier", budget=16), layout="paged",
+            pipeline="two_pass",
+        )
+
+
+def test_quest_fused_flags_raise_not_fall_through():
+    """The legacy flag spelling of quest+fused/paged now raises instead of
+    silently running the slab reference path."""
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        cfg = PolicyConfig(kind="quest", budget=16, page=8, fused=True)
+    assert cfg.pipeline == "one_pass"
+    with pytest.raises(UnsupportedPlanError, match="supported"):
+        DecodePlan.build(cfg)
+    from repro.models import build_model
+    from repro.configs import reduced_config
+
+    with pytest.raises(UnsupportedPlanError):
+        build_model(reduced_config("olmo-1b"), cfg)
+
+
+def test_block_size_validation_hoisted_to_plan_build():
+    """PolicyConfig no longer import-validates block_size in
+    __post_init__; DecodePlan.build owns it (and the error is as clear)."""
+    cfg = PolicyConfig(kind="fier", group=32, layout="paged", block_size=12)
+    with pytest.raises(ValueError, match="divisible by 8"):
+        DecodePlan.build(cfg)
+    with pytest.raises(ValueError, match="divisible by group"):
+        DecodePlan.build(
+            PolicyConfig(kind="fier", group=32, layout="paged", block_size=16)
+        )
+    DecodePlan.build(PolicyConfig(kind="fier", group=32, layout="paged",
+                                  block_size=64))  # divisible: fine
+
+
+def test_budget_validated_against_capacity():
+    """Over-budget configs fail at plan/capacity validation time with a
+    clear message, not deep inside the kernel at the first decode step.
+    sink/recent are score overrides clamped by decode-time masking, so
+    any value stays valid at any capacity (the pre-registry behaviour)."""
+    cfg = PolicyConfig(kind="fier", budget=128, group=8, skip_layers=1)
+    with pytest.raises(ValueError, match="budget 128 exceeds"):
+        DecodePlan.build(cfg, capacity=64)
+    DecodePlan.build(cfg, capacity=128)  # fits: fine
+    DecodePlan.build(  # oversized guard-rails are masked, not rejected
+        PolicyConfig(kind="fier", budget=32, group=8, sink=4, recent=128),
+        capacity=64,
+    )
+
+
+def test_engine_and_init_cache_validate_capacity():
+    from repro.configs import reduced_config
+    from repro.models import build_model
+    from repro.serving import Engine
+
+    cfg = reduced_config("olmo-1b")
+    bundle = build_model(
+        cfg, PolicyConfig(kind="fier", budget=128, group=8, skip_layers=1)
+    )
+    with pytest.raises(ValueError, match="budget 128 exceeds"):
+        Engine(bundle, n_slots=2, capacity=64)
+    with pytest.raises(ValueError, match="budget 128 exceeds"):
+        bundle.init_cache(2, 64, 0)
+
+
+def test_engine_build_serving_defaults_at_small_capacity():
+    """Engine.build with no explicit policy must serve at any capacity:
+    the budget clamps and the default sink/recent guard-rails (4/64)
+    pass validation unchanged (masking clamps them at decode time)."""
+    from repro.configs import reduced_config
+    from repro.serving import Engine
+
+    eng = Engine.build(reduced_config("olmo-1b"), n_slots=2, capacity=32)
+    p = eng.bundle.policy
+    assert p.budget <= 32 and (p.sink, p.recent) == (4, 64)
+    # and an explicit policy with oversized guard-rails also constructs
+    from repro.serving import serving_policy
+
+    Engine.build(reduced_config("olmo-1b"), n_slots=2, capacity=32,
+                 policy=serving_policy(budget=32))
+
+
+def test_serving_policy_legacy_kwargs_forward(fresh_warnings):
+    """serving_policy's old fused=/one_pass= booleans translate onto
+    pipeline with a deprecation warning (not a TypeError)."""
+    from repro.serving import serving_policy
+
+    p, _ = _assert_warns_exactly_once(lambda: serving_policy(one_pass=False))
+    assert p.pipeline == "two_pass"
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        assert serving_policy(fused=False).pipeline == "reference"
+        assert serving_policy(fused=True).pipeline == "one_pass"
+        assert serving_policy(fused=True, one_pass=True).pipeline == "one_pass"
+    assert serving_policy().pipeline == "one_pass"  # flag-free: no warning
+
+
+def test_engine_build_paged_kwarg_forwards(fresh_warnings):
+    """The PR 3 spelling Engine.build(..., paged=True) forwards onto
+    layout='paged' with a deprecation warning instead of a TypeError in
+    build_model."""
+    from repro.configs import reduced_config
+    from repro.serving import Engine
+
+    cfg = reduced_config("olmo-1b")
+    eng, _ = _assert_warns_exactly_once(
+        lambda: Engine.build(
+            cfg, n_slots=2, capacity=64, paged=True, block_size=32,
+        )
+    )
+    assert eng.paged and eng.bundle.policy.layout == "paged"
+    # and the pre-registry spelling of the two_pass+paged combo — a
+    # two_pass policy paged via the deprecated kwarg — keeps serving on
+    # the one-pass kernels (old paged dispatch ignored the flag)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        from repro.serving import serving_policy
+
+        eng2 = Engine.build(
+            cfg, n_slots=2, capacity=64,
+            policy=serving_policy(budget=16, group=8, skip_layers=1,
+                                  one_pass=False),
+            paged=True, block_size=8,
+        )
+    assert eng2.paged and eng2.bundle.policy.pipeline == "one_pass"
+
+
+def test_plan_view_layout_mismatch_rejected():
+    """A plan validated for one layout cannot silently decode a view of
+    the other: decode_attention cross-checks plan.layout vs view.layout."""
+    B, S, Hkv, Hq, D, g, bs = GRID[2]
+    q, K, V = _inputs(B, S, Hkv, Hq, D, seed=21)
+    cfg = PolicyConfig(kind="fier", budget=32, group=g, skip_layers=0,
+                       block_size=bs)
+    meta = build_metadata(K, cfg)
+    view = CacheView.slab(K, V, meta, jnp.full((B,), S, jnp.int32))
+    plan = DecodePlan.build(cfg, layout="paged", pipeline="one_pass")
+    with pytest.raises(UnsupportedPlanError, match="does not match view"):
+        decode_attention(q, view, plan, layer=1)
+
+
+def test_invalid_pipeline_and_layout_strings_rejected():
+    with pytest.raises(ValueError, match="unknown pipeline"):
+        PolicyConfig(kind="fier", pipeline="fused")
+    with pytest.raises(ValueError, match="unknown layout"):
+        PolicyConfig(kind="fier", layout="pooled")
+
+
+# ------------------------------------------------------------- compat shims
+
+@pytest.fixture()
+def fresh_warnings(monkeypatch):
+    """Reset the warn-once registry so each shim's first call in this test
+    re-warns regardless of what earlier tests touched."""
+    monkeypatch.setattr(pol, "_warned", set())
+
+
+def _assert_warns_exactly_once(fn):
+    """Call twice; exactly one DeprecationWarning total."""
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        first = fn()
+        second = fn()
+    dep = [x for x in w if issubclass(x.category, DeprecationWarning)]
+    assert len(dep) == 1, [str(x.message) for x in dep]
+    return first, second
+
+
+def test_legacy_policyconfig_flags_forward(fresh_warnings):
+    (c, c2) = _assert_warns_exactly_once(
+        lambda: PolicyConfig(kind="fier", fused=True, one_pass=False)
+    )
+    assert c.pipeline == "two_pass" and c.layout == "slab"
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        assert PolicyConfig(kind="fier", fused=True).pipeline == "one_pass"
+        assert PolicyConfig(kind="fier", fused=False).pipeline == "reference"
+        assert PolicyConfig(kind="fier", paged=False).layout == "slab"
+        # the pre-registry paged dispatch ignored one_pass (the paged fast
+        # path was always the one-pass kernels): this combo keeps serving
+        pp = PolicyConfig(kind="fier", fused=True, one_pass=False, paged=True,
+                          block_size=32)
+        assert (pp.layout, pp.pipeline) == ("paged", "one_pass")
+        DecodePlan.build(pp)  # resolves, no UnsupportedPlanError
+    # dataclasses.replace must not resurrect the (unstored) flags or
+    # override explicit layout/pipeline changes
+    import dataclasses as dc
+
+    r = dc.replace(c, budget=99)
+    assert (r.pipeline, r.layout) == ("two_pass", "slab")
+    r2 = dc.replace(c, pipeline="one_pass", layout="paged")
+    assert (r2.pipeline, r2.layout) == ("one_pass", "paged")
+    # flag-free construction doesn't warn
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        PolicyConfig(kind="fier", pipeline="one_pass")
+    assert not [x for x in w if issubclass(x.category, DeprecationWarning)]
+
+
+def test_deprecated_retrieval_entrypoint_forwards(fresh_warnings):
+    q, K, V = _inputs(2, 128, 2, 4, 32, seed=7)
+    qk = qz.quantize(K.astype(jnp.float32), 16)
+    length = jnp.array([100, 128], jnp.int32)
+    view = CacheView.slab(K, V, qk, length)
+    got, again = _assert_warns_exactly_once(
+        lambda: rt.fier_attention_decode(q, K, V, qk, 32, length, fused=True)
+    )
+    np.testing.assert_array_equal(
+        np.asarray(got), np.asarray(ops.fier_decode_one_pass(q, view, 32))
+    )
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(again))
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        two = rt.fier_attention_decode(
+            q, K, V, qk, 32, length, fused=True, one_pass=False
+        )
+        unf = rt.fier_attention_decode(q, K, V, qk, 32, length)
+    np.testing.assert_array_equal(
+        np.asarray(two), np.asarray(ops.fier_decode_two_pass(q, view, 32))
+    )
+    np.testing.assert_array_equal(
+        np.asarray(unf),
+        np.asarray(rt.fier_decode_reference(q, K, V, qk, 32, length)),
+    )
+
+
+def test_deprecated_ops_entrypoints_forward(fresh_warnings):
+    q, K, V = _inputs(2, 128, 2, 4, 32, seed=8)
+    qk = qz.quantize(K.astype(jnp.float32), 16)
+    length = jnp.array([100, 128], jnp.int32)
+    view = CacheView.slab(K, V, qk, length)
+    idx_new = np.asarray(ops.retrieve(q, view, 32))
+
+    got, _ = _assert_warns_exactly_once(
+        lambda: ops.fused_retrieve(q, qk, 32, length)
+    )
+    np.testing.assert_array_equal(np.asarray(got), idx_new)
+
+    got, _ = _assert_warns_exactly_once(
+        lambda: ops.fused_fier_attention_decode(q, K, V, qk, 32, length)
+    )
+    np.testing.assert_array_equal(
+        np.asarray(got), np.asarray(ops.fier_decode_one_pass(q, view, 32))
+    )
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        two = ops.fused_fier_attention_decode(
+            q, K, V, qk, 32, length, one_pass=False
+        )
+        att = ops.fused_sparse_attention(q, K, V, jnp.asarray(idx_new), length)
+        unf = ops.fier_attention_decode(q, K, V, qk, 32, length)
+    np.testing.assert_array_equal(
+        np.asarray(two), np.asarray(ops.fier_decode_two_pass(q, view, 32))
+    )
+    np.testing.assert_array_equal(
+        np.asarray(att),
+        np.asarray(ops.attend_selected(q, view, jnp.asarray(idx_new))),
+    )
+    assert np.isfinite(np.asarray(unf, np.float32)).all()
+
+
+def test_deprecated_paged_ops_entrypoints_forward(fresh_warnings):
+    B, S, Hkv, Hq, D, g, bs = GRID[2]
+    q, K, V = _inputs(B, S, Hkv, Hq, D, seed=9)
+    meta = qz.quantize(K.astype(jnp.float32), g)
+    length = jnp.full((B,), S - 5, jnp.int32)
+    view = _make_view("paged", K, V, meta, length, bs)
+    idx_new = np.asarray(ops.retrieve(q, view, 32))
+
+    got, _ = _assert_warns_exactly_once(
+        lambda: ops.paged_fused_retrieve(q, view.meta, view.block_table, 32, length)
+    )
+    np.testing.assert_array_equal(np.asarray(got), idx_new)
+
+    got, _ = _assert_warns_exactly_once(
+        lambda: ops.paged_fused_fier_attention_decode(
+            q, view.k, view.v, view.meta, view.block_table, 32, length
+        )
+    )
+    np.testing.assert_array_equal(
+        np.asarray(got), np.asarray(ops.fier_decode_one_pass(q, view, 32))
+    )
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        att = ops.paged_fused_sparse_attention(
+            q, view.k, view.v, view.block_table, jnp.asarray(idx_new), length
+        )
+    np.testing.assert_array_equal(
+        np.asarray(att),
+        np.asarray(ops.attend_selected(q, view, jnp.asarray(idx_new))),
+    )
+
+
+def test_deprecated_policy_entrypoints_forward(fresh_warnings):
+    B, S, Hkv, Hq, D, g, bs = GRID[2]
+    q, K, V = _inputs(B, S, Hkv, Hq, D, seed=10)
+    cfg = PolicyConfig(kind="fier", budget=32, group=g, skip_layers=0)
+    meta = build_metadata(K, cfg)
+    length = jnp.full((B,), S - 5, jnp.int32)
+    view = CacheView.slab(K, V, meta, length)
+    plan = DecodePlan.build(cfg)
+    want = np.asarray(decode_attention(q, view, plan, layer=1))
+
+    got, _ = _assert_warns_exactly_once(
+        lambda: decode_attention(q, K, V, meta, cfg, length, 1)
+    )
+    np.testing.assert_array_equal(np.asarray(got), want)
+
+    pview = _make_view("paged", K, V, meta, length, bs)
+    pcfg = PolicyConfig(
+        kind="fier", budget=32, group=g, skip_layers=0,
+        pipeline="one_pass", block_size=bs,
+    )
+    want_paged = np.asarray(decode_attention(
+        q, pview, DecodePlan.build(pcfg, layout="paged"), layer=1
+    ))
+    got, _ = _assert_warns_exactly_once(
+        lambda: pol.decode_attention_paged(
+            q, pview.k, pview.v, pview.meta, pview.block_table, pcfg, length,
+            layer=1,
+        )
+    )
+    np.testing.assert_array_equal(np.asarray(got), want_paged)

@@ -59,7 +59,7 @@ print("full sharded == dense OK")
 def test_exact_mode_matches_single_device_fier():
     run_in_subprocess(_COMMON + """
 budget = 64
-ref = rt.fier_attention_decode(q, K, V, qk, budget=budget, length=length)
+ref = rt.fier_decode_reference(q, K, V, qk, budget=budget, length=length)
 got = sharded("exact", budget)
 np.testing.assert_allclose(np.asarray(got, np.float32), np.asarray(ref, np.float32),
                            atol=2e-3, rtol=2e-3)

@@ -119,15 +119,22 @@ def test_score_bytes_pallas_leaf():
     assert two >= 4 * Hq * S, two
     # one-pass retrieval: scores stay in VREGs — exactly zero
     length = jnp.full((B,), S, jnp.int32)
+    from repro.core.policy import CacheView
+
     one = count_fn_score_bytes(
-        lambda q: kops.fused_retrieve(q, qk, 32, length), S, q
+        lambda q: kops.retrieve(
+            q, CacheView.slab(None, None, qk, length), 32
+        ),
+        S, q,
     )
     assert one == 0.0, one
     # and zero gather bytes end-to-end through the one-pass decode
     V = jax.random.normal(jax.random.PRNGKey(2), (B, S, Hkv, D), jnp.bfloat16)
     Kb = K.astype(jnp.bfloat16)
     gb = count_fn_gather_bytes(
-        lambda q: kops.fused_fier_attention_decode(q, Kb, V, qk, 32, length),
+        lambda q: kops.fier_decode_one_pass(
+            q, CacheView.slab(Kb, V, qk, length), 32
+        ),
         q,
     )
     assert gb == 0.0, gb

@@ -1,10 +1,17 @@
-"""Per-kernel shape/dtype sweeps: Pallas (interpret mode) vs jnp oracle."""
+"""Per-kernel shape/dtype sweeps: Pallas (interpret mode) vs jnp oracle.
+
+All dispatch goes through the registry API (``CacheView`` + ``DecodePlan``
++ ``ops.retrieve`` / ``ops.attend_selected`` / the ``fier_decode_*``
+pipelines); the deprecated boolean-flag entrypoints are covered separately
+in tests/test_backends.py.
+"""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
 from repro.core import retrieval as rt
+from repro.core.policy import CacheView, DecodePlan, PolicyConfig, build_metadata, decode_attention
 from repro.kernels import ops, ref
 
 SHAPES = [
@@ -23,6 +30,11 @@ def _inputs(B, S, Hkv, Hq, D, seed=0, dtype=jnp.float32):
     V = jax.random.normal(k2, (B, S, Hkv, D), dtype)
     q = jax.random.normal(k3, (B, Hq, D), dtype)
     return q, K, V
+
+
+def _retrieve_view(qk, length=None):
+    """Metadata-only slab view for retrieval kernels (no K/V operand)."""
+    return CacheView.slab(None, None, qk, length)
 
 
 @pytest.mark.parametrize("B,S,Hkv,Hq,D,g", SHAPES)
@@ -67,12 +79,16 @@ def test_sparse_attention_kernel(B, S, Hkv, Hq, D, g):
 
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
 def test_kernels_dtype_sweep(dtype):
+    """Kernel-path unfused decode (kernel score + select + kernel attend)
+    vs the jnp reference pipeline, f32 and bf16 slabs."""
     q, K, V = _inputs(2, 256, 2, 4, 64, seed=3, dtype=dtype)
     qk = ops.pack_quantize(K, 32)
-    out_k = ops.fier_attention_decode(q, K, V, qk, budget=64,
-                                      length=jnp.array([256, 200], jnp.int32))
-    out_r = rt.fier_attention_decode(q, K, V, qk, budget=64,
-                                     length=jnp.array([256, 200], jnp.int32))
+    length = jnp.array([256, 200], jnp.int32)
+    kv = rt.reduce_over_query_group(ops.fier_score(q, qk), K.shape[2])
+    idx = rt.select_topk(kv, 64, length)
+    Ks, Vs = rt.gather_kv(K, V, idx)
+    out_k = ops.sparse_attention(q, Ks, Vs, idx, length)
+    out_r = rt.fier_decode_reference(q, K, V, qk, budget=64, length=length)
     np.testing.assert_allclose(
         np.asarray(out_k, np.float32), np.asarray(out_r, np.float32),
         rtol=5e-2, atol=5e-2,
@@ -80,16 +96,16 @@ def test_kernels_dtype_sweep(dtype):
 
 
 def test_end_to_end_kernel_path_in_policy():
-    """PolicyConfig(use_kernels=True) routes scoring through Pallas."""
-    from repro.core.policy import PolicyConfig, build_metadata, decode_attention
-
+    """PolicyConfig(use_kernels=True) routes the reference pipeline's
+    scoring through Pallas."""
     q, K, V = _inputs(2, 256, 2, 4, 64, seed=4)
     length = jnp.array([256, 256], jnp.int32)
     for kernels in (False, True):
         cfg = PolicyConfig(kind="fier", budget=64, group=32, skip_layers=0,
                            use_kernels=kernels)
         meta = build_metadata(K, cfg)
-        out = decode_attention(q, K, V, meta, cfg, length, layer=1)
+        view = CacheView.slab(K, V, meta, length)
+        out = decode_attention(q, view, DecodePlan.build(cfg), layer=1)
         assert jnp.isfinite(out).all()
 
 
@@ -109,7 +125,7 @@ def test_topk_select_kernel_matches_oracle(B, S, Hkv, Hq, D, g):
 
 
 @pytest.mark.parametrize("B,S,Hkv,Hq,D,g", SHAPES)
-def test_fused_sparse_attention_matches_ref(B, S, Hkv, Hq, D, g):
+def test_attend_selected_matches_ref(B, S, Hkv, Hq, D, g):
     """Fused kernel (in-kernel row gather) vs the materialised-gather jnp
     oracle, on identical indices, across GQA shapes."""
     q, K, V = _inputs(B, S, Hkv, Hq, D, seed=6)
@@ -117,7 +133,8 @@ def test_fused_sparse_attention_matches_ref(B, S, Hkv, Hq, D, g):
     kv_s = rt.reduce_over_query_group(ref.fier_score(q, qk), Hkv)
     length = jnp.full((B,), S - 5, jnp.int32)
     idx = rt.select_topk(kv_s, min(64, S), length)
-    got = np.asarray(ops.fused_sparse_attention(q, K, V, idx, length), np.float32)
+    view = CacheView.slab(K, V, qk, length)
+    got = np.asarray(ops.attend_selected(q, view, idx), np.float32)
     want = np.asarray(ref.fused_sparse_attention(q, K, V, idx, length), np.float32)
     np.testing.assert_allclose(got, want, rtol=2e-2, atol=2e-2)
 
@@ -129,12 +146,10 @@ def test_fused_budget_exceeds_length():
     q, K, V = _inputs(B, S, Hkv, Hq, D, seed=7)
     qk = ref.pack_quantize(K, 16)
     length = jnp.array([40, 96], jnp.int32)
-    got = np.asarray(
-        ops.fused_fier_attention_decode(q, K, V, qk, budget=64, length=length),
-        np.float32,
-    )
+    view = CacheView.slab(K, V, qk, length)
+    got = np.asarray(ops.fier_decode_one_pass(q, view, 64), np.float32)
     want = np.asarray(
-        rt.fier_attention_decode(q, K, V, qk, budget=64, length=length),
+        rt.fier_decode_reference(q, K, V, qk, budget=64, length=length),
         np.float32,
     )
     np.testing.assert_allclose(got, want, rtol=5e-2, atol=5e-2)
@@ -144,36 +159,36 @@ def test_fused_budget_exceeds_length():
 
 @pytest.mark.parametrize("B,S,Hkv,Hq,D,g", SHAPES)
 def test_fused_pipeline_end_to_end(B, S, Hkv, Hq, D, g):
-    """Score kernel → threshold select → fused attend vs the jnp oracle."""
+    """One-pass retrieval → fused attend vs the jnp oracle pipeline."""
     q, K, V = _inputs(B, S, Hkv, Hq, D, seed=8)
     qk = ref.pack_quantize(K, g)
     length = jnp.full((B,), S - 3, jnp.int32)
     budget = min(64, S)
-    got = np.asarray(
-        ops.fused_fier_attention_decode(q, K, V, qk, budget, length), np.float32
-    )
+    view = CacheView.slab(K, V, qk, length)
+    got = np.asarray(ops.fier_decode_one_pass(q, view, budget), np.float32)
     want = np.asarray(
-        rt.fier_attention_decode(q, K, V, qk, budget, length), np.float32
+        rt.fier_decode_reference(q, K, V, qk, budget, length), np.float32
     )
     np.testing.assert_allclose(got, want, rtol=5e-2, atol=5e-2)
 
 
 def test_fused_policy_dispatch_matches_unfused():
-    """PolicyConfig(fused=True) through decode_attention: same tokens of
-    attention output as the unfused oracle path."""
-    from repro.core.policy import PolicyConfig, build_metadata, decode_attention
-
+    """pipeline='one_pass' through decode_attention: same tokens of
+    attention output as the reference (oracle) pipeline."""
     q, K, V = _inputs(2, 256, 2, 4, 64, seed=9)
     length = jnp.array([256, 200], jnp.int32)
     outs = {}
-    for fused in (False, True):
+    for pipeline in ("reference", "one_pass"):
         cfg = PolicyConfig(kind="fier", budget=64, group=32, skip_layers=0,
-                           fused=fused)
+                           pipeline=pipeline)
         meta = build_metadata(K, cfg)
-        outs[fused] = np.asarray(
-            decode_attention(q, K, V, meta, cfg, length, layer=1), np.float32
+        view = CacheView.slab(K, V, meta, length)
+        outs[pipeline] = np.asarray(
+            decode_attention(q, view, DecodePlan.build(cfg), layer=1), np.float32
         )
-    np.testing.assert_allclose(outs[True], outs[False], rtol=5e-2, atol=5e-2)
+    np.testing.assert_allclose(
+        outs["one_pass"], outs["reference"], rtol=5e-2, atol=5e-2
+    )
 
 
 # ------------------------------------------------------ one-pass retrieval
@@ -189,7 +204,7 @@ def _kernel_score_oracle(q, qk, Hkv, budget, length, *, group_reduce="max",
 
 @pytest.mark.parametrize("B,S,Hkv,Hq,D,g", SHAPES)
 @pytest.mark.parametrize("group_reduce", ["max", "sum"])
-def test_fused_retrieve_exact_index_set(B, S, Hkv, Hq, D, g, group_reduce):
+def test_retrieve_exact_index_set(B, S, Hkv, Hq, D, g, group_reduce):
     """One-pass retrieval must return exactly the lax.top_k index set over
     the masked, group-reduced kernel scores — budget==S, sink/recent
     overrides and NEG_INF length-padding ties included."""
@@ -197,8 +212,8 @@ def test_fused_retrieve_exact_index_set(B, S, Hkv, Hq, D, g, group_reduce):
     qk = ref.pack_quantize(K, g)
     length = jnp.full((B,), max(S // 2, 16), jnp.int32)
     for budget, sink, recent in [(min(64, S), 0, 0), (min(32, S), 4, 8), (S, 0, 0)]:
-        got = np.asarray(ops.fused_retrieve(
-            q, qk, budget, length, group_reduce=group_reduce,
+        got = np.asarray(ops.retrieve(
+            q, _retrieve_view(qk, length), budget, group_reduce=group_reduce,
             sink=sink, recent=recent,
         ))
         want = np.asarray(_kernel_score_oracle(
@@ -209,19 +224,20 @@ def test_fused_retrieve_exact_index_set(B, S, Hkv, Hq, D, g, group_reduce):
 
 
 @pytest.mark.parametrize("B,S,Hkv,Hq,D,g", SHAPES)
-def test_fused_retrieve_matches_jnp_oracle(B, S, Hkv, Hq, D, g):
+def test_retrieve_matches_jnp_oracle(B, S, Hkv, Hq, D, g):
     """And the ref.py oracle (fully materialised jnp pipeline) agrees on
     random inputs: approx_scores is built to round identically."""
     q, K, V = _inputs(B, S, Hkv, Hq, D, seed=11)
     qk = ref.pack_quantize(K, g)
     length = jnp.full((B,), S - 5, jnp.int32)
     budget = min(48, S)
-    got = np.asarray(ops.fused_retrieve(q, qk, budget, length))
-    want = np.asarray(ref.fused_retrieve(q, qk, budget, length))
+    view = _retrieve_view(qk, length)
+    got = np.asarray(ops.retrieve(q, view, budget))
+    want = np.asarray(ref.retrieve(q, view, budget))
     np.testing.assert_array_equal(np.sort(got, -1), np.sort(want, -1))
 
 
-def test_fused_retrieve_adversarial_ties():
+def test_retrieve_adversarial_ties():
     """Duplicate-score ties straddling τ: K built from a handful of
     repeated prototype tokens → exactly tied scores, with the budget
     cutting through a tie class.  The index set (first ties in ascending
@@ -233,62 +249,66 @@ def test_fused_retrieve_adversarial_ties():
     q, _, _ = _inputs(B, S, Hkv, Hq, D, seed=13)
     qk = ref.pack_quantize(K, g)
     length = jnp.full((B,), S, jnp.int32)
+    view = _retrieve_view(qk, length)
     for budget in (3, 7, 32, 50, S):  # cut inside every tie class size
-        got = np.asarray(ops.fused_retrieve(q, qk, budget, length))
+        got = np.asarray(ops.retrieve(q, view, budget))
         want = np.asarray(_kernel_score_oracle(q, qk, Hkv, budget, length))
-        want2 = np.asarray(ref.fused_retrieve(q, qk, budget, length))
+        want2 = np.asarray(ref.retrieve(q, view, budget))
         np.testing.assert_array_equal(np.sort(got, -1), np.sort(want, -1))
         np.testing.assert_array_equal(np.sort(got, -1), np.sort(want2, -1))
 
 
-def test_fused_retrieve_all_tied_scores():
+def test_retrieve_all_tied_scores():
     """q = 0 → every score is the per-group constant 0·z = 0: the whole
     row ties and the kernel must pick the first `budget` positions."""
     B, S, Hkv, Hq, D, g = 1, 96, 1, 2, 16, 8
     _, K, _ = _inputs(B, S, Hkv, Hq, D, seed=14)
     q = jnp.zeros((B, Hq, D))
     qk = ref.pack_quantize(K, g)
-    got = np.asarray(ops.fused_retrieve(q, qk, 24, jnp.full((B,), S, jnp.int32)))
+    got = np.asarray(ops.retrieve(
+        q, _retrieve_view(qk, jnp.full((B,), S, jnp.int32)), 24
+    ))
     np.testing.assert_array_equal(np.sort(got, -1)[0, 0], np.arange(24))
 
 
-def test_fused_retrieve_budget_exceeds_length():
+def test_retrieve_budget_exceeds_length():
     """budget > valid length: NEG_INF padding participates in selection
     (tie class at the floor) exactly as in the oracle."""
     B, S, Hkv, Hq, D, g = 2, 128, 2, 4, 32, 16
     q, K, V = _inputs(B, S, Hkv, Hq, D, seed=15)
     qk = ref.pack_quantize(K, g)
     length = jnp.array([40, 96], jnp.int32)
-    got = np.asarray(ops.fused_retrieve(q, qk, 64, length))
+    got = np.asarray(ops.retrieve(q, _retrieve_view(qk, length), 64))
     want = np.asarray(_kernel_score_oracle(q, qk, Hkv, 64, length))
     np.testing.assert_array_equal(np.sort(got, -1), np.sort(want, -1))
 
 
-def test_fused_retrieve_sink_recent_overlap():
+def test_retrieve_sink_recent_overlap():
     """sink ∪ recent covering (and overlapping within) a short valid
     prefix: a +inf tie class larger than the distinct-score region."""
     B, S, Hkv, Hq, D, g = 1, 128, 2, 4, 32, 8
     q, K, V = _inputs(B, S, Hkv, Hq, D, seed=16)
     qk = ref.pack_quantize(K, g)
     length = jnp.array([20], jnp.int32)
+    view = _retrieve_view(qk, length)
     for budget, sink, recent in [(16, 8, 16), (20, 8, 16), (64, 12, 12)]:
-        got = np.asarray(ops.fused_retrieve(
-            q, qk, budget, length, sink=sink, recent=recent
-        ))
+        got = np.asarray(ops.retrieve(q, view, budget, sink=sink, recent=recent))
         want = np.asarray(_kernel_score_oracle(
             q, qk, Hkv, budget, length, sink=sink, recent=recent
         ))
         np.testing.assert_array_equal(np.sort(got, -1), np.sort(want, -1))
 
 
-def test_fused_retrieve_stats_and_no_length():
+def test_retrieve_stats_and_no_length():
     """return_stats: τ is the budget-th largest masked score and m the
     strictly-greater count; length=None selects over the whole row."""
     B, S, Hkv, Hq, D, g = 2, 256, 2, 4, 64, 32
     q, K, V = _inputs(B, S, Hkv, Hq, D, seed=17)
     qk = ref.pack_quantize(K, g)
     budget = 32
-    idx, tau, m = ops.fused_retrieve(q, qk, budget, return_stats=True)
+    idx, tau, m = ops.retrieve(
+        q, _retrieve_view(qk, None), budget, return_stats=True
+    )
     kv = np.asarray(rt.reduce_over_query_group(ops.fier_score(q, qk), Hkv))
     srt = np.sort(kv, axis=-1)[:, :, ::-1]
     np.testing.assert_array_equal(np.asarray(tau), srt[:, :, budget - 1])
@@ -310,12 +330,9 @@ def test_onepass_attention_bit_identical(B, S, Hkv, Hq, D, g):
     qk = ref.pack_quantize(K, g)
     length = jnp.full((B,), S - 3, jnp.int32)
     budget = min(64, S)
-    one = np.asarray(ops.fused_fier_attention_decode(
-        q, K, V, qk, budget, length, one_pass=True
-    ))
-    two = np.asarray(ops.fused_fier_attention_decode(
-        q, K, V, qk, budget, length, one_pass=False
-    ))
+    view = CacheView.slab(K, V, qk, length)
+    one = np.asarray(ops.fier_decode_one_pass(q, view, budget))
+    two = np.asarray(ops.fier_decode_two_pass(q, view, budget))
     np.testing.assert_array_equal(one, two)
 
 
@@ -326,29 +343,26 @@ def test_onepass_pipeline_matches_jnp_oracle():
     q, K, V = _inputs(B, S, Hkv, Hq, D, seed=19)
     qk = ref.pack_quantize(K, g)
     length = jnp.full((B,), S - 3, jnp.int32)
-    got = np.asarray(ops.fused_fier_attention_decode(
-        q, K, V, qk, 64, length
-    ), np.float32)
-    want = np.asarray(rt.fier_attention_decode(
+    view = CacheView.slab(K, V, qk, length)
+    got = np.asarray(ops.fier_decode_one_pass(q, view, 64), np.float32)
+    want = np.asarray(rt.fier_decode_reference(
         q, K, V, qk, 64, length
     ), np.float32)
     np.testing.assert_allclose(got, want, rtol=5e-2, atol=5e-2)
 
 
 def test_onepass_policy_dispatch():
-    """PolicyConfig(fused=True, one_pass=True) — the serving default —
-    dispatches through decode_attention and matches the two-pass fused
-    policy path bitwise."""
-    from repro.core.policy import PolicyConfig, build_metadata, decode_attention
-
+    """pipeline='one_pass' — the serving default — dispatches through
+    decode_attention and matches the two_pass plan bitwise."""
     q, K, V = _inputs(2, 256, 2, 4, 64, seed=20)
     length = jnp.array([256, 200], jnp.int32)
     outs = {}
-    for one_pass in (False, True):
+    for pipeline in ("two_pass", "one_pass"):
         cfg = PolicyConfig(kind="fier", budget=64, group=32, skip_layers=0,
-                           fused=True, one_pass=one_pass)
+                           pipeline=pipeline)
         meta = build_metadata(K, cfg)
-        outs[one_pass] = np.asarray(
-            decode_attention(q, K, V, meta, cfg, length, layer=1), np.float32
+        view = CacheView.slab(K, V, meta, length)
+        outs[pipeline] = np.asarray(
+            decode_attention(q, view, DecodePlan.build(cfg), layer=1), np.float32
         )
-    np.testing.assert_array_equal(outs[True], outs[False])
+    np.testing.assert_array_equal(outs["one_pass"], outs["two_pass"])

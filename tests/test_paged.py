@@ -11,7 +11,7 @@ import pytest
 
 from repro.configs import reduced_config
 from repro.core import quantize as qz
-from repro.core.policy import PolicyConfig
+from repro.core.policy import CacheView, PolicyConfig
 from repro.kernels import ops, ref
 from repro.kvcache import cache as kvcache
 from repro.kvcache import paged
@@ -156,14 +156,14 @@ def test_paged_retrieve_exact_vs_slab(B, S, Hkv, Hq, D, g, bs):
     q, K, V, qk, k_pool, v_pool, meta, table = _paged_inputs(B, S, Hkv, Hq, D, g, bs)
     length = jnp.full((B,), S - 7, jnp.int32)
     for budget, sink, recent in [(min(64, S), 0, 0), (min(32, S), 4, 8)]:
-        slab = ops.fused_retrieve(q, qk, budget, length, sink=sink, recent=recent)
-        got = ops.paged_fused_retrieve(
-            q, meta, table, budget, length, sink=sink, recent=recent
+        slab = ops.retrieve(
+            q, CacheView.slab(None, None, qk, length), budget,
+            sink=sink, recent=recent,
         )
+        pview = CacheView.paged(None, None, meta, table, length)
+        got = ops.retrieve(q, pview, budget, sink=sink, recent=recent)
         np.testing.assert_array_equal(np.asarray(slab), np.asarray(got))
-        want = ref.paged_fused_retrieve(
-            q, meta, table, budget, length, sink=sink, recent=recent
-        )
+        want = ref.retrieve(q, pview, budget, sink=sink, recent=recent)
         np.testing.assert_array_equal(
             np.sort(np.asarray(got), -1), np.sort(np.asarray(want), -1)
         )
@@ -178,10 +178,11 @@ def test_paged_decode_bit_identical_vs_slab(B, S, Hkv, Hq, D, g, bs):
     )
     length = jnp.full((B,), S - 5, jnp.int32)
     budget = min(64, S)
-    slab = ops.fused_fier_attention_decode(q, K, V, qk, budget, length)
-    got = ops.paged_fused_fier_attention_decode(
-        q, k_pool, v_pool, meta, table, budget, length
+    slab = ops.fier_decode_one_pass(
+        q, CacheView.slab(K, V, qk, length), budget
     )
+    pview = CacheView.paged(k_pool, v_pool, meta, table, length)
+    got = ops.fier_decode_one_pass(q, pview, budget)
     np.testing.assert_array_equal(np.asarray(slab), np.asarray(got))
     want = ref.paged_fused_fier_attention_decode(
         q, k_pool, v_pool, meta, table, budget, length
@@ -232,8 +233,8 @@ def test_paged_onepass_zero_score_bytes():
     q, K, V, qk, k_pool, v_pool, meta, table = _paged_inputs(B, S, Hkv, Hq, D, g, bs)
     length = jnp.full((B,), S, jnp.int32)
     sb = count_fn_score_bytes(
-        lambda q, kp, vp: ops.paged_fused_fier_attention_decode(
-            q, kp, vp, meta, table, 32, length
+        lambda q, kp, vp: ops.fier_decode_one_pass(
+            q, CacheView.paged(kp, vp, meta, table, length), 32
         ),
         S, q, k_pool, v_pool,
     )
@@ -248,9 +249,9 @@ def setup():
 
     def mk(paged_mode, pool_blocks=0):
         pol = PolicyConfig(
-            kind="fier", budget=16, group=8, skip_layers=1, fused=True,
-            one_pass=True, paged=paged_mode, block_size=8,
-            pool_blocks=pool_blocks,
+            kind="fier", budget=16, group=8, skip_layers=1,
+            pipeline="one_pass", layout="paged" if paged_mode else "slab",
+            block_size=8, pool_blocks=pool_blocks,
         )
         return build_model(cfg, pol)
 

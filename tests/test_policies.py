@@ -58,10 +58,15 @@ def test_policy_dispatch_and_skip_layers():
     q = jax.random.normal(jax.random.PRNGKey(4), (2, 4, 16))
     length = jnp.array([64, 64], jnp.int32)
     meta = pol.build_metadata(K, cfg_fier)
-    full = pol.decode_attention(q, K, V, None, cfg_full, length)
-    skip = pol.decode_attention(q, K, V, meta, cfg_fier, length, layer=0)
+    plan_full = pol.DecodePlan.build(cfg_full)
+    plan_fier = pol.DecodePlan.build(cfg_fier)
+    full = pol.decode_attention(
+        q, pol.CacheView.slab(K, V, None, length), plan_full
+    )
+    fier_view = pol.CacheView.slab(K, V, meta, length)
+    skip = pol.decode_attention(q, fier_view, plan_fier, layer=0)
     np.testing.assert_allclose(np.asarray(full), np.asarray(skip), atol=1e-5)
-    sparse = pol.decode_attention(q, K, V, meta, cfg_fier, length, layer=2)
+    sparse = pol.decode_attention(q, fier_view, plan_fier, layer=2)
     assert not np.allclose(np.asarray(full), np.asarray(sparse), atol=1e-5)
 
 

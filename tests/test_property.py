@@ -119,8 +119,11 @@ def test_onepass_retrieval_exact_index_set_property(shape, seed, budget, mode):
     q = jax.random.normal(jax.random.PRNGKey(seed ^ 3), (B, Hq, D))
     qk = qz.quantize(K, g)
     length = jnp.full((B,), max(S // 2, g), jnp.int32)
-    got = np.asarray(ops.fused_retrieve(q, qk, budget, length,
-                                        group_reduce=mode))
+    from repro.core.policy import CacheView
+
+    got = np.asarray(ops.retrieve(
+        q, CacheView.slab(None, None, qk, length), budget, group_reduce=mode
+    ))
     kv = rt.reduce_over_query_group(ops.fier_score(q, qk), Hkv, mode)
     want = np.asarray(rt.select_topk(kv, budget, length))
     np.testing.assert_array_equal(np.sort(got, -1), np.sort(want, -1))

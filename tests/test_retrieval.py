@@ -52,7 +52,7 @@ def test_budget_equals_length_recovers_full():
     q, K, V, qk = _setup(S=128)
     length = jnp.array([100, 64], jnp.int32)
     full = rt.full_attention_decode(q, K, V, length)
-    fier = rt.fier_attention_decode(q, K, V, qk, budget=128, length=length)
+    fier = rt.fier_decode_reference(q, K, V, qk, budget=128, length=length)
     np.testing.assert_allclose(np.asarray(full), np.asarray(fier), atol=1e-3, rtol=1e-3)
 
 
