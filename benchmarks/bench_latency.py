@@ -23,7 +23,7 @@ Four measurements:
 """
 from __future__ import annotations
 
-import sys
+import argparse
 
 import jax
 import jax.numpy as jnp
@@ -36,6 +36,7 @@ from .common import (
     policy_bundle, timeit, train_tiny_lm,
 )
 from .flopcount import count_fn_gather_bytes
+from .persist import metric, write_bench_json
 
 HBM_BW = 819e9
 
@@ -113,7 +114,7 @@ def run():
         )
 
 
-def smoke():
+def smoke(out_dir: str = "."):
     """Fast CI gate (`--smoke`): assert the one-pass retrieval path
     materialises zero score-tensor bytes (and the two-pass path pays the
     full ≥ 2·4·Hq·S round trip) at a tiny config — the perf property is
@@ -127,6 +128,7 @@ def smoke():
 
     cfg = bench_model_cfg()
     parts = []
+    metrics = []
     one_pass_layouts = sorted(
         lo for lo, p in get_backend("fier").supports if p == "one_pass"
     )
@@ -138,23 +140,50 @@ def smoke():
             parts.append(
                 " ".join(f"slab_{p}={sb[p]:.0f}" for p in sorted(sb))
             )
+            for p, v in sorted(sb.items()):
+                # the fused one-pass path is the gated zero; the unfused
+                # paths' round-trip bytes are recorded for the trajectory
+                metrics.append(metric(
+                    f"slab_{p}_score_bytes", v, unit="B",
+                    better="lower", gate=(p == "one_pass"),
+                ))
         elif layout == "paged":
             psb = emit_paged_score_traffic(
                 cfg.n_heads, cfg.n_kv_heads, cfg.d_head,
                 budget=32, B=1, S=256, block_size=32, check=True,
             )
             parts.append(f"paged_onepass={psb:.0f}")
+            metrics.append(metric(
+                "paged_one_pass_score_bytes", psb, unit="B",
+                better="lower", gate=True,
+            ))
         else:
             raise AssertionError(
                 f"fier registers one_pass for unknown layout {layout!r}: "
                 f"extend the smoke gate"
             )
     emit("bench_smoke_ok", 0.0, " ".join(parts))
+    write_bench_json(
+        out_dir, "latency",
+        dict(budget=32, B=1, S=256, block_size=32,
+             one_pass_layouts=one_pass_layouts),
+        metrics,
+    )
 
 
 def main():
-    if "--smoke" in sys.argv[1:]:
-        smoke()
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI gate: assert zero score-tensor bytes on the "
+                         "one-pass paths; writes BENCH_latency.json")
+    ap.add_argument("--out", default=".",
+                    help="directory (or file) for BENCH_latency.json")
+    args = ap.parse_args()
+    if args.smoke:
+        import os
+
+        os.makedirs(args.out, exist_ok=True)
+        smoke(args.out)
     else:
         run()
 

@@ -1,0 +1,298 @@
+"""Traffic-trace serving benchmark: replay a seeded arrival trace through
+a live ContinuousScheduler and measure what users feel — TTFT, inter-token
+latency, throughput at saturation, preemptions, pool occupancy.
+
+The replay is driven through the scheduler's stepwise API
+(``start``/``submit``/``step``) on two clocks at once:
+
+  * **virtual time** — a deterministic token-cost model: a prefill token
+    costs 1 unit, a batched decode step costs ``decode_token_cost`` per
+    active slot.  Virtual metrics depend only on the schedule (arrival
+    trace, block accounting, chunk quantum), not on the host, so they are
+    reproducible across machines and **gated** in CI.
+  * **wall clock** — recorded alongside and reported as info metrics
+    (interpret-mode kernels and shared CI runners make it unsuitable for
+    gating).
+
+``--smoke`` replays a bursty trace (long prompts bursting into a pool
+already held by decoding requests) twice — chunked admission
+(``chunk_tokens=256``) vs monolithic — and asserts the chunked schedule's
+p99 TTFT is strictly lower at equal (±10%) token throughput: under block
+pressure, chunked admission overlaps prefill compute with the wait for
+blocks to drain, while a monolithic admission pays its whole prefill
+*after* the pool finally fits the prompt.  Results go to
+``BENCH_serve_trace.json`` (see benchmarks/persist.py; baseline checked
+by tools/check_bench_regression.py).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+from collections import defaultdict, deque
+
+import jax
+import numpy as np
+
+from repro.configs import reduced_config
+from repro.core.policy import PolicyConfig
+from repro.models import build_model
+from repro.serving import ContinuousScheduler, Engine, Request
+
+from .persist import metric, write_bench_json
+
+DECODE_TOKEN_COST = 1.0  # virtual units per active slot per decode step
+
+
+# ------------------------------------------------------------------- traces
+
+def bursty_trace(seed: int, vocab: int) -> list[tuple[float, dict]]:
+    """The smoke workload: 4 medium decoders warm the pool, then 3 long
+    prompts burst in while most blocks are still held, then a Poisson
+    tail of short requests (sharing a family prefix with the burst)."""
+    rng = np.random.default_rng(seed)
+    toks = lambda n: rng.integers(1, vocab, size=n).tolist()
+    family = toks(256)  # shared prefix of the long-prompt family
+    trace: list[tuple[float, dict]] = []
+    rid = 0
+    for _ in range(4):
+        trace.append((0.0, dict(rid=rid, tokens=toks(128), max_new=24)))
+        rid += 1
+    for _ in range(3):
+        trace.append(
+            (150.0, dict(rid=rid, tokens=family + toks(320), max_new=8))
+        )
+        rid += 1
+    t = 160.0
+    for _ in range(6):
+        t += float(rng.exponential(40.0))
+        trace.append((t, dict(rid=rid, tokens=family[:64] + toks(32), max_new=12)))
+        rid += 1
+    return trace
+
+
+def poisson_trace(
+    seed: int, vocab: int, *, n_requests: int, mean_gap: float,
+    prompt_lo: int = 64, prompt_hi: int = 512, max_new: int = 16,
+    n_families: int = 4, prefix_len: int = 64,
+) -> list[tuple[float, dict]]:
+    """Open-loop Poisson arrivals over shared-prefix prompt families."""
+    rng = np.random.default_rng(seed)
+    toks = lambda n: rng.integers(1, vocab, size=n).tolist()
+    families = [toks(prefix_len) for _ in range(n_families)]
+    trace, t = [], 0.0
+    for rid in range(n_requests):
+        t += float(rng.exponential(mean_gap))
+        fam = families[int(rng.integers(0, n_families))]
+        n = int(rng.integers(prompt_lo, prompt_hi + 1))
+        suffix = toks(max(1, n - prefix_len))
+        trace.append((t, dict(rid=rid, tokens=fam + suffix, max_new=max_new)))
+    return trace
+
+
+# ------------------------------------------------------------------- replay
+
+def build_serving(pipeline: str, *, capacity: int, n_slots: int,
+                  pool_blocks: int, block_size: int = 32):
+    cfg = reduced_config("olmo-1b")
+    pol = PolicyConfig(
+        kind="fier", budget=64, group=32, skip_layers=1, sink=4, recent=32,
+        pipeline=pipeline, layout="paged", block_size=block_size,
+        pool_blocks=pool_blocks,
+    )
+    bundle = build_model(cfg, pol)
+    params = bundle.init(jax.random.PRNGKey(0))
+    eng = Engine(bundle, n_slots=n_slots, capacity=capacity)
+    return cfg, params, eng
+
+
+def replay(eng, sched, trace, *, decode_token_cost: float = DECODE_TOKEN_COST):
+    """Drive one trace through the scheduler; returns the stats dict."""
+    counter = {"prefill": 0}
+    orig_chunk, orig_insert = eng.prefill_chunk, eng.insert
+
+    def chunk_spy(params, cache, slot, tokens, start, n):
+        ok, logits, cache = orig_chunk(params, cache, slot, tokens, start, n)
+        if ok:
+            counter["prefill"] += n
+        return ok, logits, cache
+
+    def insert_spy(params, cache, tokens, length, slot, extras=None):
+        counter["prefill"] += length
+        return orig_insert(params, cache, tokens, length, slot, extras)
+
+    eng.prefill_chunk, eng.insert = chunk_spy, insert_spy
+    try:
+        sched.start()
+        pending = deque((t, Request(**spec)) for t, spec in trace)
+        reqs = [r for _, r in pending]
+        arrive: dict[int, float] = {}
+        stamps: dict[int, list[tuple[float, float]]] = defaultdict(list)
+        seen: dict[int, int] = defaultdict(int)
+        clock, wall0 = 0.0, time.perf_counter()
+        while pending or sched.busy:
+            while pending and pending[0][0] <= clock:
+                t, r = pending.popleft()
+                sched.submit(r)
+                arrive[r.rid] = t
+            if not sched.busy:
+                clock = max(clock, pending[0][0])
+                continue
+            p0, occ0 = counter["prefill"], len(sched.occupancy)
+            progressed = sched.step()
+            cost = float(counter["prefill"] - p0)
+            if len(sched.occupancy) > occ0:
+                cost += sched.occupancy[-1] * decode_token_cost
+            if not progressed and cost == 0.0:
+                if pending:
+                    # idle until the next arrival can be admitted
+                    clock = max(clock, pending[0][0])
+                    continue
+                raise RuntimeError("trace replay stalled")
+            clock += cost
+            wall = time.perf_counter() - wall0
+            for r in reqs:
+                if len(r.out) > seen[r.rid]:
+                    stamps[r.rid].extend(
+                        (clock, wall) for _ in range(len(r.out) - seen[r.rid])
+                    )
+                    seen[r.rid] = len(r.out)
+        wall_s = time.perf_counter() - wall0
+    finally:
+        eng.prefill_chunk, eng.insert = orig_chunk, orig_insert
+
+    ttft = [stamps[r.rid][0][0] - arrive[r.rid] for r in reqs if stamps[r.rid]]
+    wall_ttft = [
+        stamps[r.rid][0][1] for r in reqs if stamps[r.rid]
+    ]  # vs wall 0 (arrivals are virtual-time events)
+    itl = [
+        b[0] - a[0]
+        for r in reqs
+        for a, b in zip(stamps[r.rid], stamps[r.rid][1:])
+    ]
+    total_tokens = sum(len(r.out) for r in reqs)
+    makespan = max(clock - min(arrive.values()), 1e-9)
+    pool = eng.pool_stats()
+    pct = lambda xs, p: float(np.percentile(xs, p)) if xs else 0.0
+    return dict(
+        vt_ttft_p50=pct(ttft, 50), vt_ttft_p99=pct(ttft, 99),
+        vt_itl_p50=pct(itl, 50), vt_itl_p99=pct(itl, 99),
+        vt_tokens_per_kunit=1e3 * total_tokens / makespan,
+        wall_seconds=wall_s, wall_ttft_p99_s=pct(wall_ttft, 99),
+        total_tokens=total_tokens, decode_steps=sched.steps,
+        preemptions=sched.preemptions, prefill_aborts=sched.prefill_aborts,
+        prefill_chunks=sched.prefill_chunks,
+        mean_occupancy=sched.mean_occupancy,
+        peak_blocks=pool["peak_in_use"],
+        prefix_block_hits=pool["prefix_block_hits"],
+    )
+
+
+# --------------------------------------------------------------------- modes
+
+SMOKE_ENGINE = dict(capacity=1024, n_slots=4, pool_blocks=34, block_size=32)
+
+
+def smoke(out_dir: str, *, seed: int = 0, chunk_tokens: int = 256,
+          pipeline: str = "reference") -> dict:
+    """CI gate: chunked vs monolithic on the bursty trace; writes
+    BENCH_serve_trace.json and asserts the tentpole's latency claim."""
+    cfg, params, eng = build_serving(pipeline, **SMOKE_ENGINE)
+    trace = bursty_trace(seed, cfg.vocab)
+    results = {}
+    for mode, ct in (("chunked", chunk_tokens), ("mono", None)):
+        sched = ContinuousScheduler(eng, params, chunk_tokens=ct)
+        results[mode] = replay(eng, sched, trace)
+        print(f"-- {mode}: " + " ".join(
+            f"{k}={v:.1f}" for k, v in sorted(results[mode].items())
+        ))
+    ch, mo = results["chunked"], results["mono"]
+    ratio = ch["vt_ttft_p99"] / max(mo["vt_ttft_p99"], 1e-9)
+    tput_ratio = ch["vt_tokens_per_kunit"] / max(mo["vt_tokens_per_kunit"], 1e-9)
+    metrics = []
+    for mode, r in results.items():
+        metrics += [
+            metric(f"{mode}_vt_ttft_p50", r["vt_ttft_p50"], unit="unit",
+                   better="lower", gate=True),
+            metric(f"{mode}_vt_ttft_p99", r["vt_ttft_p99"], unit="unit",
+                   better="lower", gate=True),
+            metric(f"{mode}_vt_itl_p50", r["vt_itl_p50"], unit="unit",
+                   better="lower", gate=True),
+            metric(f"{mode}_vt_itl_p99", r["vt_itl_p99"], unit="unit",
+                   better="lower", gate=True),
+            metric(f"{mode}_vt_tokens_per_kunit", r["vt_tokens_per_kunit"],
+                   unit="tok/kunit", better="higher", gate=True),
+            metric(f"{mode}_wall_seconds", r["wall_seconds"], unit="s"),
+            metric(f"{mode}_preemptions", r["preemptions"]),
+            metric(f"{mode}_mean_occupancy", r["mean_occupancy"]),
+            metric(f"{mode}_peak_blocks", r["peak_blocks"]),
+            metric(f"{mode}_prefix_block_hits", r["prefix_block_hits"]),
+        ]
+    metrics += [
+        metric("chunked_over_mono_ttft_p99", ratio, better="lower", gate=True),
+        metric("chunked_over_mono_tput", tput_ratio, better="higher", gate=True),
+        metric("chunked_prefill_chunks", ch["prefill_chunks"]),
+        metric("chunked_prefill_aborts", ch["prefill_aborts"]),
+    ]
+    doc = write_bench_json(
+        out_dir, "serve_trace",
+        dict(seed=seed, trace="bursty", chunk_tokens=chunk_tokens,
+             pipeline=pipeline, decode_token_cost=DECODE_TOKEN_COST,
+             **SMOKE_ENGINE),
+        metrics,
+    )
+    # the tentpole claim, asserted: strictly lower p99 TTFT at equal
+    # (within 10%) virtual token throughput
+    assert ch["vt_ttft_p99"] < mo["vt_ttft_p99"], (ch, mo)
+    assert tput_ratio >= 0.9, (ch, mo)
+    print(f"smoke ok: ttft_p99 {ch['vt_ttft_p99']:.0f} (chunked) vs "
+          f"{mo['vt_ttft_p99']:.0f} (mono), tput ratio {tput_ratio:.2f}")
+    return doc
+
+
+def full(*, seed: int = 0, chunk_tokens: int = 256,
+         pipeline: str = "reference", n_requests: int = 48):
+    """Exploratory sweep (not persisted): Poisson arrivals at a few
+    rates, chunked vs monolithic side by side."""
+    cfg, params, eng = build_serving(pipeline, **SMOKE_ENGINE)
+    for mean_gap in (120.0, 60.0, 30.0):
+        trace = poisson_trace(
+            seed, cfg.vocab, n_requests=n_requests, mean_gap=mean_gap
+        )
+        for mode, ct in (("chunked", chunk_tokens), ("mono", None)):
+            sched = ContinuousScheduler(eng, params, chunk_tokens=ct)
+            r = replay(eng, sched, trace)
+            print(
+                f"gap={mean_gap:5.0f} {mode:7s} "
+                f"ttft_p99={r['vt_ttft_p99']:8.1f} "
+                f"itl_p99={r['vt_itl_p99']:7.1f} "
+                f"tput={r['vt_tokens_per_kunit']:7.1f} "
+                f"preempt={r['preemptions']:3d} occ={r['mean_occupancy']:.2f}"
+            )
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI gate: bursty trace, chunked vs monolithic, "
+                         "writes BENCH_serve_trace.json")
+    ap.add_argument("--out", default=".",
+                    help="directory (or file) for BENCH_serve_trace.json")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--chunk-tokens", type=int, default=256)
+    ap.add_argument("--pipeline", default="reference",
+                    choices=("reference", "one_pass"))
+    ap.add_argument("--n-requests", type=int, default=48)
+    args = ap.parse_args()
+    if args.smoke:
+        import os
+
+        os.makedirs(args.out, exist_ok=True)
+        smoke(args.out, seed=args.seed, chunk_tokens=args.chunk_tokens,
+              pipeline=args.pipeline)
+    else:
+        full(seed=args.seed, chunk_tokens=args.chunk_tokens,
+             pipeline=args.pipeline, n_requests=args.n_requests)
+
+
+if __name__ == "__main__":
+    main()

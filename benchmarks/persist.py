@@ -1,0 +1,99 @@
+"""Benchmark persistence: one JSON schema shared by every bench script.
+
+Each bench writes ``BENCH_<name>.json`` — git SHA, timestamp, config, and
+a flat metric list — so the perf trajectory is recorded per commit and
+``tools/check_bench_regression.py`` can diff a PR's numbers against the
+committed baseline at the repo root.
+
+Metric contract:
+  * ``better``: "lower" | "higher" | "info".  Info metrics are recorded
+    but never gated (wall-clock on shared CI runners is info; the
+    deterministic virtual-time / byte-count metrics are gated).
+  * ``gate``: only gated metrics participate in the regression check
+    (±20% latency / −10% throughput tolerances, see the tool).
+
+The schema is deliberately flat (no nested suites): a bench that measures
+two configurations prefixes the metric names (``chunked_…`` / ``mono_…``).
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import time
+
+SCHEMA_VERSION = 1
+
+
+def metric(
+    name: str,
+    value: float,
+    *,
+    unit: str = "",
+    better: str = "info",
+    gate: bool = False,
+) -> dict:
+    """One metric row.  ``better`` ∈ {lower, higher, info}; only
+    ``gate=True`` rows are regression-checked."""
+    if better not in ("lower", "higher", "info"):
+        raise ValueError(f"better must be lower|higher|info, got {better!r}")
+    if gate and better == "info":
+        raise ValueError(f"metric {name!r}: gated metrics need a direction")
+    return {
+        "name": name,
+        "value": float(value),
+        "unit": unit,
+        "better": better,
+        "gate": bool(gate),
+    }
+
+
+def _git_sha() -> str:
+    try:
+        return subprocess.run(
+            ["git", "rev-parse", "HEAD"],
+            capture_output=True, text=True, check=True,
+            cwd=os.path.dirname(os.path.abspath(__file__)),
+        ).stdout.strip()
+    except (OSError, subprocess.CalledProcessError):
+        return "unknown"
+
+
+def write_bench_json(path: str, bench: str, config: dict, metrics: list[dict]) -> dict:
+    """Write the bench document to ``path`` (a file, or a directory that
+    gets ``BENCH_<bench>.json`` appended).  Returns the document."""
+    names = [m["name"] for m in metrics]
+    if len(set(names)) != len(names):
+        raise ValueError(f"duplicate metric names: {sorted(names)}")
+    try:
+        import jax
+
+        jax_version = jax.__version__
+    except Exception:
+        jax_version = "unknown"
+    doc = {
+        "schema": SCHEMA_VERSION,
+        "bench": bench,
+        "git_sha": _git_sha(),
+        "created_unix": int(time.time()),
+        "jax_version": jax_version,
+        "config": config,
+        "metrics": metrics,
+    }
+    if os.path.isdir(path):
+        path = os.path.join(path, f"BENCH_{bench}.json")
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"wrote {path}")
+    return doc
+
+
+def load_bench_json(path: str) -> dict:
+    with open(path) as f:
+        doc = json.load(f)
+    if doc.get("schema") != SCHEMA_VERSION:
+        raise ValueError(
+            f"{path}: schema {doc.get('schema')} != {SCHEMA_VERSION}"
+        )
+    return doc

@@ -358,15 +358,22 @@ class BlockAllocator:
     def peek(self, keys: list[int]) -> tuple[int, int]:
         """(hit prefix length, hits currently parked free-cached) for an
         admission-time block budget — no state change."""
-        n_hit = revivals = 0
+        flags = self.peek_prefix(keys)
+        return len(flags), sum(flags)
+
+    def peek_prefix(self, keys: list[int]) -> list[bool]:
+        """Per-block 'hit is parked free-cached' flags for the longest
+        registered prefix of ``keys`` — chunked-admission accounting needs
+        the per-block breakdown (tail hits past the resume cap are
+        dropped, and only *their* revivals must be uncharged).  No state
+        change."""
+        flags: list[bool] = []
         for key in keys:
             bid = self._by_hash.get(key)
             if bid is None:
                 break
-            n_hit += 1
-            if self.ref[bid] == 0:
-                revivals += 1
-        return n_hit, revivals
+            flags.append(self.ref[bid] == 0)
+        return flags
 
     def blocks_needed(self, n_tokens: int, keys: list[int] | None = None) -> int:
         """Fresh blocks a prompt admission would consume (prefix-cache

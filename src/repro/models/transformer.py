@@ -49,6 +49,10 @@ class ModelBundle:
                                           # layout/block_size from here)
     plan: "DecodePlan | None" = None      # the resolved DecodePlan the
                                           # decode path dispatches through
+    prefill_chunk: "Callable | None" = None  # (params, batch, cache, *,
+                                             # final) -> (logits|None, cache)
+                                             # chunked-prefill step; None on
+                                             # families without it
 
 
 def _dtype(name: str):
@@ -243,6 +247,122 @@ def build(
         }
         return c
 
+    # ------------------------------------------------------ chunked prefill
+    def prefill_chunk(params, batch, cache, *, final: bool):
+        """One prompt chunk for a single slot of the *batched* cache.
+
+        batch = {tokens [1,n], start, slot, total, table_row? [n_btab]}:
+        the chunk covers logical positions [start, start+n) of a prompt of
+        ``total`` tokens.  The chunk's K/V are appended through the cache
+        layout's addressing (slab row write / block-table scatter), then
+        each layer attends over the logical prefix with ``q_offset=start``
+        — flash attention's masked keys contribute exact zeros, so row i
+        sees precisely keys 0..i and the hidden states are bit-identical
+        to a monolithic prefill of the same prompt (bf16 compute: the
+        cache round-trip is lossless).
+
+        Only the final chunk produces logits: it zeroes the slab/tail-
+        block rows beyond ``total`` (matching monolithic prefill's zero
+        padding, so selection-group statistics straddling the prompt end
+        agree), rebuilds the selection metadata over the full logical key
+        row, publishes ``length[slot] = total`` and (paged) the device
+        block-table row.  Non-final chunks return (None, cache) and leave
+        length untouched, so interleaved decode steps keep routing this
+        slot's scratch writes into masked rows.
+        """
+        toks = batch["tokens"]                  # [1, n]
+        start = batch["start"]                  # scalar int32
+        slot = batch["slot"]                    # scalar int32
+        total = batch["total"]                  # scalar int32
+        table_row = batch.get("table_row")      # [n_btab] int32 (paged)
+        paged = pol.layout == "paged"
+        h = jnp.take(params["embed"], toks, axis=0).astype(cdt)  # [1,n,d]
+        n = h.shape[1]
+        positions = (start + jnp.arange(n, dtype=jnp.int32))[None]
+        if paged:
+            bs = pol.block_size
+            phys = table_row[positions[0] // bs]                 # [n]
+            offs = positions[0] % bs
+
+        def chunk_body(hc, xs):
+            lp, lc = xs
+            xn = apply_norm(hc, lp["norm1"], cfg.norm)
+            q, k, v = attn.qkv_proj(lp["attn"], xn, cfg, positions=positions)
+            kc, vc = k.astype(lc["k"].dtype), v.astype(lc["v"].dtype)
+            if paged:
+                lck = lc["k"].at[phys, offs].set(kc[0])
+                lcv = lc["v"].at[phys, offs].set(vc[0])
+                Kl = kvcache_paged.gather_block_rows(lck, table_row[None])
+                Vl = kvcache_paged.gather_block_rows(lcv, table_row[None])
+            else:
+                lck = jax.lax.dynamic_update_slice(lc["k"], kc, (slot, start, 0, 0))
+                lcv = jax.lax.dynamic_update_slice(lc["v"], vc, (slot, start, 0, 0))
+                Kl = jax.lax.dynamic_index_in_dim(lck, slot, axis=0, keepdims=True)
+                Vl = jax.lax.dynamic_index_in_dim(lcv, slot, axis=0, keepdims=True)
+            cap = Kl.shape[1]
+            valid = (jnp.arange(cap, dtype=jnp.int32) < start + n)[None]
+            o = attn.flash_attention(
+                q, Kl, Vl, causal=True, q_offset=start, bias_mask=valid
+            )
+            o = o.reshape(1, n, cfg.n_heads * cfg.d_head) @ lp["attn"]["wo"].astype(hc.dtype)
+            hc = hc + o
+            y, _ = _ffn(lp, apply_norm(hc, lp["norm2"], cfg.norm), 1, n)
+            new_lc = dict(lc, k=lck, v=lcv)
+            if final:
+                row_valid = (jnp.arange(cap, dtype=jnp.int32) < total)
+                rmask = row_valid[None, :, None, None]
+                Kz = jnp.where(rmask, Kl, 0).astype(Kl.dtype)
+                Vz = jnp.where(rmask, Vl, 0).astype(Vl.dtype)
+                if paged:
+                    nb = table_row.shape[0]
+
+                    def put_blocks(pool, val):
+                        pb = pool.shape[1]
+                        return pool.at[table_row].set(
+                            val[0].reshape(nb, pb, *val.shape[2:]).astype(pool.dtype)
+                        )
+
+                    new_lc["k"] = put_blocks(new_lc["k"], Kz)
+                    new_lc["v"] = put_blocks(new_lc["v"], Vz)
+                else:
+                    new_lc["k"] = jax.lax.dynamic_update_index_in_dim(
+                        new_lc["k"], Kz[0], slot, 0
+                    )
+                    new_lc["v"] = jax.lax.dynamic_update_index_in_dim(
+                        new_lc["v"], Vz[0], slot, 0
+                    )
+                if "meta" in lc:
+                    from repro.core.policy import build_metadata
+
+                    mv = build_metadata(Kz, pol)
+                    if paged:
+                        new_lc["meta"] = jax.tree.map(
+                            put_blocks, new_lc["meta"], mv
+                        )
+                    else:
+                        new_lc["meta"] = jax.tree.map(
+                            lambda pool, val: jax.lax.dynamic_update_index_in_dim(
+                                pool, val[0].astype(pool.dtype), slot, 0
+                            ),
+                            new_lc["meta"], mv,
+                        )
+            return hc + y, new_lc
+
+        front_p = jax.tree.map(lambda a: a[:skip], params["layers"])
+        rest_p = jax.tree.map(lambda a: a[skip:], params["layers"])
+        h, front_cache = maybe_scan(
+            chunk_body, h, (front_p, cache["front"])
+        ) if skip else (h, cache["front"])
+        h, rest_cache = maybe_scan(chunk_body, h, (rest_p, cache["rest"]))
+        new_cache = dict(cache, front=front_cache, rest=rest_cache)
+        if not final:
+            return None, new_cache
+        new_cache["length"] = cache["length"].at[slot].set(total)
+        if "block_table" in cache:
+            new_cache["block_table"] = cache["block_table"].at[slot].set(table_row)
+        h = apply_norm(h, params["final_norm"], cfg.norm)[:, n - 1]
+        return _masked_logits(h, _head(params), cfg.vocab, Vp), new_cache
+
     # -------------------------------------------------------------- decode
     def decode_step(params, token, cache):
         length = cache["length"]
@@ -298,6 +418,7 @@ def build(
         param_count=cfg.param_count,
         policy=pol,
         plan=plan,
+        prefill_chunk=prefill_chunk,
     )
 
 

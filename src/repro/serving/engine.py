@@ -157,6 +157,12 @@ class Engine:
 
         self._decode_active = jax.jit(_decode_active_impl, donate_argnums=donate)
 
+        # chunked prefill (ContinuousScheduler's token quantum): one jitted
+        # step per (final?) flavour — jax retraces per chunk length
+        self._chunk_jits: dict[bool, Any] = {}
+        self._chunk_keys: dict[int, list[int]] = {}
+        self._set_length = jax.jit(self._set_length_impl, donate_argnums=(0,))
+
         if self.paged:
             # paged mode: slot insertion scatters prefix blocks into the
             # shared pool through the allocator instead of writing one
@@ -191,6 +197,7 @@ class Engine:
                 self._set_table_entry_impl, donate_argnums=(0,)
             )
             self._copy_block = jax.jit(self._copy_block_impl, donate_argnums=(0,))
+            self._zero_block = jax.jit(self._zero_block_impl, donate_argnums=(0,))
         else:
             self._batch_axes = _cache_batch_axes(bundle, capacity)
             self._insert = jax.jit(self._insert_impl, donate_argnums=(0,))
@@ -326,6 +333,9 @@ class Engine:
             length=cache["length"].at[slot].set(length),
         )
 
+    def _set_length_impl(self, cache, slot, val):
+        return dict(cache, length=cache["length"].at[slot].set(val))
+
     def _set_slot_state_impl(self, cache, slot, row, length):
         return dict(
             cache,
@@ -351,6 +361,51 @@ class Engine:
             rest=jax.tree.map(cp, cache["rest"]),
         )
 
+    def _zero_block_impl(self, cache, bid):
+        """Scrub a recycled block before a decode-time append lands in it.
+        The token-append metadata update *merges* with the group stats
+        already in the block, so a recycled block's stale stats would leak
+        into the new tokens' quantization scales — outputs would depend on
+        pool recycling history.  Zeroing restores the never-used-block
+        contents, making decode bit-identical regardless of pool pressure."""
+
+        def z(pool):
+            return pool.at[:, bid].set(jnp.zeros_like(pool[:, bid]))
+
+        return dict(
+            cache,
+            front=jax.tree.map(z, cache["front"]),
+            rest=jax.tree.map(z, cache["rest"]),
+        )
+
+    def try_prefix_replay(self, cache, tokens, slot: int):
+        """Full-prompt prefix hit: every block resident AND the first-token
+        logits cached under the full-prompt key — place the slot with zero
+        prefill FLOPs (references taken on every block, logits replayed
+        from the prompt cache).  Returns (logits | None, cache); None
+        means no full hit and nothing was changed."""
+        if not self.paged:
+            return None, cache
+        toks = [int(t) for t in tokens]
+        keys = block_hash_chain(toks, self.block_size)
+        nb = len(keys)
+        # empty prompt: no blocks, no hash chain — nothing to replay
+        if not keys or keys[-1] not in self._prompt_logits:
+            return None, cache
+        n_hit, _ = self.allocator.peek(keys)
+        if n_hit < nb:
+            return None, cache
+        blocks = [self.allocator.lookup(key) for key in keys]
+        self.prefix_hits += 1
+        self._prompt_logits.move_to_end(keys[-1])
+        row = np.zeros((self.n_btab,), np.int32)
+        row[:nb] = blocks
+        cache = self._set_slot_state(
+            cache, jnp.int32(slot), jnp.asarray(row), jnp.int32(len(toks))
+        )
+        self._seq[slot] = SeqBlocks(blocks=blocks, length=len(toks))
+        return jnp.asarray(self._prompt_logits[keys[-1]]), cache
+
     def _insert_paged(self, params, cache, tokens_1xS, length, slot, extras):
         toks = [int(t) for t in np.asarray(tokens_1xS)[0, :length]]
         keys = block_hash_chain(toks, self.block_size)
@@ -361,6 +416,9 @@ class Engine:
             )
         if slot in self._seq:
             raise ValueError(f"slot {slot} still holds blocks; release first")
+        logits, cache = self.try_prefix_replay(cache, toks, slot)
+        if logits is not None:
+            return logits, cache
         # longest shared prefix: take a reference on every hit block
         blocks: list[int] = []
         for key in keys:
@@ -369,22 +427,8 @@ class Engine:
                 break
             blocks.append(bid)
         n_hit = len(blocks)
-        # empty prompt: no blocks, no hash chain — prefill runs, nothing
-        # is registered or replayed
         full_key = keys[-1] if keys else None
         row = np.zeros((self.n_btab,), np.int32)
-
-        if keys and n_hit == nb and full_key in self._prompt_logits:
-            # full-prompt hit: every block is resident and the first-token
-            # logits are cached — no prefill FLOPs at all
-            self.prefix_hits += 1
-            self._prompt_logits.move_to_end(full_key)
-            row[:nb] = blocks
-            cache = self._set_slot_state(
-                cache, jnp.int32(slot), jnp.asarray(row), jnp.int32(length)
-            )
-            self._seq[slot] = SeqBlocks(blocks=blocks, length=length)
-            return jnp.asarray(self._prompt_logits[full_key]), cache
 
         for _ in range(n_hit, nb):
             bid = self.allocator.alloc()
@@ -428,6 +472,147 @@ class Engine:
         keys = block_hash_chain(tokens, self.block_size)
         return self.allocator.blocks_needed(len(tokens), keys)
 
+    # ------------------------------------------------------- chunked prefill
+    def _chunk_fn(self, final: bool):
+        fn = self._chunk_jits.get(final)
+        if fn is None:
+            if self.bundle.prefill_chunk is None:
+                raise NotImplementedError(
+                    f"model family {self.bundle.cfg.family!r} has no chunked "
+                    f"prefill; use monolithic Engine.insert"
+                )
+            fn = jax.jit(
+                partial(self.bundle.prefill_chunk, final=final),
+                donate_argnums=(2,),
+            )
+            self._chunk_jits[final] = fn
+        return fn
+
+    def blocks_needed_chunk(self, tokens, chunk_tokens: int) -> int:
+        """Fresh pool blocks needed to *begin* a chunked admission of
+        ``tokens`` and run its first chunk — the chunked analogue of
+        ``blocks_needed`` (resume-prefix hits discounted, free-cached
+        revivals charged).  The quantum scheduler admits on this and grows
+        the allocation chunk by chunk."""
+        L = len(tokens)
+        keys = block_hash_chain(tokens, self.block_size)
+        flags = self.allocator.peek_prefix(keys)
+        # begin_chunked never resumes past L-1 (the final chunk must run
+        # at least one token to produce logits): drop tail hits
+        while flags and len(flags) * self.block_size >= L:
+            flags.pop()
+        end = min(len(flags) * self.block_size + chunk_tokens, L)
+        nb = -(-end // self.block_size)
+        return (nb - len(flags)) + sum(flags)
+
+    def begin_chunked(self, cache, slot: int, tokens):
+        """Open a chunked insertion of the full prompt ``tokens`` into
+        ``slot``.  Returns (resume, cache): the position the first
+        ``prefill_chunk`` call must start from.
+
+        Paged: takes references on prefix-cache hit blocks (capped at the
+        last whole block *before* the prompt end, so the final chunk
+        always computes logits) and seeds the slot's host block list —
+        the device table row stays zeroed until the final chunk, so
+        interleaved decode steps route this slot's scratch writes to the
+        null block.  Slab: parks the slot's length at ``capacity`` so the
+        scratch writes clamp onto the last row (masked, and rewritten by
+        the final chunk when the prompt fills the slab)."""
+        if not self.paged:
+            cache = self._set_length(
+                cache, jnp.int32(slot), jnp.int32(self.capacity)
+            )
+            return 0, cache
+        if slot in self._seq:
+            raise ValueError(f"slot {slot} still holds blocks; release first")
+        toks = [int(t) for t in tokens]
+        keys = block_hash_chain(toks, self.block_size)
+        if len(keys) > self.n_btab:
+            raise ValueError(
+                f"prompt of {len(toks)} tokens exceeds capacity {self.capacity}"
+            )
+        L = len(toks)
+        blocks: list[int] = []
+        for key in keys:
+            bid = self.allocator.lookup(key)
+            if bid is None:
+                break
+            blocks.append(bid)
+        while blocks and len(blocks) * self.block_size >= L:
+            self.allocator.free(blocks.pop())
+        resume = len(blocks) * self.block_size
+        self._seq[slot] = SeqBlocks(blocks=blocks, length=resume)
+        self._chunk_keys[slot] = keys
+        return resume, cache
+
+    def prefill_chunk(self, params, cache, slot: int, tokens, start: int, n: int):
+        """Run one chunk — prompt positions [start, start+n) — of an open
+        chunked insertion (``begin_chunked`` first).  Returns
+        (ok, logits | None, cache): ok=False means the paged pool could
+        not grow the allocation (nothing changed — abort or retry later);
+        logits are produced only by the final chunk (start+n == len).
+
+        Paged bookkeeping per chunk: fresh blocks are allocated all-or-
+        nothing, and every block fully covered by completed chunks is
+        hash-registered immediately — an aborted half-prefilled request
+        parks its progress in the prefix cache and re-admits from the
+        completed-chunk boundary instead of token 0."""
+        toks = np.asarray(tokens, np.int32).reshape(-1)
+        L = int(toks.shape[0])
+        end = start + n
+        if not (0 < n and end <= L <= self.capacity):
+            raise ValueError(f"bad chunk [{start}, {end}) of {L} tokens")
+        final = end == L
+        batch = {
+            "tokens": jnp.asarray(toks[None, start:end]),
+            "start": jnp.int32(start),
+            "slot": jnp.int32(slot),
+            "total": jnp.int32(L),
+        }
+        if self.paged:
+            seq = self._seq[slot]
+            if start != seq.length:
+                raise ValueError(
+                    f"chunk starts at {start}, slot resident to {seq.length}"
+                )
+            nb_needed = -(-end // self.block_size)
+            fresh: list[int] = []
+            while len(seq.blocks) + len(fresh) < nb_needed:
+                bid = self.allocator.alloc()
+                if bid is None:
+                    for b in fresh:
+                        self.allocator.free(b)
+                    return False, None, cache
+                fresh.append(bid)
+            seq.blocks.extend(fresh)
+            row = np.zeros((self.n_btab,), np.int32)
+            row[: len(seq.blocks)] = seq.blocks
+            batch["table_row"] = jnp.asarray(row)
+        logits, cache = self._chunk_fn(final)(params, batch, cache)
+        if self.paged:
+            seq.length = end
+            keys = self._chunk_keys[slot]
+            for j in range(end // self.block_size):
+                self.allocator.register(seq.blocks[j], keys[j])
+            if final:
+                if L % self.block_size:
+                    self.allocator.register(seq.blocks[-1], keys[-1])
+                self.prefill_count += 1
+                self._prompt_logits[keys[-1]] = np.asarray(logits)
+                while len(self._prompt_logits) > MAX_CACHED_PROMPT_LOGITS:
+                    self._prompt_logits.popitem(last=False)
+                del self._chunk_keys[slot]
+        return True, logits, cache
+
+    def abort_chunked(self, cache, slot: int):
+        """Abandon an open chunked insertion (pool dry / preemption): drop
+        the slot's block references — registered completed-chunk blocks
+        park free-cached, so a re-admission resumes from the boundary."""
+        self._chunk_keys.pop(slot, None)
+        if self.paged:
+            cache = self.release_slot(cache, slot)
+        return cache
+
     def advance_slot(self, cache, slot: int):
         """Guarantee the next decode write of ``slot`` lands in a private,
         allocated block: allocate a fresh tail block on a block boundary,
@@ -446,6 +631,9 @@ class Engine:
             bid = self.allocator.alloc()
             if bid is None:
                 return False, cache
+            # recycled blocks carry stale K/V and group stats; the append-
+            # time metadata update merges with what's resident, so scrub
+            cache = self._zero_block(cache, jnp.int32(bid))
             seq.blocks.append(bid)
             cache = self._set_table_entry(
                 cache, jnp.int32(slot), jnp.int32(j), jnp.int32(bid)

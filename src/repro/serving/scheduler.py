@@ -17,6 +17,20 @@ re-queued at the head with its generated tokens folded into the prompt,
 so the re-admission prefill recomputes the identical continuation (greedy
 decoding: bit-identical outputs with or without preemption — covered in
 tests/test_paged.py).
+
+Chunked prefill (``chunk_tokens=N``; DESIGN.md §Chunked prefill): instead
+of running one whole-prompt prefill inside ``_admit`` — stalling every
+in-flight decode for its duration — each step spends at most ``N`` prompt
+tokens on ONE chunk of the in-flight admission, then runs the batched
+decode step for everything resident.  Paged admission needs only the
+first chunk's blocks (the quantum loop grows the allocation), and a
+half-prefilled request whose next chunk finds the pool dry aborts itself
+back to the queue head: its completed chunks are hash-registered, so the
+re-admission resumes from the completed-chunk boundary, not token 0.
+Outputs are bit-identical to monolithic admission under greedy sampling
+(tests/test_serving.py).  The stepwise ``start``/``submit``/``step`` API
+drives the same machinery from an arrival trace
+(benchmarks/bench_serve_trace.py).
 """
 from __future__ import annotations
 
@@ -43,6 +57,16 @@ class Request:
     rejected: bool = False          # prompt longer than engine capacity
 
 
+@dataclasses.dataclass
+class _ChunkState:
+    """An in-flight chunked admission (at most one at a time)."""
+
+    req: Request
+    slot: int
+    toks: np.ndarray                # full re-admission prompt (prompt + out)
+    pos: int                        # completed-chunk boundary (next start)
+
+
 class ContinuousScheduler:
     def __init__(
         self,
@@ -50,15 +74,31 @@ class ContinuousScheduler:
         params,
         pad_prompt_to: int | None = None,
         rng: jax.Array | None = None,
+        chunk_tokens: int | None = None,
     ):
         self.engine = engine
         self.params = params
         self.pad = pad_prompt_to
+        # chunked prefill: per-step token quantum.  None keeps monolithic
+        # admission (whole-prompt prefill inside _admit); an int admits
+        # through Engine.begin_chunked/prefill_chunk, spending at most
+        # `chunk_tokens` prompt tokens per step before the batched decode
+        # step — one long admission no longer stalls every in-flight
+        # decode for its whole prefill
+        self.chunk_tokens = chunk_tokens
         self.free = list(range(engine.n_slots))
         self.running: dict[int, Request] = {}   # slot → request, admission order
         self.steps = 0
         self.occupancy: list[int] = []
         self.preemptions = 0
+        self.prefill_chunks = 0                 # chunked-mode: chunks run
+        self.prefill_aborts = 0                 # chunked-mode: mid-prefill preemptions
+        # stepwise session state (run() drives these; trace-driven callers
+        # use start()/submit()/step() directly)
+        self._queue: deque[Request] = deque()
+        self._cache = None
+        self._cur = np.zeros((engine.n_slots,), np.int32)
+        self._prefilling: _ChunkState | None = None
         # sampling rng, split once per admission/decode step: every sampled
         # token — including the prefill-produced first token — draws from
         # this stream (the old _admit always took argmax(logits), so
@@ -76,8 +116,9 @@ class ContinuousScheduler:
         return cache
 
     def _admit(self, queue: deque[Request], cache, cur_tokens):
+        skipped: list[Request] = []
         while queue and self.free:
-            req = queue[0]
+            req = queue.popleft()
             # preempted requests carry their generated tokens: the
             # re-admission prompt is prompt + out so prefill recomputes
             # the cache the preemption dropped
@@ -86,7 +127,6 @@ class ContinuousScheduler:
                 # a longer prompt would write out of range (the slab
                 # path's dynamic_update_slice silently clamps onto live
                 # rows): reject instead of corrupting the cache
-                queue.popleft()
                 warnings.warn(
                     f"request {req.rid}: prompt of {len(toks_list)} tokens "
                     f"exceeds engine capacity {self.engine.capacity}; rejected"
@@ -98,9 +138,14 @@ class ContinuousScheduler:
                 self.engine.paged
                 and self.engine.blocks_needed(toks_list) > self.engine.free_blocks
             ):
-                break  # pool full: wait for running requests to retire
+                # pool full for THIS prompt: scan ahead — a later, smaller
+                # request may fit the remaining blocks (the old `break`
+                # head-of-line-blocked the whole queue on the big head even
+                # with slots and blocks to spare).  Skipped requests go
+                # back to the head in arrival order below.
+                skipped.append(req)
+                continue
             slot = self.free.pop()
-            queue.popleft()
             toks = np.asarray(toks_list, np.int32)
             S = self.pad or len(toks)
             S = max(S, len(toks))
@@ -128,6 +173,8 @@ class ContinuousScheduler:
                 continue
             cur_tokens[slot] = first
             self.running[slot] = req
+        for r in reversed(skipped):
+            queue.appendleft(r)
         return cache
 
     def _preempt_youngest(self, queue: deque[Request], cache) -> tuple[int, Any]:
@@ -155,35 +202,151 @@ class ContinuousScheduler:
                 # and the loop guard exits; it re-admits from the queue
         return cache
 
-    def run(self, requests: Sequence[Request]) -> dict[int, list[int]]:
-        # deque: _admit pops FIFO from the head — list.pop(0) was O(n) per
-        # admit, O(n²) across a burst of queued requests
-        queue = deque(requests)
-        cache = self.engine.new_cache()
-        cur = np.zeros((self.engine.n_slots,), np.int32)
-        cache = self._admit(queue, cache, cur)
-        while self.running or queue:
-            if not self.running:
-                # everything got preempted/retired while the queue head
-                # waited on blocks; with the pool now empty it must fit
-                cache = self._admit(queue, cache, cur)
-                if not self.running:
-                    if queue:
-                        raise RuntimeError(
-                            "scheduler stalled: queued request cannot be "
-                            "admitted into an empty engine"
-                        )
-                    break
-            if self.engine.paged:
-                cache = self._ensure_append_capacity(queue, cache)
-                if not self.running:
+    # ------------------------------------------------------ stepwise protocol
+    def start(self):
+        """(Re)initialise a stepwise serving session: fresh engine cache,
+        empty queue, all slots free.  ``run()`` calls this; trace-driven
+        callers (benchmarks/bench_serve_trace.py) use
+        ``start()`` + ``submit()`` + ``step()`` directly."""
+        self.free = list(range(self.engine.n_slots))
+        self.running = {}
+        self._queue = deque()
+        self._cache = self.engine.new_cache()
+        self._cur = np.zeros((self.engine.n_slots,), np.int32)
+        self._prefilling = None
+
+    def submit(self, req: Request):
+        """Enqueue a request (FIFO admission order)."""
+        self._queue.append(req)
+
+    @property
+    def busy(self) -> bool:
+        """Work left: anything running, queued, or mid-chunked-prefill."""
+        return bool(self.running or self._queue or self._prefilling)
+
+    def _finish_admission(self, req: Request, slot: int, logits):
+        """Sample the prefill-produced first token, then either retire the
+        request right away (max_new / eos / at-capacity) or mark the slot
+        running — the same contract as the tail of ``_admit``."""
+        first = self._sample(logits)
+        req.out.append(first)
+        at_capacity = len(req.tokens) + len(req.out) - 1 >= self.engine.capacity
+        if (
+            len(req.out) >= req.max_new
+            or (req.eos is not None and first == req.eos)
+            or at_capacity
+        ):
+            req.done = True
+            self._cache = self._release(self._cache, slot)
+        else:
+            self._cur[slot] = first
+            self.running[slot] = req
+
+    def _start_chunked_admission(self) -> bool:
+        """Pop the first admissible queued request and open its chunked
+        insertion (paged: admitted on *first-chunk* blocks — the quantum
+        loop grows the allocation).  Full-prompt prefix hits replay with
+        zero prefill FLOPs and keep scanning.  Returns True if anything
+        was admitted/replayed/rejected."""
+        eng = self.engine
+        q = self._queue
+        progressed = False
+        skipped: list[Request] = []
+        while q and self.free and self._prefilling is None:
+            req = q.popleft()
+            toks_list = req.tokens + req.out
+            if len(toks_list) > eng.capacity:
+                warnings.warn(
+                    f"request {req.rid}: prompt of {len(toks_list)} tokens "
+                    f"exceeds engine capacity {eng.capacity}; rejected"
+                )
+                req.done = True
+                req.rejected = True
+                progressed = True
+                continue
+            if eng.paged:
+                if (
+                    eng.blocks_needed_chunk(toks_list, self.chunk_tokens)
+                    > eng.free_blocks
+                ):
+                    skipped.append(req)
                     continue
+                slot = self.free.pop()
+                logits, self._cache = eng.try_prefix_replay(
+                    self._cache, toks_list, slot
+                )
+                if logits is not None:
+                    self._finish_admission(req, slot, logits)
+                    progressed = True
+                    continue
+            else:
+                slot = self.free.pop()
+            toks = np.asarray(toks_list, np.int32)
+            resume, self._cache = eng.begin_chunked(self._cache, slot, toks)
+            self._prefilling = _ChunkState(req=req, slot=slot, toks=toks, pos=resume)
+            progressed = True
+        for r in reversed(skipped):
+            q.appendleft(r)
+        return progressed
+
+    def _chunk_admission_step(self) -> bool:
+        """Spend this step's token quantum: at most one prefill chunk of
+        the in-flight admission (opening one first if none is)."""
+        eng = self.engine
+        if self._prefilling is None:
+            progressed = self._start_chunked_admission()
+            if self._prefilling is None:
+                return progressed
+        st = self._prefilling
+        n = min(self.chunk_tokens, len(st.toks) - st.pos)
+        ok, logits, self._cache = eng.prefill_chunk(
+            self.params, self._cache, st.slot, st.toks, st.pos, n
+        )
+        if not ok:
+            # pool dry mid-prefill.  The prefilling request is the youngest
+            # admission, so it is its own preemption victim (running
+            # decodes keep priority): completed chunks are parked in the
+            # prefix cache and the request re-queues at the head — its
+            # re-admission resumes from the completed-chunk boundary, not
+            # token 0.
+            self._cache = eng.abort_chunked(self._cache, st.slot)
+            self.free.append(st.slot)
+            self._queue.appendleft(st.req)
+            self._prefilling = None
+            self.preemptions += 1
+            self.prefill_aborts += 1
+            return True
+        self.prefill_chunks += 1
+        st.pos += n
+        if logits is not None:
+            self._finish_admission(st.req, st.slot, logits)
+            self._prefilling = None
+        return True
+
+    def step(self) -> bool:
+        """One scheduler step: admission work (one monolithic admission
+        sweep, or one prefill chunk under the token quantum), then one
+        batched decode step for everything resident.  Returns True if any
+        work was done — False with a non-empty queue means the head can
+        never be admitted (stall)."""
+        progressed = False
+        if self.chunk_tokens is None:
+            before = (len(self.running), len(self._queue))
+            self._cache = self._admit(self._queue, self._cache, self._cur)
+            progressed |= (len(self.running), len(self._queue)) != before
+        else:
+            progressed |= self._chunk_admission_step()
+        if self.running:
+            if self.engine.paged:
+                self._cache = self._ensure_append_capacity(self._queue, self._cache)
+                if not self.running:
+                    return True
             active_np = np.zeros((self.engine.n_slots,), bool)
             for s in self.running:
                 active_np[s] = True
             self._rng, step_rng = jax.random.split(self._rng)
-            nxt, _, cache = self.engine.decode(
-                self.params, jnp.asarray(cur), cache,
+            nxt, _, self._cache = self.engine.decode(
+                self.params, jnp.asarray(self._cur), self._cache,
                 active=jnp.asarray(active_np), rng=step_rng,
             )
             nxt = np.asarray(nxt)
@@ -192,7 +355,7 @@ class ContinuousScheduler:
             for slot, req in list(self.running.items()):
                 tok = int(nxt[slot])
                 req.out.append(tok)
-                cur[slot] = tok
+                self._cur[slot] = tok
                 at_capacity = (
                     len(req.tokens) + len(req.out) - 1 >= self.engine.capacity
                 )
@@ -203,8 +366,22 @@ class ContinuousScheduler:
                 ):
                     req.done = True
                     del self.running[slot]
-                    cache = self._release(cache, slot)
-            cache = self._admit(queue, cache, cur)
+                    self._cache = self._release(self._cache, slot)
+            progressed = True
+        return progressed
+
+    def run(self, requests: Sequence[Request]) -> dict[int, list[int]]:
+        # deque: _admit pops FIFO from the head — list.pop(0) was O(n) per
+        # admit, O(n²) across a burst of queued requests
+        self.start()
+        for r in requests:
+            self.submit(r)
+        while self.busy:
+            if not self.step():
+                raise RuntimeError(
+                    "scheduler stalled: queued request cannot be "
+                    "admitted into an empty engine"
+                )
         return {r.rid: r.out for r in requests}
 
     @property

@@ -1,0 +1,147 @@
+"""Bench persistence schema + the CI regression-check tool."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, REPO)
+
+from benchmarks.persist import (  # noqa: E402
+    SCHEMA_VERSION, load_bench_json, metric, write_bench_json,
+)
+
+TOOL = os.path.join(REPO, "tools", "check_bench_regression.py")
+
+
+def test_persist_roundtrip(tmp_path):
+    doc = write_bench_json(
+        str(tmp_path), "demo", {"S": 256},
+        [metric("lat", 12.5, unit="us", better="lower", gate=True),
+         metric("note", 1.0)],
+    )
+    path = tmp_path / "BENCH_demo.json"
+    assert path.exists()
+    back = load_bench_json(str(path))
+    assert back == doc
+    assert back["schema"] == SCHEMA_VERSION
+    assert back["config"] == {"S": 256}
+    assert [m["name"] for m in back["metrics"]] == ["lat", "note"]
+
+
+def test_persist_rejects_bad_metrics(tmp_path):
+    with pytest.raises(ValueError):
+        metric("x", 1.0, better="sideways")
+    with pytest.raises(ValueError):
+        metric("x", 1.0, gate=True)  # gated metrics need a direction
+    with pytest.raises(ValueError):
+        write_bench_json(
+            str(tmp_path), "dup", {},
+            [metric("a", 1.0), metric("a", 2.0)],
+        )
+
+
+def _write(dirpath, metrics):
+    os.makedirs(dirpath, exist_ok=True)
+    doc = {
+        "schema": SCHEMA_VERSION, "bench": "demo", "git_sha": "test",
+        "created_unix": 0, "jax_version": "x", "config": {},
+        "metrics": metrics,
+    }
+    with open(os.path.join(dirpath, "BENCH_demo.json"), "w") as f:
+        json.dump(doc, f)
+
+
+def _check(base, new, *extra):
+    return subprocess.run(
+        [sys.executable, TOOL, "--baseline-dir", str(base),
+         "--new-dir", str(new), *extra],
+        capture_output=True, text=True,
+    )
+
+
+BASE = [
+    metric("lat", 100.0, better="lower", gate=True),
+    metric("tput", 50.0, better="higher", gate=True),
+    metric("zero", 0.0, better="lower", gate=True),
+    metric("wall", 3.0),  # info: never gated
+]
+
+
+def test_regression_check_within_tolerance(tmp_path):
+    _write(tmp_path / "base", BASE)
+    _write(tmp_path / "new", [
+        metric("lat", 115.0, better="lower", gate=True),    # +15% < +20%
+        metric("tput", 46.0, better="higher", gate=True),   # -8% > -10%
+        metric("zero", 0.0, better="lower", gate=True),
+        metric("wall", 300.0),  # info regressions never fail the check
+    ])
+    r = _check(tmp_path / "base", tmp_path / "new")
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "within tolerance" in r.stdout
+
+
+@pytest.mark.parametrize("bad", [
+    metric("lat", 125.0, better="lower", gate=True),   # +25% latency
+    metric("tput", 40.0, better="higher", gate=True),  # -20% throughput
+    metric("zero", 4096.0, better="lower", gate=True),  # zero base is exact
+])
+def test_regression_check_fails_on_degraded(tmp_path, bad):
+    """The negative test the CI lane relies on: a synthetically degraded
+    BENCH json must turn the check red."""
+    _write(tmp_path / "base", BASE)
+    degraded = [m if m["name"] != bad["name"] else bad for m in BASE]
+    _write(tmp_path / "new", degraded)
+    r = _check(tmp_path / "base", tmp_path / "new")
+    assert r.returncode == 1, r.stdout + r.stderr
+    assert "PERF REGRESSION" in r.stderr
+    assert bad["name"] in r.stderr
+
+
+def test_regression_check_fails_on_gone_gated_metric(tmp_path):
+    _write(tmp_path / "base", BASE)
+    _write(tmp_path / "new", [m for m in BASE if m["name"] != "lat"])
+    r = _check(tmp_path / "base", tmp_path / "new")
+    assert r.returncode == 1
+    assert "disappeared" in r.stderr + r.stdout
+
+
+def test_regression_check_missing_baseline(tmp_path):
+    _write(tmp_path / "new", BASE)
+    os.makedirs(tmp_path / "base", exist_ok=True)
+    r = _check(tmp_path / "base", tmp_path / "new")
+    assert r.returncode == 1
+    assert "missing baseline" in r.stderr + r.stdout
+
+
+def test_update_baseline_blesses(tmp_path):
+    _write(tmp_path / "base", BASE)
+    _write(tmp_path / "new", [
+        metric("lat", 200.0, better="lower", gate=True),
+        metric("tput", 50.0, better="higher", gate=True),
+        metric("zero", 0.0, better="lower", gate=True),
+        metric("wall", 3.0),
+    ])
+    assert _check(tmp_path / "base", tmp_path / "new").returncode == 1
+    r = _check(tmp_path / "base", tmp_path / "new", "--update-baseline")
+    assert r.returncode == 0 and "blessed" in r.stdout
+    # after blessing, the same numbers pass
+    assert _check(tmp_path / "base", tmp_path / "new").returncode == 0
+
+
+@pytest.mark.slow
+def test_serve_trace_smoke_end_to_end(tmp_path):
+    """Full trace replay (chunked vs monolithic on the bursty trace):
+    the bench's own gate must hold and the persisted doc must be loadable.
+    Slow: two complete scheduler replays (~minutes on CPU)."""
+    from benchmarks.bench_serve_trace import smoke
+
+    doc = smoke(str(tmp_path))  # asserts ttft_p99 + throughput internally
+    path = tmp_path / "BENCH_serve_trace.json"
+    assert path.exists()
+    assert load_bench_json(str(path)) == doc
+    names = {m["name"] for m in doc["metrics"]}
+    assert {"chunked_over_mono_ttft_p99", "chunked_vt_ttft_p99",
+            "mono_vt_ttft_p99"} <= names

@@ -1,0 +1,147 @@
+#!/usr/bin/env python3
+"""Compare fresh BENCH_*.json results against the committed baselines and
+fail (exit 1) on a perf regression.
+
+Only metrics with ``gate: true`` participate; everything else is printed
+for the record.  Tolerances:
+
+  * ``better: lower``  — fail if new > baseline * 1.20 (+20% latency);
+    a zero baseline is an exact gate (new must stay ~0, e.g. the
+    "one-pass path materialises zero score bytes" property).
+  * ``better: higher`` — fail if new < baseline * 0.90 (−10% throughput).
+
+Typical flows:
+
+  # CI / local check (baselines live at the repo root):
+  python tools/check_bench_regression.py --new-dir bench_out
+
+  # intentional perf change: regenerate, inspect, then bless
+  PYTHONPATH=src python -m benchmarks.bench_serve_trace --smoke --out bench_out
+  PYTHONPATH=src python -m benchmarks.bench_latency --smoke --out bench_out
+  python tools/check_bench_regression.py --new-dir bench_out --update-baseline
+
+``--update-baseline`` copies each new BENCH_*.json over its baseline
+(creating it if absent) so the blessed numbers are committed with the PR
+that changed them.  Stdlib-only on purpose: CI runs it without jax.
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import shutil
+import sys
+
+SCHEMA_VERSION = 1
+LOWER_TOL = 0.20   # +20% allowed on lower-is-better (latency) metrics
+HIGHER_TOL = 0.10  # -10% allowed on higher-is-better (throughput) metrics
+ZERO_EPS = 1e-9    # zero baselines gate exactly
+
+
+def load(path: str) -> dict:
+    with open(path) as f:
+        doc = json.load(f)
+    if doc.get("schema") != SCHEMA_VERSION:
+        raise SystemExit(f"{path}: schema {doc.get('schema')} != {SCHEMA_VERSION}")
+    return doc
+
+
+def check_metric(base: dict, new: dict) -> tuple[str, bool, str]:
+    """Returns (status, regressed?, delta%) for one gated metric pair."""
+    b, n = base["value"], new["value"]
+    if base["better"] == "lower":
+        limit = b * (1.0 + LOWER_TOL) if b > ZERO_EPS else ZERO_EPS
+        bad = n > limit
+    else:  # higher
+        limit = b * (1.0 - HIGHER_TOL)
+        bad = n < limit
+    delta = "n/a" if abs(b) <= ZERO_EPS else f"{(n - b) / b * 100.0:+.1f}%"
+    return ("REGRESSED" if bad else "ok"), bad, delta
+
+
+def compare(base_doc: dict, new_doc: dict, bench: str) -> list[str]:
+    """Prints the table for one bench; returns regression descriptions."""
+    base_m = {m["name"]: m for m in base_doc["metrics"]}
+    regressions: list[str] = []
+    print(f"\n== {bench} (baseline {base_doc['git_sha'][:10]} -> "
+          f"new {new_doc['git_sha'][:10]})")
+    print(f"{'metric':40s} {'base':>12s} {'new':>12s} {'delta':>8s}  status")
+    for m in new_doc["metrics"]:
+        name = m["name"]
+        if name not in base_m:
+            print(f"{name:40s} {'--':>12s} {m['value']:12.3f} {'new':>8s}  "
+                  + ("GATED-NEW" if m["gate"] else "info"))
+            continue
+        b = base_m[name]
+        if not m["gate"]:
+            d = ("n/a" if abs(b["value"]) <= ZERO_EPS
+                 else f"{(m['value'] - b['value']) / b['value'] * 100.0:+.1f}%")
+            print(f"{name:40s} {b['value']:12.3f} {m['value']:12.3f} "
+                  f"{d:>8s}  info")
+            continue
+        status, bad, delta = check_metric(b, m)
+        print(f"{name:40s} {b['value']:12.3f} {m['value']:12.3f} "
+              f"{delta:>8s}  {status}")
+        if bad:
+            regressions.append(f"{bench}:{name} {b['value']:g} -> {m['value']:g}")
+    gone = [n for n, bm in base_m.items()
+            if bm["gate"] and n not in {m["name"] for m in new_doc["metrics"]}]
+    for name in gone:
+        print(f"{name:40s} {base_m[name]['value']:12.3f} {'--':>12s} "
+              f"{'gone':>8s}  REGRESSED")
+        regressions.append(f"{bench}:{name} gated metric disappeared")
+    return regressions
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(
+        description=__doc__, formatter_class=argparse.RawDescriptionHelpFormatter
+    )
+    ap.add_argument("--baseline-dir", default=".",
+                    help="directory holding the committed BENCH_*.json "
+                         "baselines (default: repo root)")
+    ap.add_argument("--new-dir", required=True,
+                    help="directory holding the freshly generated BENCH_*.json")
+    ap.add_argument("--update-baseline", action="store_true",
+                    help="bless: copy each new BENCH_*.json over its baseline "
+                         "instead of checking")
+    args = ap.parse_args()
+
+    new_paths = sorted(glob.glob(os.path.join(args.new_dir, "BENCH_*.json")))
+    if not new_paths:
+        print(f"no BENCH_*.json under {args.new_dir}", file=sys.stderr)
+        return 1
+
+    if args.update_baseline:
+        for p in new_paths:
+            dst = os.path.join(args.baseline_dir, os.path.basename(p))
+            shutil.copyfile(p, dst)
+            print(f"blessed {dst}")
+        return 0
+
+    regressions: list[str] = []
+    for p in new_paths:
+        name = os.path.basename(p)
+        base_path = os.path.join(args.baseline_dir, name)
+        if not os.path.exists(base_path):
+            print(f"\n== {name}: no baseline at {base_path} — "
+                  f"run with --update-baseline to create it", file=sys.stderr)
+            regressions.append(f"{name}: missing baseline")
+            continue
+        regressions += compare(load(base_path), load(p), name)
+
+    print()
+    if regressions:
+        print("PERF REGRESSION:", file=sys.stderr)
+        for r in regressions:
+            print(f"  {r}", file=sys.stderr)
+        print("(intentional? bless with --update-baseline and commit)",
+              file=sys.stderr)
+        return 1
+    print("bench regression check: all gated metrics within tolerance")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
