@@ -20,9 +20,12 @@ already held by decoding requests) twice — chunked admission
 p99 TTFT is strictly lower at equal (±10%) token throughput: under block
 pressure, chunked admission overlaps prefill compute with the wait for
 blocks to drain, while a monolithic admission pays its whole prefill
-*after* the pool finally fits the prompt.  Results go to
-``BENCH_serve_trace.json`` (see benchmarks/persist.py; baseline checked
-by tools/check_bench_regression.py).
+*after* the pool finally fits the prompt.  A third *faulted* pass replays
+the same trace on a degradation-enabled engine under a fixed
+``ServingFaultInjector`` schedule (cancel, poison, alloc-fail burst) plus
+an already-expired deadline, and gates zero leaked blocks at drain.
+Results go to ``BENCH_serve_trace.json`` (see benchmarks/persist.py;
+baseline checked by tools/check_bench_regression.py).
 """
 from __future__ import annotations
 
@@ -36,7 +39,13 @@ import numpy as np
 from repro.configs import reduced_config
 from repro.core.policy import PolicyConfig
 from repro.models import build_model
-from repro.serving import ContinuousScheduler, Engine, Request
+from repro.serving import (
+    ContinuousScheduler,
+    Engine,
+    FaultSpec,
+    Request,
+    ServingFaultInjector,
+)
 
 from .persist import metric, write_bench_json
 
@@ -184,12 +193,53 @@ def replay(eng, sched, trace, *, decode_token_cost: float = DECODE_TOKEN_COST):
         mean_occupancy=sched.mean_occupancy,
         peak_blocks=pool["peak_in_use"],
         prefix_block_hits=pool["prefix_block_hits"],
+        # fault-tolerance counters (all zero on a fault-free replay)
+        rejected=sched.health.counts["rejected"],
+        cancelled=sched.health.counts["cancelled"],
+        deadline_exceeded=sched.health.counts["deadline_exceeded"],
+        quarantined=sched.health.counts["quarantined"],
+        insert_retries=sched.insert_retries,
+        budget_downshifts=pool.get("budget_downshifts", 0),
+        blocks_shed=pool.get("blocks_shed", 0),
+        leaked_blocks=eng.allocator.n_in_use if eng.paged else 0,
     )
 
 
 # --------------------------------------------------------------------- modes
 
 SMOKE_ENGINE = dict(capacity=1024, n_slots=4, pool_blocks=34, block_size=32)
+
+# the chaos pass's fixed fault schedule: a mid-flight cancel of a burst
+# prompt, a poisoned decode step for a warm decoder (quarantine), and a
+# transient allocation-failure burst (degradation ladder / insert retry)
+FAULT_SCHEDULE = (
+    FaultSpec("poison_logits", step=4, rid=2),
+    FaultSpec("cancel", step=6, rid=4),
+    FaultSpec("alloc_fail", step=8, count=3),
+)
+
+
+def faulted_replay(cfg, params, bundle, *, seed: int, chunk_tokens: int):
+    """The chaos pass: the same bursty trace, plus one request whose
+    deadline is already unmeetable, on a degradation-enabled engine under
+    :data:`FAULT_SCHEDULE`.  Returns (stats, injector, engine)."""
+    eng = Engine(
+        bundle, n_slots=SMOKE_ENGINE["n_slots"],
+        capacity=SMOKE_ENGINE["capacity"], degrade_floor=16,
+    )
+    trace = bursty_trace(seed, cfg.vocab)
+    rid = 1 + max(spec["rid"] for _, spec in trace)
+    trace.append(
+        (200.0, dict(rid=rid, tokens=list(range(1, 48)), max_new=8,
+                     deadline=10.0))
+    )
+    inj = ServingFaultInjector(list(FAULT_SCHEDULE))
+    sched = ContinuousScheduler(
+        eng, params, chunk_tokens=chunk_tokens, injector=inj, audit_every=8
+    )
+    stats = replay(eng, sched, trace)
+    eng.audit()  # invariant check on top of the gated leak metric
+    return stats, inj, eng
 
 
 def smoke(out_dir: str, *, seed: int = 0, chunk_tokens: int = 256,
@@ -205,6 +255,12 @@ def smoke(out_dir: str, *, seed: int = 0, chunk_tokens: int = 256,
         print(f"-- {mode}: " + " ".join(
             f"{k}={v:.1f}" for k, v in sorted(results[mode].items())
         ))
+    fr, inj, feng = faulted_replay(
+        cfg, params, eng.bundle, seed=seed, chunk_tokens=chunk_tokens
+    )
+    print("-- faulted: " + " ".join(
+        f"{k}={v:.1f}" for k, v in sorted(fr.items())
+    ))
     ch, mo = results["chunked"], results["mono"]
     ratio = ch["vt_ttft_p99"] / max(mo["vt_ttft_p99"], 1e-9)
     tput_ratio = ch["vt_tokens_per_kunit"] / max(mo["vt_tokens_per_kunit"], 1e-9)
@@ -232,6 +288,17 @@ def smoke(out_dir: str, *, seed: int = 0, chunk_tokens: int = 256,
         metric("chunked_over_mono_tput", tput_ratio, better="higher", gate=True),
         metric("chunked_prefill_chunks", ch["prefill_chunks"]),
         metric("chunked_prefill_aborts", ch["prefill_aborts"]),
+        # chaos pass: leak gate + lifecycle / degradation counters
+        metric("faulted_leaked_blocks", fr["leaked_blocks"], unit="blocks",
+               better="lower", gate=True),
+        metric("faulted_rejected", fr["rejected"]),
+        metric("faulted_cancelled", fr["cancelled"]),
+        metric("faulted_deadline_exceeded", fr["deadline_exceeded"]),
+        metric("faulted_quarantined", fr["quarantined"]),
+        metric("faulted_budget_downshifts", fr["budget_downshifts"]),
+        metric("faulted_blocks_shed", fr["blocks_shed"]),
+        metric("faulted_insert_retries", fr["insert_retries"]),
+        metric("faulted_total_tokens", fr["total_tokens"]),
     ]
     doc = write_bench_json(
         out_dir, "serve_trace",
@@ -244,8 +311,17 @@ def smoke(out_dir: str, *, seed: int = 0, chunk_tokens: int = 256,
     # (within 10%) virtual token throughput
     assert ch["vt_ttft_p99"] < mo["vt_ttft_p99"], (ch, mo)
     assert tput_ratio >= 0.9, (ch, mo)
+    # the fault-tolerance claim: every scheduled fault fired, each left
+    # its structured outcome, and the pool drained without leaking
+    assert inj.all_fired, inj.fired_log
+    assert fr["leaked_blocks"] == 0, fr
+    assert fr["cancelled"] >= 1 and fr["quarantined"] >= 1, fr
+    assert fr["deadline_exceeded"] >= 1, fr
+    assert feng.allocator.n_in_use == 0
     print(f"smoke ok: ttft_p99 {ch['vt_ttft_p99']:.0f} (chunked) vs "
-          f"{mo['vt_ttft_p99']:.0f} (mono), tput ratio {tput_ratio:.2f}")
+          f"{mo['vt_ttft_p99']:.0f} (mono), tput ratio {tput_ratio:.2f}; "
+          f"faulted pass survived {len(inj.fired_log)} faults, "
+          f"0 leaked blocks")
     return doc
 
 

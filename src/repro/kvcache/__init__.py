@@ -1,5 +1,6 @@
 from .cache import append_kv, append_token_metadata, init_layer_cache
 from .paged import (
+    AllocatorAuditError,
     BlockAllocator,
     block_hash_chain,
     gather_paged_kv,
@@ -9,6 +10,7 @@ from .paged import (
 )
 
 __all__ = [
+    "AllocatorAuditError",
     "BlockAllocator",
     "append_kv",
     "append_token_metadata",

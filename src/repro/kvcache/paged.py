@@ -250,6 +250,11 @@ class SeqBlocks:
     length: int = 0  # next write position (== tokens resident)
 
 
+class AllocatorAuditError(AssertionError):
+    """A :meth:`BlockAllocator.audit` invariant violation (leak, ref-count
+    drift, free-list/table overlap, or hash-index inconsistency)."""
+
+
 class BlockAllocator:
     """Free-list block allocator with ref counts and a prefix cache.
 
@@ -275,9 +280,11 @@ class BlockAllocator:
         self._by_hash: dict[int, int] = {}                        # key → bid
         self._hash_of: dict[int, int] = {}                        # bid → key
         self._in_use = 0
+        self._fail_next = 0  # fault injection: fail the next N alloc() calls
         self.peak_in_use = 0
         self.cow_copies = 0
         self.prefix_block_hits = 0
+        self.injected_alloc_failures = 0
 
     # ------------------------------------------------------------- accounting
     @property
@@ -299,9 +306,20 @@ class BlockAllocator:
         return self.n_in_use / self.usable
 
     # -------------------------------------------------------------- alloc/free
+    def fail_next(self, n: int = 1) -> None:
+        """Chaos hook: make the next ``n`` :meth:`alloc` calls report an
+        empty pool (a transient exhaustion burst).  Callers already handle
+        None, so the failure exercises the real degradation/preemption
+        paths with no allocator state change."""
+        self._fail_next += int(n)
+
     def alloc(self) -> int | None:
         """Hand out a free block (ref=1), evicting the LRU free-cached
         block's hash if the plain free list is empty.  None when dry."""
+        if self._fail_next > 0:
+            self._fail_next -= 1
+            self.injected_alloc_failures += 1
+            return None
         if self._free:
             bid = self._free.popleft()
         elif self._free_cached:
@@ -383,3 +401,62 @@ class BlockAllocator:
             return nb
         n_hit, revivals = self.peek(keys[:nb])
         return nb - n_hit + revivals
+
+    # ------------------------------------------------------------------- audit
+    def audit(self, owners: dict[int, int] | None = None) -> None:
+        """Invariant checker; raises :class:`AllocatorAuditError` on the
+        first violation, returns None when clean.
+
+        Checks: (a) every block id is in exactly one state — in use
+        (ref > 0), free, or free-cached — i.e. the free structures are
+        disjoint from each other and from referenced blocks, with no
+        duplicates and no leaked ids; (b) ``_in_use`` matches the ref
+        counts; (c) the hash index and its inverse agree, and every
+        free-cached block is hash-registered with ref == 0; (d) with
+        ``owners`` (bid → expected ref count from the engine's live
+        sequences), ref-count conservation holds *exactly* — a double
+        free or a leaked reference cannot hide.
+        """
+        def fail(msg: str) -> None:
+            raise AllocatorAuditError(f"allocator audit: {msg}")
+
+        if self.ref[NULL_BLOCK] != 0:
+            fail(f"null block has ref {self.ref[NULL_BLOCK]}")
+        free = list(self._free)
+        cached = list(self._free_cached)
+        if NULL_BLOCK in free or NULL_BLOCK in cached:
+            fail("null block on a free list")
+        if len(set(free)) != len(free):
+            fail("duplicate ids on the free list (double free)")
+        if set(free) & set(cached):
+            fail(f"free list and free-cached overlap: {set(free) & set(cached)}")
+        in_use = {b for b in range(1, self.n_blocks) if self.ref[b] > 0}
+        for b in free + cached:
+            if b in in_use:
+                fail(f"block {b} is both referenced (ref={self.ref[b]}) and free")
+        if len(in_use) + len(free) + len(cached) != self.n_blocks - 1:
+            unaccounted = (
+                set(range(1, self.n_blocks)) - in_use - set(free) - set(cached)
+            )
+            fail(f"leaked blocks (in no state): {sorted(unaccounted)}")
+        if self._in_use != len(in_use):
+            fail(f"_in_use counter {self._in_use} != referenced blocks {len(in_use)}")
+        for key, bid in self._by_hash.items():
+            if self._hash_of.get(bid) != key:
+                fail(f"hash index asymmetry: key {key} -> block {bid}")
+        for bid, key in self._hash_of.items():
+            if self._by_hash.get(key) != bid:
+                fail(f"hash inverse asymmetry: block {bid} -> key {key}")
+        for bid, key in self._free_cached.items():
+            if self.ref[bid] != 0:
+                fail(f"free-cached block {bid} has ref {self.ref[bid]}")
+            if self._hash_of.get(bid) != key:
+                fail(f"free-cached block {bid} not hash-registered under {key}")
+        if owners is not None:
+            for b in range(1, self.n_blocks):
+                expect = owners.get(b, 0)
+                if self.ref[b] != expect:
+                    fail(
+                        f"ref-count drift on block {b}: allocator says "
+                        f"{self.ref[b]}, owners hold {expect}"
+                    )

@@ -1,4 +1,26 @@
 from .engine import Engine, SamplingConfig, serving_policy
+from .faults import FAULT_KINDS, FaultSpec, ServingFaultInjector
+from .health import (
+    STATUSES,
+    HealthMonitor,
+    RequestOutcome,
+    ServeResult,
+    StepReport,
+)
 from .scheduler import ContinuousScheduler, Request
 
-__all__ = ["ContinuousScheduler", "Engine", "Request", "SamplingConfig", "serving_policy"]
+__all__ = [
+    "FAULT_KINDS",
+    "STATUSES",
+    "ContinuousScheduler",
+    "Engine",
+    "FaultSpec",
+    "HealthMonitor",
+    "Request",
+    "RequestOutcome",
+    "SamplingConfig",
+    "ServeResult",
+    "ServingFaultInjector",
+    "StepReport",
+    "serving_policy",
+]

@@ -25,7 +25,8 @@ the pool — HBM is bounded by tokens resident, not slots × capacity.
 from __future__ import annotations
 
 import dataclasses
-from collections import OrderedDict
+import weakref
+from collections import Counter, OrderedDict
 from functools import partial
 from typing import Any
 
@@ -33,7 +34,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.policy import PolicyConfig
+from repro.core.policy import DecodePlan, PolicyConfig
 from repro.kvcache.paged import (
     NULL_BLOCK,
     BlockAllocator,
@@ -43,6 +44,16 @@ from repro.kvcache.paged import (
 from repro.models.model_zoo import ModelBundle
 
 MAX_CACHED_PROMPT_LOGITS = 1024  # LRU bound on the full-prompt logits cache
+
+# Every live engine, for the test-suite allocator-audit fixture: conftest
+# sweeps this after each test and asserts a drained engine leaked nothing.
+_LIVE_ENGINES: "weakref.WeakSet[Engine]" = weakref.WeakSet()
+
+
+class PoolExhausted(RuntimeError):
+    """The block pool ran dry mid-operation (insert raced a concurrent
+    consumer, or a fault-injected allocation failure).  The operation has
+    been rolled back — the caller can re-queue and retry."""
 
 
 def serving_policy(
@@ -129,6 +140,8 @@ class Engine:
         sampling: SamplingConfig = SamplingConfig(),
         donate_cache: bool = True,
         seed: int = 0,
+        degrade_floor: int = 64,
+        restore_free_frac: float = 0.5,
     ):
         self.bundle = bundle
         self.n_slots = n_slots
@@ -144,18 +157,22 @@ class Engine:
             # first decode kernel (budget/sink/recent vs capacity)
             bundle.plan.validate_capacity(capacity)
         self._prefill = jax.jit(partial(bundle.prefill, capacity=capacity))
-        donate = (2,) if donate_cache else ()
-        self._decode = jax.jit(bundle.decode_step, donate_argnums=donate)
+        self._donate = (2,) if donate_cache else ()
+        self._decode, self._decode_active = self._make_decode_fns(bundle)
 
-        def _decode_active_impl(params, tokens, cache, active):
-            old_len = cache["length"]
-            logits, new_cache = bundle.decode_step(params, tokens, cache)
-            new_cache = dict(
-                new_cache, length=jnp.where(active, new_cache["length"], old_len)
-            )
-            return logits, new_cache
-
-        self._decode_active = jax.jit(_decode_active_impl, donate_argnums=donate)
+        # graceful-degradation budget ladder (DESIGN.md §Serving fault
+        # tolerance): under pool pressure the scheduler halves the
+        # retrieval budget down to ``degrade_floor`` (rebuilding the
+        # decode fns from a plan-validated policy), restoring the full
+        # budget once the free pool recovers past ``restore_free_frac``
+        self.base_budget = pol.budget if pol is not None else 0
+        self.current_budget = self.base_budget
+        self.degrade_floor = max(1, degrade_floor)
+        self.restore_free_frac = restore_free_frac
+        self.downshifts = 0
+        self.restores = 0
+        self.blocks_shed = 0
+        self._budget_fns = {self.base_budget: (self._decode, self._decode_active)}
 
         # chunked prefill (ContinuousScheduler's token quantum): one jitted
         # step per (final?) flavour — jax retraces per chunk length
@@ -177,10 +194,19 @@ class Engine:
             self.n_btab = capacity // self.block_size
             self.pool_blocks = pol.pool_blocks or (n_slots * self.n_btab + 1)
             if self.pool_blocks - 1 < self.n_btab:
-                raise ValueError(
+                # undersized pool: a request can outgrow the pool before
+                # reaching capacity.  Previously a hard error ("a lone
+                # request could deadlock the scheduler") — the scheduler
+                # now retires such requests with a structured `rejected`
+                # outcome (livelock detection + admission-time pool-bound
+                # check), so the configuration is merely degraded
+                import warnings
+
+                warnings.warn(
                     f"pool_blocks={self.pool_blocks} cannot hold one "
-                    f"worst-case context ({self.n_btab} blocks + null): a "
-                    f"lone request could deadlock the scheduler"
+                    f"worst-case context ({self.n_btab} blocks + null): "
+                    f"requests outgrowing the pool will be retired as "
+                    f"rejected instead of running to capacity"
                 )
             self.allocator = BlockAllocator(self.pool_blocks, self.block_size)
             self._seq: dict[int, SeqBlocks] = {}
@@ -201,6 +227,24 @@ class Engine:
         else:
             self._batch_axes = _cache_batch_axes(bundle, capacity)
             self._insert = jax.jit(self._insert_impl, donate_argnums=(0,))
+        self._corrupt_meta = jax.jit(self._corrupt_meta_impl, donate_argnums=(0,))
+        _LIVE_ENGINES.add(self)
+
+    def _make_decode_fns(self, bundle: ModelBundle):
+        """Jitted (decode, decode_active) pair for one bundle — rebuilt
+        per budget rung by the degradation ladder (the cache pytree is
+        budget-independent, so swapping fns never invalidates a cache)."""
+        dec = jax.jit(bundle.decode_step, donate_argnums=self._donate)
+
+        def _decode_active_impl(params, tokens, cache, active):
+            old_len = cache["length"]
+            logits, new_cache = bundle.decode_step(params, tokens, cache)
+            new_cache = dict(
+                new_cache, length=jnp.where(active, new_cache["length"], old_len)
+            )
+            return logits, new_cache
+
+        return dec, jax.jit(_decode_active_impl, donate_argnums=self._donate)
 
     @classmethod
     def build(
@@ -214,6 +258,8 @@ class Engine:
         layout: str | None = None,
         block_size: int = 32,
         pool_blocks: int = 0,
+        degrade_floor: int = 64,
+        restore_free_frac: float = 0.5,
         **build_kwargs,
     ) -> "Engine":
         """Build bundle + engine with the serving defaults: when ``policy``
@@ -259,10 +305,16 @@ class Engine:
                 pool_blocks=pool_blocks,
             )
         bundle = build_model(cfg, pol, **build_kwargs)
-        return cls(bundle, n_slots=n_slots, capacity=capacity, sampling=sampling)
+        return cls(
+            bundle, n_slots=n_slots, capacity=capacity, sampling=sampling,
+            degrade_floor=degrade_floor, restore_free_frac=restore_free_frac,
+        )
 
     # ------------------------------------------------------------ lifecycle
     def new_cache(self, length: int = 0):
+        if self.current_budget != self.base_budget:
+            # a degraded budget never outlives its serving session
+            self.restore_budget()
         if self.paged:
             # the pool restarts empty: reset the allocator and drop the
             # prompt caches (their contents describe the old pool / the
@@ -435,7 +487,7 @@ class Engine:
             if bid is None:
                 for b in blocks:
                     self.allocator.free(b)
-                raise RuntimeError(
+                raise PoolExhausted(
                     "block pool exhausted during insert — admit on "
                     "Engine.blocks_needed() <= Engine.free_blocks first"
                 )
@@ -661,7 +713,8 @@ class Engine:
         seq = self._seq.pop(slot, None)
         if seq is not None:
             for b in seq.blocks:
-                self.allocator.free(b)
+                if b != NULL_BLOCK:  # shed middle blocks leave null holes
+                    self.allocator.free(b)
             cache = self._set_slot_state(
                 cache, jnp.int32(slot),
                 jnp.zeros((self.n_btab,), jnp.int32), jnp.int32(0),
@@ -680,7 +733,162 @@ class Engine:
             cow_copies=a.cow_copies,
             prefix_hits=self.prefix_hits,
             prefills=self.prefill_count,
+            budget_downshifts=self.downshifts,
+            budget_restores=self.restores,
+            blocks_shed=self.blocks_shed,
         )
+
+    # --------------------------------------------- graceful budget degradation
+    @property
+    def degradable(self) -> bool:
+        """Whether this engine's policy has a retrieval budget the ladder
+        can downshift (fier/quest; 'full' reads everything by definition)."""
+        pol = self.bundle.policy
+        return pol is not None and pol.kind in ("fier", "quest")
+
+    def _swap_budget(self, budget: int) -> None:
+        """Point the decode fns at a bundle rebuilt with ``budget``.
+
+        The rebuilt policy goes through ``DecodePlan.build`` (capability
+        matrix + capacity bounds), so an invalid rung fails loudly here
+        rather than inside a kernel.  Rungs are cached — thrashing between
+        two budgets re-jits nothing.  The cache pytree does not depend on
+        the budget, so the live cache carries across the swap.
+        """
+        fns = self._budget_fns.get(budget)
+        if fns is None:
+            from repro.models import build_model
+
+            pol2 = dataclasses.replace(self.bundle.policy, budget=budget)
+            DecodePlan.build(pol2, capacity=self.capacity)
+            bundle2 = build_model(self.bundle.cfg, pol2)
+            fns = self._budget_fns[budget] = self._make_decode_fns(bundle2)
+        self._decode, self._decode_active = fns
+        self.current_budget = budget
+
+    def downshift_budget(self) -> bool:
+        """One rung down the ladder (halve, floored at ``degrade_floor``).
+        False when already at the floor / not degradable."""
+        if not self.degradable:
+            return False
+        new = max(self.degrade_floor, self.current_budget // 2)
+        if new >= self.current_budget:
+            return False
+        self._swap_budget(new)
+        self.downshifts += 1
+        return True
+
+    def restore_budget(self) -> bool:
+        """Back to the full configured budget (pressure cleared)."""
+        if self.current_budget == self.base_budget:
+            return False
+        self._swap_budget(self.base_budget)
+        self.restores += 1
+        return True
+
+    def maybe_restore_budget(self) -> bool:
+        """Restore the full budget iff degraded and the free pool has
+        recovered past ``restore_free_frac`` of the usable blocks."""
+        if self.current_budget == self.base_budget or not self.paged:
+            return False
+        if self.allocator.n_free < self.restore_free_frac * self.allocator.usable:
+            return False
+        return self.restore_budget()
+
+    def shed_middle_blocks(self, cache, slot: int):
+        """Free the *middle* blocks of a running slot — the memory half of
+        a budget downshift (the budget itself is read-side only; shrinking
+        it frees nothing).  Keeps the sink blocks at the front and the
+        recent-window + writable-tail blocks at the back — exactly the
+        rows the degraded policy's guard-rails still read exactly — and
+        replaces each shed entry with the null block (reads as zeros,
+        masked-by-score like any unselected row).  Shared blocks are
+        skipped (dropping one ref of a ref>1 block frees no memory, it
+        only loses this slot's access); hash-registered blocks *are*
+        shed — they park free-cached with contents intact, evictable for
+        fresh allocations and still valid for prefix revival.
+        Returns (blocks freed, cache)."""
+        seq = self._seq.get(slot)
+        pol = self.bundle.policy
+        if seq is None or pol is None:
+            return 0, cache
+        bs = self.block_size
+        keep_front = max(1, -(-pol.sink // bs))
+        keep_tail = max(2, -(-(pol.recent + 1) // bs))
+        freed = 0
+        for j in range(keep_front, len(seq.blocks) - keep_tail):
+            b = seq.blocks[j]
+            if b == NULL_BLOCK or self.allocator.ref[b] > 1:
+                continue
+            seq.blocks[j] = NULL_BLOCK
+            cache = self._set_table_entry(
+                cache, jnp.int32(slot), jnp.int32(j), jnp.int32(NULL_BLOCK)
+            )
+            self.allocator.free(b)
+            freed += 1
+        self.blocks_shed += freed
+        return freed, cache
+
+    # ----------------------------------------------------- faults & auditing
+    def _corrupt_meta_impl(self, cache, idx):
+        """Scramble the FIER side-car at axis-1 index ``idx`` of the rest
+        pool — a physical block id (paged) or a slot's batch row (slab).
+        Codes bit-flip and (scale, zero) are pushed away from their true
+        values; everything stays finite (this fault class is *silent*
+        retrieval-quality corruption, not the NaN watchdog's)."""
+        rest = cache["rest"]
+        if not isinstance(rest, dict) or "meta" not in rest:
+            return cache
+        from repro.core.quantize import QuantizedKeys
+
+        m = rest["meta"]
+        meta = QuantizedKeys(
+            m.codes.at[:, idx].set(m.codes[:, idx] ^ jnp.uint8(0xA5)),
+            m.scale.at[:, idx].set(-m.scale[:, idx] - 1.0),
+            m.zero.at[:, idx].set(-m.zero[:, idx] + 1.0),
+            m.group,
+        )
+        return dict(cache, rest=dict(rest, meta=meta))
+
+    def corrupt_slot_metadata(self, cache, slot: int):
+        """Chaos hook: corrupt the FIER metadata backing ``slot``.
+
+        Paged mode targets a *privately held, unregistered* block
+        (ref == 1, no prefix-cache hash) so the corruption cannot bleed
+        into prefix-sharing requests or future prefix hits; when the slot
+        holds no such block yet (fully shared prompt, no decode append),
+        nothing happens and the caller retries later.  Slab mode scrambles
+        the slot's own batch row.  Returns (corrupted?, cache)."""
+        if not self.paged:
+            if 0 <= slot < self.n_slots:
+                return True, self._corrupt_meta(cache, jnp.int32(slot))
+            return False, cache
+        seq = self._seq.get(slot)
+        if seq is None:
+            return False, cache
+        for b in reversed(seq.blocks):
+            if (
+                b != NULL_BLOCK
+                and self.allocator.ref[b] == 1
+                and self.allocator._hash_of.get(b) is None
+            ):
+                return True, self._corrupt_meta(cache, jnp.int32(b))
+        return False, cache
+
+    def audit(self) -> None:
+        """Cross-check the allocator against the engine's live sequences:
+        every block reference the engine holds must be counted exactly by
+        the allocator (ref-count conservation), on top of the allocator's
+        internal invariants.  Raises ``AllocatorAuditError``; no-op for
+        slab engines (nothing to leak)."""
+        if not self.paged:
+            return
+        owners: Counter[int] = Counter()
+        for seq in self._seq.values():
+            for b in seq.blocks:
+                if b != NULL_BLOCK:
+                    owners[b] += 1
+        self.allocator.audit(dict(owners))
 
     def decode(self, params, tokens, cache, active=None, rng=None):
         """One decode step for all slots; inactive slots don't advance.

@@ -31,6 +31,17 @@ Outputs are bit-identical to monolithic admission under greedy sampling
 (tests/test_serving.py).  The stepwise ``start``/``submit``/``step`` API
 drives the same machinery from an arrival trace
 (benchmarks/bench_serve_trace.py).
+
+Fault tolerance (DESIGN.md §Serving fault tolerance): every request
+leaves through exactly one structured :class:`~repro.serving.health.RequestOutcome`
+(``finished | rejected | cancelled | deadline_exceeded | quarantined``);
+deadlines run on the scheduler's virtual-token clock (1 unit per prompt
+token prefilled or token decoded); a per-step NaN/Inf watchdog
+quarantines poisoned slots without touching the rest of the batch; and
+under pool pressure the scheduler walks the engine's budget-degradation
+ladder (downshift retrieval budget + shed middle blocks) before falling
+back to preemption.  ``serving.faults.ServingFaultInjector`` drives all
+of this deterministically in the chaos tests.
 """
 from __future__ import annotations
 
@@ -44,6 +55,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from . import engine as engine_mod
+from .health import HealthMonitor, RequestOutcome, ServeResult, StepReport, nonfinite_slots
 
 
 @dataclasses.dataclass
@@ -55,6 +67,15 @@ class Request:
     out: list[int] = dataclasses.field(default_factory=list)
     done: bool = False
     rejected: bool = False          # prompt longer than engine capacity
+    # virtual-token-clock deadline (absolute; None = no deadline): the
+    # request is retired `deadline_exceeded` at the first step where the
+    # scheduler clock has passed it — queued, mid-prefill, or decoding
+    deadline: float | None = None
+    outcome: RequestOutcome | None = None   # terminal record, set at retirement
+    # livelock detection (self-preemption without progress): consecutive
+    # self-preemptions and the progress marker at the last one
+    self_preempts: int = 0
+    preempt_progress: int = -1
 
 
 @dataclasses.dataclass
@@ -75,10 +96,24 @@ class ContinuousScheduler:
         pad_prompt_to: int | None = None,
         rng: jax.Array | None = None,
         chunk_tokens: int | None = None,
+        injector=None,
+        audit_every: int | None = None,
+        self_preempt_limit: int = 4,
+        watchdog: bool = True,
     ):
         self.engine = engine
         self.params = params
         self.pad = pad_prompt_to
+        # fault tolerance: deterministic chaos injector (serving.faults),
+        # allocator-audit cadence, livelock retirement threshold, and the
+        # per-step non-finite-logits watchdog
+        self.injector = injector
+        self.health = HealthMonitor(audit_every)
+        self.self_preempt_limit = self_preempt_limit
+        self.watchdog = watchdog
+        self.vtime = 0.0                        # virtual-token clock
+        self.outcomes: dict[int, RequestOutcome] = {}
+        self._step_retired: list[RequestOutcome] = []
         # chunked prefill: per-step token quantum.  None keeps monolithic
         # admission (whole-prompt prefill inside _admit); an int admits
         # through Engine.begin_chunked/prefill_chunk, spending at most
@@ -93,6 +128,7 @@ class ContinuousScheduler:
         self.preemptions = 0
         self.prefill_chunks = 0                 # chunked-mode: chunks run
         self.prefill_aborts = 0                 # chunked-mode: mid-prefill preemptions
+        self.insert_retries = 0                 # transient insert-time pool failures
         # stepwise session state (run() drives these; trace-driven callers
         # use start()/submit()/step() directly)
         self._queue: deque[Request] = deque()
@@ -115,6 +151,143 @@ class ContinuousScheduler:
         self.free.append(slot)
         return cache
 
+    # --------------------------------------------------- request lifecycle
+    def _retire(self, req: Request, status: str, reason: str = "") -> RequestOutcome:
+        """Record a request's terminal outcome (bookkeeping only — the
+        caller releases slots/blocks at its own call site, since cache
+        threading differs per path)."""
+        req.done = True
+        if status == "rejected":
+            req.rejected = True
+        oc = RequestOutcome(
+            rid=req.rid, status=status, reason=reason,
+            tokens=len(req.out), vtime=self.vtime,
+        )
+        req.outcome = oc
+        self.outcomes[req.rid] = oc
+        self.health.record(oc)
+        self._step_retired.append(oc)
+        return oc
+
+    def slot_of(self, rid: int) -> int | None:
+        """The decode slot currently holding request ``rid`` (None when
+        queued / prefilling / retired)."""
+        for s, r in self.running.items():
+            if r.rid == rid:
+                return s
+        return None
+
+    def cancel(self, rid: int, reason: str = "cancelled by caller") -> bool:
+        """Withdraw a request wherever it is — queued, mid-chunked-prefill,
+        or mid-decode — releasing its blocks and recording a ``cancelled``
+        outcome.  False when ``rid`` is unknown or already retired."""
+        for r in self._queue:
+            if r.rid == rid:
+                self._queue.remove(r)
+                self._retire(r, "cancelled", reason)
+                return True
+        st = self._prefilling
+        if st is not None and st.req.rid == rid:
+            self._cache = self.engine.abort_chunked(self._cache, st.slot)
+            self.free.append(st.slot)
+            self._prefilling = None
+            self._retire(st.req, "cancelled", reason)
+            return True
+        slot = self.slot_of(rid)
+        if slot is not None:
+            req = self.running.pop(slot)
+            self._cache = self._release(self._cache, slot)
+            self._retire(req, "cancelled", reason)
+            return True
+        return False
+
+    def _expire_deadlines(self) -> bool:
+        """Retire every request whose virtual-token deadline has passed —
+        in the queue, mid-chunked-prefill, and mid-decode."""
+        any_expired = False
+        for r in [
+            r for r in self._queue
+            if r.deadline is not None and self.vtime >= r.deadline
+        ]:
+            self._queue.remove(r)
+            self._retire(r, "deadline_exceeded", "expired while queued")
+            any_expired = True
+        st = self._prefilling
+        if st is not None and st.req.deadline is not None and self.vtime >= st.req.deadline:
+            self._cache = self.engine.abort_chunked(self._cache, st.slot)
+            self.free.append(st.slot)
+            self._prefilling = None
+            self._retire(st.req, "deadline_exceeded", "expired mid-chunked-prefill")
+            any_expired = True
+        for slot, req in list(self.running.items()):
+            if req.deadline is not None and self.vtime >= req.deadline:
+                del self.running[slot]
+                self._cache = self._release(self._cache, slot)
+                self._retire(req, "deadline_exceeded", "expired mid-decode")
+                any_expired = True
+        return any_expired
+
+    def _note_self_preempt(self, req: Request, marker: int) -> bool:
+        """Track consecutive self-preemptions without progress.  ``marker``
+        is a monotone progress measure (tokens resident / completed-chunk
+        boundary); a self-preemption that didn't advance it extends the
+        streak.  True → the request is livelocked and should be retired."""
+        if marker <= req.preempt_progress:
+            req.self_preempts += 1
+        else:
+            req.self_preempts = 1
+            req.preempt_progress = marker
+        return req.self_preempts >= self.self_preempt_limit
+
+    def _try_degrade(self, cache):
+        """One rung down the budget-degradation ladder: halve the engine's
+        retrieval budget and shed running slots' middle blocks (the sink
+        and recent-window blocks the guard-rails read exactly are kept).
+        Returns (freed any blocks?, cache) — False sends the caller to
+        the preemption fallback (ladder floor reached / nothing to shed).
+        """
+        eng = self.engine
+        if not (eng.paged and eng.degradable):
+            return False, cache
+        if not eng.downshift_budget():
+            return False, cache
+        freed = 0
+        for slot in self.running:
+            n, cache = eng.shed_middle_blocks(cache, slot)
+            freed += n
+        return freed > 0, cache
+
+    def _reject_inadmissible(self, req: Request, toks_list) -> bool:
+        """Structured rejection of requests that can never be served: a
+        prompt beyond the cache capacity (a longer prompt would write out
+        of range — the slab path's dynamic_update_slice silently clamps
+        onto live rows), or, paged, a prompt needing more blocks than the
+        whole pool owns (admitting it would only livelock the
+        preempt/re-admit cycle).  The warning stays for humans; callers
+        branch on the outcome record."""
+        eng = self.engine
+        if len(toks_list) > eng.capacity:
+            msg = (
+                f"request {req.rid}: prompt of {len(toks_list)} tokens "
+                f"exceeds engine capacity {eng.capacity}; rejected"
+            )
+            warnings.warn(msg)
+            self._retire(req, "rejected", msg)
+            return True
+        if (
+            eng.paged
+            and -(-len(toks_list) // eng.block_size) > eng.allocator.usable
+        ):
+            msg = (
+                f"request {req.rid}: prompt of {len(toks_list)} tokens needs "
+                f"more blocks than the whole pool holds "
+                f"({eng.allocator.usable} usable × {eng.block_size}); rejected"
+            )
+            warnings.warn(msg)
+            self._retire(req, "rejected", msg)
+            return True
+        return False
+
     def _admit(self, queue: deque[Request], cache, cur_tokens):
         skipped: list[Request] = []
         while queue and self.free:
@@ -123,16 +296,7 @@ class ContinuousScheduler:
             # re-admission prompt is prompt + out so prefill recomputes
             # the cache the preemption dropped
             toks_list = req.tokens + req.out
-            if len(toks_list) > self.engine.capacity:
-                # a longer prompt would write out of range (the slab
-                # path's dynamic_update_slice silently clamps onto live
-                # rows): reject instead of corrupting the cache
-                warnings.warn(
-                    f"request {req.rid}: prompt of {len(toks_list)} tokens "
-                    f"exceeds engine capacity {self.engine.capacity}; rejected"
-                )
-                req.done = True
-                req.rejected = True
+            if self._reject_inadmissible(req, toks_list):
                 continue
             if (
                 self.engine.paged
@@ -151,9 +315,21 @@ class ContinuousScheduler:
             S = max(S, len(toks))
             padded = np.zeros((1, S), np.int32)
             padded[0, : len(toks)] = toks
-            logits, cache = self.engine.insert(
-                self.params, cache, jnp.asarray(padded), len(toks), slot
-            )
+            try:
+                logits, cache = self.engine.insert(
+                    self.params, cache, jnp.asarray(padded), len(toks), slot
+                )
+            except engine_mod.PoolExhausted:
+                # the pool dried between the admission check and the
+                # allocation (transient: a fault-injected failure burst, or
+                # an admission-check race).  The insert rolled itself back;
+                # re-queue and retry on a later sweep (the retry counts as
+                # step progress — transient failures drain over steps).
+                self.free.append(slot)
+                skipped.append(req)
+                self.insert_retries += 1
+                continue
+            self.vtime += len(toks)
             first = self._sample(logits)
             req.out.append(first)
             # the prefill-produced token counts: check termination before
@@ -168,7 +344,7 @@ class ContinuousScheduler:
                 or (req.eos is not None and first == req.eos)
                 or at_capacity
             ):
-                req.done = True
+                self._retire(req, "finished")
                 cache = self._release(cache, slot)
                 continue
             cur_tokens[slot] = first
@@ -177,27 +353,54 @@ class ContinuousScheduler:
             queue.appendleft(r)
         return cache
 
-    def _preempt_youngest(self, queue: deque[Request], cache) -> tuple[int, Any]:
+    def _preempt_youngest(
+        self, queue: deque[Request], cache, requester: int | None = None
+    ) -> tuple[int, Any]:
         """Free the most recently admitted running request and push it
         back to the queue head (its generated tokens become prompt suffix
-        on re-admission).  Returns (victim slot, cache)."""
+        on re-admission).  Returns (victim slot, cache).
+
+        ``requester`` is the slot whose dry append triggered this: when
+        the victim IS the requester (self-preemption), the cycle makes
+        no one else any room — a repeat without progress is the classic
+        lone-request livelock, and after ``self_preempt_limit`` such
+        cycles the request is retired ``rejected`` instead of re-queued.
+        """
         slot = next(reversed(self.running))
         req = self.running.pop(slot)
         cache = self._release(cache, slot)
-        queue.appendleft(req)
         self.preemptions += 1
+        if slot == requester and self._note_self_preempt(
+            req, len(req.tokens) + len(req.out)
+        ):
+            self.health.self_preempt_retires += 1
+            msg = (
+                f"request {req.rid}: {req.self_preempts} consecutive "
+                f"self-preemptions without progress (decode outgrows the "
+                f"block pool); retired"
+            )
+            warnings.warn(msg)
+            self._retire(req, "rejected", msg)
+        else:
+            queue.appendleft(req)
         return slot, cache
 
     def _ensure_append_capacity(self, queue: deque[Request], cache):
         """Paged: every running slot must own a writable tail block before
         the decode step (fresh block on a boundary, copy-on-write on a
-        shared tail).  Preempts youngest-first while the pool is dry."""
+        shared tail).  When the pool is dry, walk the degradation ladder
+        first — downshift the retrieval budget and shed middle blocks of
+        running slots — and only preempt youngest-first once the ladder
+        floor is reached or shedding frees nothing."""
         for slot in list(self.running):
             while slot in self.running:
                 ok, cache = self.engine.advance_slot(cache, slot)
                 if ok:
                     break
-                victim, cache = self._preempt_youngest(queue, cache)
+                degraded, cache = self._try_degrade(cache)
+                if degraded:
+                    continue  # freed blocks — retry the append
+                victim, cache = self._preempt_youngest(queue, cache, requester=slot)
                 # if the dry slot itself was youngest, it is preempted
                 # and the loop guard exits; it re-admits from the queue
         return cache
@@ -214,6 +417,10 @@ class ContinuousScheduler:
         self._cache = self.engine.new_cache()
         self._cur = np.zeros((self.engine.n_slots,), np.int32)
         self._prefilling = None
+        self.vtime = 0.0
+        self.outcomes = {}
+        self._step_retired = []
+        self.health = HealthMonitor(self.health.audit_every)
 
     def submit(self, req: Request):
         """Enqueue a request (FIFO admission order)."""
@@ -236,7 +443,7 @@ class ContinuousScheduler:
             or (req.eos is not None and first == req.eos)
             or at_capacity
         ):
-            req.done = True
+            self._retire(req, "finished")
             self._cache = self._release(self._cache, slot)
         else:
             self._cur[slot] = first
@@ -255,13 +462,7 @@ class ContinuousScheduler:
         while q and self.free and self._prefilling is None:
             req = q.popleft()
             toks_list = req.tokens + req.out
-            if len(toks_list) > eng.capacity:
-                warnings.warn(
-                    f"request {req.rid}: prompt of {len(toks_list)} tokens "
-                    f"exceeds engine capacity {eng.capacity}; rejected"
-                )
-                req.done = True
-                req.rejected = True
+            if self._reject_inadmissible(req, toks_list):
                 progressed = True
                 continue
             if eng.paged:
@@ -308,50 +509,95 @@ class ContinuousScheduler:
             # decodes keep priority): completed chunks are parked in the
             # prefix cache and the request re-queues at the head — its
             # re-admission resumes from the completed-chunk boundary, not
-            # token 0.
+            # token 0.  An abort whose completed-chunk boundary didn't
+            # advance since the last one is the chunked flavour of the
+            # self-preemption livelock (the pool can't hold this prompt
+            # alongside the running set, and its own fresh chunks evict
+            # its parked progress): retire after `self_preempt_limit`.
             self._cache = eng.abort_chunked(self._cache, st.slot)
             self.free.append(st.slot)
-            self._queue.appendleft(st.req)
             self._prefilling = None
             self.preemptions += 1
             self.prefill_aborts += 1
+            if self._note_self_preempt(st.req, st.pos):
+                self.health.self_preempt_retires += 1
+                msg = (
+                    f"request {st.req.rid}: {st.req.self_preempts} chunked-"
+                    f"prefill aborts without progress (pool cannot hold the "
+                    f"prompt); retired"
+                )
+                warnings.warn(msg)
+                self._retire(st.req, "rejected", msg)
+            else:
+                self._queue.appendleft(st.req)
             return True
         self.prefill_chunks += 1
+        self.vtime += n
         st.pos += n
         if logits is not None:
             self._finish_admission(st.req, st.slot, logits)
             self._prefilling = None
         return True
 
-    def step(self) -> bool:
-        """One scheduler step: admission work (one monolithic admission
-        sweep, or one prefill chunk under the token quantum), then one
-        batched decode step for everything resident.  Returns True if any
-        work was done — False with a non-empty queue means the head can
-        never be admitted (stall)."""
+    def step(self) -> StepReport:
+        """One scheduler step: fault hooks + deadline sweep, admission
+        work (one monolithic admission sweep, or one prefill chunk under
+        the token quantum), then one batched decode step for everything
+        resident — with a non-finite-logits watchdog that quarantines
+        poisoned slots.  Returns a truthy :class:`StepReport` if any work
+        was done — falsy with a non-empty queue means the head can never
+        be admitted (stall)."""
+        self._step_retired = []
         progressed = False
+        if self.injector is not None:
+            self.injector.on_step_begin(self)
+        progressed |= self._expire_deadlines()
+        progressed |= bool(self._step_retired)  # injected cancels count
+        # pressure cleared? step back up the degradation ladder
+        if self.engine.paged and self.engine.maybe_restore_budget():
+            progressed = True
         if self.chunk_tokens is None:
-            before = (len(self.running), len(self._queue))
+            before = (len(self.running), len(self._queue), self.insert_retries)
             self._cache = self._admit(self._queue, self._cache, self._cur)
-            progressed |= (len(self.running), len(self._queue)) != before
+            progressed |= (
+                (len(self.running), len(self._queue), self.insert_retries)
+                != before
+            )
         else:
             progressed |= self._chunk_admission_step()
         if self.running:
             if self.engine.paged:
                 self._cache = self._ensure_append_capacity(self._queue, self._cache)
                 if not self.running:
-                    return True
+                    return StepReport(True, self._step_retired)
             active_np = np.zeros((self.engine.n_slots,), bool)
             for s in self.running:
                 active_np[s] = True
             self._rng, step_rng = jax.random.split(self._rng)
-            nxt, _, self._cache = self.engine.decode(
+            nxt, logits, self._cache = self.engine.decode(
                 self.params, jnp.asarray(self._cur), self._cache,
                 active=jnp.asarray(active_np), rng=step_rng,
             )
             nxt = np.asarray(nxt)
             self.steps += 1
             self.occupancy.append(len(self.running))
+            self.vtime += len(self.running)
+            if self.watchdog or self.injector is not None:
+                lg = np.asarray(logits)
+                if self.injector is not None:
+                    lg = self.injector.poison_logits(self, lg)
+                if self.watchdog:
+                    for slot in nonfinite_slots(lg, list(self.running)):
+                        # quarantine ONLY the poisoned slot: its sampled
+                        # token is garbage (drawn from non-finite logits),
+                        # so it is discarded with the slot — the rest of
+                        # the batch decodes on untouched
+                        req = self.running.pop(slot)
+                        self._cache = self._release(self._cache, slot)
+                        self._retire(
+                            req, "quarantined",
+                            f"non-finite logits at decode step {self.steps}",
+                        )
             for slot, req in list(self.running.items()):
                 tok = int(nxt[slot])
                 req.out.append(tok)
@@ -364,13 +610,17 @@ class ContinuousScheduler:
                     or (req.eos is not None and tok == req.eos)
                     or at_capacity
                 ):
-                    req.done = True
+                    self._retire(req, "finished")
                     del self.running[slot]
                     self._cache = self._release(self._cache, slot)
             progressed = True
-        return progressed
+        self.health.maybe_audit(self.engine, self.steps)
+        return StepReport(progressed, self._step_retired)
 
-    def run(self, requests: Sequence[Request]) -> dict[int, list[int]]:
+    def run(self, requests: Sequence[Request]) -> ServeResult:
+        """Serve ``requests`` to completion.  Returns a :class:`ServeResult`
+        — a plain ``rid → generated tokens`` dict (back-compat) carrying
+        the structured per-request outcomes in ``.outcomes``."""
         # deque: _admit pops FIFO from the head — list.pop(0) was O(n) per
         # admit, O(n²) across a burst of queued requests
         self.start()
@@ -382,7 +632,9 @@ class ContinuousScheduler:
                     "scheduler stalled: queued request cannot be "
                     "admitted into an empty engine"
                 )
-        return {r.rid: r.out for r in requests}
+        return ServeResult(
+            {r.rid: r.out for r in requests}, dict(self.outcomes)
+        )
 
     @property
     def mean_occupancy(self) -> float:

@@ -41,3 +41,28 @@ def run_in_subprocess(code: str, n_devices: int = 4, timeout: int = 600):
     if r.returncode != 0:
         pytest.fail(f"subprocess failed:\nSTDOUT:\n{r.stdout}\nSTDERR:\n{r.stderr}")
     return r.stdout
+
+
+@pytest.fixture(autouse=True)
+def _allocator_leak_audit():
+    """After every test: run the allocator invariant audit on every live
+    paged engine, and — when the engine is drained (no resident
+    sequences) — assert zero leaked blocks.  A double free, a lost ref,
+    or a release path that skips a block fails the *offending* test
+    instead of silently corrupting a later one."""
+    yield
+    # import lazily: most test modules never touch the serving engine
+    import sys
+
+    eng_mod = sys.modules.get("repro.serving.engine")
+    if eng_mod is None:
+        return
+    for eng in list(eng_mod._LIVE_ENGINES):
+        if not getattr(eng, "paged", False):
+            continue
+        eng.audit()
+        if not eng._seq:  # drained: every block must be back in the pool
+            assert eng.allocator.n_in_use == 0, (
+                f"paged engine leaked {eng.allocator.n_in_use} blocks "
+                f"after drain"
+            )

@@ -96,3 +96,360 @@ def test_process_slices_disjoint():
     p1 = make_train_batch(cfg, shape, 0, seed=0, process_index=1, process_count=2)
     assert p0["tokens"].shape[0] == 4  # global 8 / 2 processes
     assert not np.array_equal(np.asarray(p0["tokens"]), np.asarray(p1["tokens"]))
+
+
+# ======================================================================
+# Serving-layer fault tolerance (DESIGN.md §Serving fault tolerance):
+# the deterministic chaos harness against the continuous scheduler.
+# ======================================================================
+
+import warnings  # noqa: E402
+
+from repro.core.policy import PolicyConfig  # noqa: E402
+from repro.kvcache.paged import AllocatorAuditError, BlockAllocator  # noqa: E402
+from repro.serving import (  # noqa: E402
+    ContinuousScheduler,
+    Engine,
+    FaultSpec,
+    Request,
+    ServingFaultInjector,
+)
+
+
+def _serving_policy(layout, pool_blocks=0):
+    return PolicyConfig(
+        kind="fier", budget=16, group=8, skip_layers=1, sink=2, recent=4,
+        pipeline="reference", layout=layout, block_size=8,
+        pool_blocks=pool_blocks,
+    )
+
+
+@pytest.fixture(scope="module")
+def serve_setup():
+    """One slab + one paged engine, shared across the chaos tests (the
+    jitted decode fns dominate test wall-clock; ``sched.run`` re-starts a
+    fresh session — cache, allocator, budget — on every call)."""
+    cfg = reduced_config("olmo-1b")
+    slab_bundle = build_model(cfg, _serving_policy("slab"))
+    params = slab_bundle.init(jax.random.PRNGKey(0))
+    engines = {
+        "slab": Engine(slab_bundle, n_slots=3, capacity=64),
+        "paged": Engine(
+            build_model(cfg, _serving_policy("paged", pool_blocks=40)),
+            n_slots=3, capacity=64,
+        ),
+    }
+    return cfg, params, engines
+
+
+def _chaos_reqs():
+    return [
+        Request(rid=i, tokens=list(range(2 + i, 12 + i)), max_new=12)
+        for i in range(3)
+    ]
+
+
+_CHAOS_REF = {}  # layout → fault-free reference outputs (per-module cache)
+
+
+def _reference(engines, params, layout):
+    if layout not in _CHAOS_REF:
+        sched = ContinuousScheduler(engines[layout], params, audit_every=4)
+        _CHAOS_REF[layout] = dict(sched.run(_chaos_reqs()))
+    return _CHAOS_REF[layout]
+
+
+@pytest.mark.parametrize("layout", ["slab", "paged"])
+@pytest.mark.parametrize(
+    "kind", ["alloc_fail", "poison_logits", "corrupt_metadata", "cancel"]
+)
+def test_serving_chaos_matrix(serve_setup, layout, kind):
+    """Every injector fault class, on both cache layouts: the scheduler
+    completes the trace, the allocator audits clean at drain, every
+    request leaves with a structured outcome, and requests NOT targeted
+    by the fault produce bit-identical outputs to the fault-free run."""
+    _, params, engines = serve_setup
+    eng = engines[layout]
+    ref = _reference(engines, params, layout)
+
+    target = 1
+    inj = ServingFaultInjector([FaultSpec(kind, step=3, rid=target, count=2)])
+    sched = ContinuousScheduler(eng, params, injector=inj, audit_every=4)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore")
+        res = sched.run(_chaos_reqs())
+
+    assert inj.all_fired, f"{kind} never fired: {inj.fired_log}"
+    # every request has a terminal structured outcome
+    assert sorted(res.outcomes) == [0, 1, 2]
+    # unaffected requests are bit-identical to the fault-free run
+    for rid in (0, 2):
+        assert res[rid] == ref[rid], f"rid {rid} diverged under {kind}"
+    expect = {
+        "poison_logits": "quarantined",
+        "cancel": "cancelled",
+    }.get(kind)
+    if expect is not None:
+        assert res.outcomes[target].status == expect
+        # the victim's tokens stop at the fault, the rest ran to max_new
+        assert len(res[target]) < len(ref[target])
+    else:
+        # alloc_fail / corrupt_metadata degrade, they don't kill
+        assert res.outcomes[target].status == "finished"
+    if eng.paged:
+        eng.audit()
+        assert eng.allocator.n_in_use == 0
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_serving_chaos_seeded(serve_setup, seed):
+    """Seeded random fault schedules (the CI chaos lane's three seeds):
+    whatever the draw, the scheduler drains, every request retires with a
+    structured outcome, and the allocator audits clean."""
+    _, params, engines = serve_setup
+    for layout in ("slab", "paged"):
+        eng = engines[layout]
+        inj = ServingFaultInjector.random(
+            seed, rids=[0, 1, 2], n_faults=3, step_lo=1, step_hi=8
+        )
+        sched = ContinuousScheduler(eng, params, injector=inj, audit_every=3)
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore")
+            res = sched.run(_chaos_reqs())
+        assert sorted(res.outcomes) == [0, 1, 2]
+        assert all(o.status in (
+            "finished", "cancelled", "quarantined", "rejected",
+        ) for o in res.outcomes.values())
+        if eng.paged:
+            eng.audit()
+            assert eng.allocator.n_in_use == 0
+
+
+def test_seeded_injector_is_deterministic():
+    a = ServingFaultInjector.random(7, rids=[1, 2, 3])
+    b = ServingFaultInjector.random(7, rids=[1, 2, 3])
+    assert [(s.kind, s.step, s.rid, s.count) for s in a.specs] == [
+        (s.kind, s.step, s.rid, s.count) for s in b.specs
+    ]
+    c = ServingFaultInjector.random(8, rids=[1, 2, 3])
+    assert [(s.kind, s.step) for s in a.specs] != [
+        (s.kind, s.step) for s in c.specs
+    ]
+
+
+def test_budget_degradation_keeps_oversubscribed_running(serve_setup):
+    """The graceful-degradation ladder: an oversubscription that
+    preemption-only thrashes on completes with ZERO preemptions when the
+    scheduler may downshift the retrieval budget and shed middle blocks —
+    and the degraded budget is restored for the next session."""
+    cfg, params, _ = serve_setup
+    bundle = build_model(cfg, _serving_policy("paged", pool_blocks=12))
+
+    def reqs():
+        return [
+            Request(rid=0, tokens=list(range(2, 32)), max_new=20),
+            Request(rid=1, tokens=list(range(40, 56)), max_new=20),
+        ]
+
+    eng = Engine(bundle, n_slots=2, capacity=64, degrade_floor=4)
+    sched = ContinuousScheduler(eng, params)
+    res = sched.run(reqs())
+    assert all(o.status == "finished" for o in res.outcomes.values())
+    assert eng.downshifts >= 1 and eng.blocks_shed >= 1
+    assert sched.preemptions == 0
+    eng.audit()
+    assert eng.allocator.n_in_use == 0
+
+    # preemption-only baseline: floor == budget disables the ladder
+    eng2 = Engine(bundle, n_slots=2, capacity=64, degrade_floor=16)
+    sched2 = ContinuousScheduler(eng2, params)
+    res2 = sched2.run(reqs())
+    assert all(o.status == "finished" for o in res2.outcomes.values())
+    assert eng2.downshifts == 0 and sched2.preemptions >= 1
+
+    # a fresh session starts back at the full budget
+    sched.start()
+    assert eng.current_budget == eng.base_budget and eng.restores >= 1
+
+
+def test_livelock_lone_request_retires_rejected(serve_setup):
+    """Regression (satellite): a lone request whose decode outgrows an
+    undersized pool (pool_blocks × block_size < capacity) used to
+    self-preempt / re-admit forever (monolithic: a stall RuntimeError;
+    chunked: an infinite abort loop).  It must now retire with a
+    structured `rejected` outcome — on both admission paths — and leak
+    nothing."""
+    cfg, params, _ = serve_setup
+    with pytest.warns(UserWarning, match="cannot hold one"):
+        eng = Engine(
+            build_model(cfg, _serving_policy("paged", pool_blocks=5)),
+            n_slots=2, capacity=64,
+        )
+    for chunk in (None, 8):
+        sched = ContinuousScheduler(eng, params, chunk_tokens=chunk)
+        with pytest.warns(UserWarning):
+            res = sched.run(
+                [Request(rid=0, tokens=list(range(2, 18)), max_new=40)]
+            )
+        oc = res.outcomes[0]
+        assert oc.status == "rejected" and oc.reason
+        assert res[0], "partial output before retirement is preserved"
+        eng.audit()
+        assert eng.allocator.n_in_use == 0
+
+
+def test_self_preempt_streak_detection(serve_setup):
+    """The livelock detector fires only on repeats WITHOUT progress."""
+    _, params, engines = serve_setup
+    sched = ContinuousScheduler(engines["paged"], params, self_preempt_limit=3)
+    r = Request(rid=0, tokens=[1])
+    assert not sched._note_self_preempt(r, 5)   # streak 1
+    assert not sched._note_self_preempt(r, 5)   # streak 2 (no progress)
+    assert not sched._note_self_preempt(r, 9)   # progress → streak resets
+    assert not sched._note_self_preempt(r, 9)
+    assert sched._note_self_preempt(r, 9)       # third repeat at 9 → fire
+
+
+def test_deadline_expiry_mid_chunked_prefill(serve_setup):
+    """A deadline passing while the request is still chunk-prefilling
+    aborts the admission (blocks released, slot freed) and records a
+    `deadline_exceeded` outcome."""
+    _, params, engines = serve_setup
+    eng = engines["paged"]
+    sched = ContinuousScheduler(eng, params, chunk_tokens=8)
+    # 40-token prompt at 8 tokens/step: the virtual clock passes 20
+    # strictly before the prefill's 5th chunk completes
+    res = sched.run(
+        [Request(rid=0, tokens=list(range(2, 42)), max_new=8, deadline=20.0)]
+    )
+    oc = res.outcomes[0]
+    assert oc.status == "deadline_exceeded"
+    assert "prefill" in oc.reason
+    assert res[0] == []                      # never produced a token
+    assert sched._prefilling is None and len(sched.free) == eng.n_slots
+    eng.audit()
+    assert eng.allocator.n_in_use == 0
+
+
+def test_deadline_expiry_queued_and_decoding(serve_setup):
+    """Deadlines also fire while queued and mid-decode."""
+    _, params, engines = serve_setup
+    for layout in ("slab", "paged"):
+        eng = engines[layout]
+        sched = ContinuousScheduler(eng, params)
+        res = sched.run([
+            Request(rid=0, tokens=[2, 3, 4], max_new=6),
+            Request(rid=1, tokens=[5, 6, 7], max_new=50, deadline=15.0),
+            Request(rid=2, tokens=[8, 9, 10], max_new=4, deadline=1e9),
+        ])
+        assert res.outcomes[0].status == "finished"
+        assert res.outcomes[1].status == "deadline_exceeded"
+        assert 0 < len(res[1]) < 50          # partial output preserved
+        assert res.outcomes[2].status == "finished"
+
+
+def test_cancel_during_preemption(serve_setup):
+    """Cancelling a request that is sitting in the queue *because it was
+    preempted* releases nothing twice: the preemption already freed its
+    blocks, the cancel retires it from the queue, everything else runs to
+    completion and the pool drains clean."""
+    cfg, params, _ = serve_setup
+    eng = Engine(
+        build_model(cfg, _serving_policy("paged", pool_blocks=10)),
+        n_slots=3, capacity=64,
+    )
+    sched = ContinuousScheduler(eng, params)
+    sched.start()
+    reqs = [
+        Request(rid=i, tokens=list(range(2 + i, 10 + i)), max_new=25)
+        for i in range(3)
+    ]
+    for r in reqs:
+        sched.submit(r)
+    while sched.busy and not sched._queue:
+        sched.step()                          # run until someone is preempted
+    assert sched._queue, "oversubscription should have preempted a request"
+    victim = sched._queue[0]
+    assert sched.cancel(victim.rid, reason="cancelled while preempted")
+    assert victim.outcome.status == "cancelled"
+    while sched.busy:
+        sched.step()
+    for r in reqs:
+        if r.rid != victim.rid:
+            assert r.outcome.status == "finished"
+    eng.audit()
+    assert eng.allocator.n_in_use == 0
+
+
+def test_cancel_all_phases(serve_setup):
+    """cancel() reaches a request wherever it lives: queued, mid-decode,
+    and unknown rids are refused."""
+    _, params, engines = serve_setup
+    eng = engines["paged"]
+    sched = ContinuousScheduler(eng, params)
+    sched.start()
+    a = Request(rid=0, tokens=[2, 3, 4], max_new=20)
+    b = Request(rid=1, tokens=[5, 6, 7], max_new=20)
+    sched.submit(a)
+    sched.submit(b)
+    assert sched.cancel(1)                   # still queued
+    assert b.outcome.status == "cancelled" and not b.out
+    sched.step()                             # admits + decodes a
+    assert sched.slot_of(0) is not None
+    assert sched.cancel(0)                   # mid-decode
+    assert a.outcome.status == "cancelled" and a.out
+    assert not sched.cancel(0)               # already retired
+    assert not sched.cancel(99)              # unknown
+    assert not sched.busy
+    eng.audit()
+    assert eng.allocator.n_in_use == 0
+
+
+def test_structured_rejection_no_warning_parse(serve_setup):
+    """Satellite: rejection is a structured outcome (status + reason),
+    with the human warning preserved."""
+    _, params, engines = serve_setup
+    sched = ContinuousScheduler(engines["paged"], params)
+    with pytest.warns(UserWarning, match="exceeds engine capacity"):
+        res = sched.run(
+            [Request(rid=0, tokens=list(range(1, 70)), max_new=4)]
+        )
+    oc = res.outcomes[0]
+    assert oc.status == "rejected" and "capacity" in oc.reason
+    assert sched.health.counts["rejected"] == 1
+
+
+def test_allocator_audit_catches_violations():
+    """BlockAllocator.audit: ref-count drift, free-list corruption, and
+    ownership mismatches all raise; a healthy allocator passes."""
+    a = BlockAllocator(8, 8)
+    b1, b2 = a.alloc(), a.alloc()
+    a.audit()
+    a.audit({b1: 1, b2: 1})
+    with pytest.raises(AllocatorAuditError, match="drift"):
+        a.audit({b1: 1})                     # a ref the owners don't hold
+    with pytest.raises(AllocatorAuditError, match="drift"):
+        a.audit({b1: 1, b2: 2})              # owners hold more than allocator
+    # free-list corruption: a referenced block pushed onto the free list
+    a._free.append(b1)
+    with pytest.raises(AllocatorAuditError, match="referenced"):
+        a.audit()
+    a._free.pop()
+    # counter drift
+    a._in_use += 1
+    with pytest.raises(AllocatorAuditError, match="_in_use"):
+        a.audit()
+    a._in_use -= 1
+    # double free still dies immediately at the free() site
+    a.free(b2)
+    with pytest.raises(AssertionError):
+        a.free(b2)
+
+
+def test_fail_next_injects_then_drains():
+    a = BlockAllocator(4, 8)
+    a.fail_next(2)
+    assert a.alloc() is None and a.alloc() is None
+    assert a.alloc() is not None             # burst drained
+    assert a.injected_alloc_failures == 2
+    a.audit()
