@@ -5,14 +5,22 @@ latency, throughput at saturation, preemptions, pool occupancy.
 The replay is driven through the scheduler's stepwise API
 (``start``/``submit``/``step``) on two clocks at once:
 
-  * **virtual time** — a deterministic token-cost model: a prefill token
-    costs 1 unit, a batched decode step costs ``decode_token_cost`` per
-    active slot.  Virtual metrics depend only on the schedule (arrival
+  * **virtual time** — the scheduler's own token clock (``sched.vtime``:
+    a prefill token costs 1 unit, a batched decode step costs 1 per
+    active slot).  Virtual metrics depend only on the schedule (arrival
     trace, block accounting, chunk quantum), not on the host, so they are
     reproducible across machines and **gated** in CI.
   * **wall clock** — recorded alongside and reported as info metrics
     (interpret-mode kernels and shared CI runners make it unsuitable for
     gating).
+
+TTFT / ITL / throughput are **derived from the request-span trace**
+(``repro.obs.tracing.derive_serving_metrics`` over the scheduler's
+lifecycle events) — the benchmark no longer keeps its own clock or token
+stamps, so the persisted numbers, the metrics-registry snapshot
+(``METRICS_serve_trace.json``) and the per-mode Perfetto traces
+(``serve_trace_<mode>.trace.json``, viewable via ``tools/obs_report.py``)
+can never disagree.
 
 ``--smoke`` replays a bursty trace (long prompts bursting into a pool
 already held by decoding requests) twice — chunked admission
@@ -30,8 +38,9 @@ baseline checked by tools/check_bench_regression.py).
 from __future__ import annotations
 
 import argparse
+import os
 import time
-from collections import defaultdict, deque
+from collections import deque
 
 import jax
 import numpy as np
@@ -39,10 +48,12 @@ import numpy as np
 from repro.configs import reduced_config
 from repro.core.policy import PolicyConfig
 from repro.models import build_model
+from repro.obs.tracing import PID_REQUEST, derive_serving_metrics
 from repro.serving import (
     ContinuousScheduler,
     Engine,
     FaultSpec,
+    Observability,
     Request,
     ServingFaultInjector,
 )
@@ -110,84 +121,59 @@ def build_serving(pipeline: str, *, capacity: int, n_slots: int,
     )
     bundle = build_model(cfg, pol)
     params = bundle.init(jax.random.PRNGKey(0))
-    eng = Engine(bundle, n_slots=n_slots, capacity=capacity)
+    eng = Engine(bundle, n_slots=n_slots, capacity=capacity,
+                 obs=Observability())
     return cfg, params, eng
 
 
-def replay(eng, sched, trace, *, decode_token_cost: float = DECODE_TOKEN_COST):
-    """Drive one trace through the scheduler; returns the stats dict."""
-    counter = {"prefill": 0}
-    orig_chunk, orig_insert = eng.prefill_chunk, eng.insert
+def replay(eng, sched, trace):
+    """Drive one trace through the scheduler; returns the stats dict.
 
-    def chunk_spy(params, cache, slot, tokens, start, n):
-        ok, logits, cache = orig_chunk(params, cache, slot, tokens, start, n)
-        if ok:
-            counter["prefill"] += n
-        return ok, logits, cache
-
-    def insert_spy(params, cache, tokens, length, slot, extras=None):
-        counter["prefill"] += length
-        return orig_insert(params, cache, tokens, length, slot, extras)
-
-    eng.prefill_chunk, eng.insert = chunk_spy, insert_spy
-    try:
-        sched.start()
-        pending = deque((t, Request(**spec)) for t, spec in trace)
-        reqs = [r for _, r in pending]
-        arrive: dict[int, float] = {}
-        stamps: dict[int, list[tuple[float, float]]] = defaultdict(list)
-        seen: dict[int, int] = defaultdict(int)
-        clock, wall0 = 0.0, time.perf_counter()
-        while pending or sched.busy:
-            while pending and pending[0][0] <= clock:
-                t, r = pending.popleft()
-                sched.submit(r)
-                arrive[r.rid] = t
-            if not sched.busy:
-                clock = max(clock, pending[0][0])
+    The scheduler's virtual token clock IS the replay clock: arrivals pin
+    ``Request.arrival`` via ``submit(req, arrival=t)``, idle gaps advance
+    it through ``idle_until``, and every latency number comes out of the
+    request-span trace (``derive_serving_metrics``) — no shadow clock, no
+    engine monkey-patching."""
+    obs = eng.obs
+    sched.start()
+    pending = deque((t, Request(**spec)) for t, spec in trace)
+    reqs = [r for _, r in pending]
+    wall0 = time.monotonic()
+    while pending or sched.busy:
+        while pending and pending[0][0] <= sched.vtime:
+            t, r = pending.popleft()
+            sched.submit(r, arrival=t)
+        if not sched.busy:
+            sched.idle_until(pending[0][0])
+            continue
+        if not sched.step():
+            if pending:
+                # idle until the next arrival can be admitted
+                sched.idle_until(pending[0][0])
                 continue
-            p0, occ0 = counter["prefill"], len(sched.occupancy)
-            progressed = sched.step()
-            cost = float(counter["prefill"] - p0)
-            if len(sched.occupancy) > occ0:
-                cost += sched.occupancy[-1] * decode_token_cost
-            if not progressed and cost == 0.0:
-                if pending:
-                    # idle until the next arrival can be admitted
-                    clock = max(clock, pending[0][0])
-                    continue
-                raise RuntimeError("trace replay stalled")
-            clock += cost
-            wall = time.perf_counter() - wall0
-            for r in reqs:
-                if len(r.out) > seen[r.rid]:
-                    stamps[r.rid].extend(
-                        (clock, wall) for _ in range(len(r.out) - seen[r.rid])
-                    )
-                    seen[r.rid] = len(r.out)
-        wall_s = time.perf_counter() - wall0
-    finally:
-        eng.prefill_chunk, eng.insert = orig_chunk, orig_insert
+            raise RuntimeError("trace replay stalled")
+    wall_s = time.monotonic() - wall0
 
-    ttft = [stamps[r.rid][0][0] - arrive[r.rid] for r in reqs if stamps[r.rid]]
-    wall_ttft = [
-        stamps[r.rid][0][1] for r in reqs if stamps[r.rid]
-    ]  # vs wall 0 (arrivals are virtual-time events)
-    itl = [
-        b[0] - a[0]
-        for r in reqs
-        for a, b in zip(stamps[r.rid], stamps[r.rid][1:])
-    ]
-    total_tokens = sum(len(r.out) for r in reqs)
-    makespan = max(clock - min(arrive.values()), 1e-9)
+    d = derive_serving_metrics(obs.tracer)
+    # wall-clock TTFT rides on the events' informational wall_ts
+    first_wall: dict[int, float] = {}
+    for e in obs.tracer.events:
+        if e.pid == PID_REQUEST and e.name == "token" and e.tid not in first_wall:
+            first_wall[e.tid] = e.wall_ts - wall0
+    wall_ttft = list(first_wall.values())
     pool = eng.pool_stats()
-    pct = lambda xs, p: float(np.percentile(xs, p)) if xs else 0.0
+    # the spans are the single source of truth — but the requests are
+    # still the ground truth for *what was generated*: every token a
+    # request kept must have exactly one span stamp
+    assert d["total_tokens"] == sum(len(r.out) for r in reqs), (
+        d["total_tokens"], sum(len(r.out) for r in reqs))
     return dict(
-        vt_ttft_p50=pct(ttft, 50), vt_ttft_p99=pct(ttft, 99),
-        vt_itl_p50=pct(itl, 50), vt_itl_p99=pct(itl, 99),
-        vt_tokens_per_kunit=1e3 * total_tokens / makespan,
-        wall_seconds=wall_s, wall_ttft_p99_s=pct(wall_ttft, 99),
-        total_tokens=total_tokens, decode_steps=sched.steps,
+        vt_ttft_p50=d["ttft_p50"], vt_ttft_p99=d["ttft_p99"],
+        vt_itl_p50=d["itl_p50"], vt_itl_p99=d["itl_p99"],
+        vt_tokens_per_kunit=d["tokens_per_kunit"],
+        wall_seconds=wall_s,
+        wall_ttft_p99_s=float(np.percentile(wall_ttft, 99)) if wall_ttft else 0.0,
+        total_tokens=d["total_tokens"], decode_steps=sched.steps,
         preemptions=sched.preemptions, prefill_aborts=sched.prefill_aborts,
         prefill_chunks=sched.prefill_chunks,
         mean_occupancy=sched.mean_occupancy,
@@ -219,13 +205,19 @@ FAULT_SCHEDULE = (
 )
 
 
-def faulted_replay(cfg, params, bundle, *, seed: int, chunk_tokens: int):
+def faulted_replay(cfg, params, bundle, *, seed: int, chunk_tokens: int,
+                   metrics=None, out_dir: str | None = None):
     """The chaos pass: the same bursty trace, plus one request whose
     deadline is already unmeetable, on a degradation-enabled engine under
-    :data:`FAULT_SCHEDULE`.  Returns (stats, injector, engine)."""
+    :data:`FAULT_SCHEDULE` — with retrieval introspection on, so the
+    snapshot carries budget-utilization / oracle-overlap series from a
+    degraded engine.  ``metrics`` shares the fault-free passes' registry;
+    ``out_dir`` writes ``serve_trace_faulted.trace.json``.  Returns
+    (stats, injector, engine)."""
+    obs = Observability(introspect=True, probe_every=2, metrics=metrics)
     eng = Engine(
         bundle, n_slots=SMOKE_ENGINE["n_slots"],
-        capacity=SMOKE_ENGINE["capacity"], degrade_floor=16,
+        capacity=SMOKE_ENGINE["capacity"], degrade_floor=16, obs=obs,
     )
     trace = bursty_trace(seed, cfg.vocab)
     rid = 1 + max(spec["rid"] for _, spec in trace)
@@ -239,24 +231,32 @@ def faulted_replay(cfg, params, bundle, *, seed: int, chunk_tokens: int):
     )
     stats = replay(eng, sched, trace)
     eng.audit()  # invariant check on top of the gated leak metric
+    if out_dir is not None:
+        obs.tracer.write_chrome_trace(
+            os.path.join(out_dir, "serve_trace_faulted.trace.json"))
     return stats, inj, eng
 
 
 def smoke(out_dir: str, *, seed: int = 0, chunk_tokens: int = 256,
           pipeline: str = "reference") -> dict:
     """CI gate: chunked vs monolithic on the bursty trace; writes
-    BENCH_serve_trace.json and asserts the tentpole's latency claim."""
+    BENCH_serve_trace.json, the per-mode Perfetto traces and the shared
+    metrics-registry snapshot, and asserts the tentpole's latency claim."""
     cfg, params, eng = build_serving(pipeline, **SMOKE_ENGINE)
     trace = bursty_trace(seed, cfg.vocab)
     results = {}
     for mode, ct in (("chunked", chunk_tokens), ("mono", None)):
         sched = ContinuousScheduler(eng, params, chunk_tokens=ct)
         results[mode] = replay(eng, sched, trace)
+        # the next replay's start() resets the tracer — export now
+        eng.obs.tracer.write_chrome_trace(
+            os.path.join(out_dir, f"serve_trace_{mode}.trace.json"))
         print(f"-- {mode}: " + " ".join(
             f"{k}={v:.1f}" for k, v in sorted(results[mode].items())
         ))
     fr, inj, feng = faulted_replay(
-        cfg, params, eng.bundle, seed=seed, chunk_tokens=chunk_tokens
+        cfg, params, eng.bundle, seed=seed, chunk_tokens=chunk_tokens,
+        metrics=eng.obs.metrics, out_dir=out_dir,
     )
     print("-- faulted: " + " ".join(
         f"{k}={v:.1f}" for k, v in sorted(fr.items())
@@ -264,42 +264,59 @@ def smoke(out_dir: str, *, seed: int = 0, chunk_tokens: int = 256,
     ch, mo = results["chunked"], results["mono"]
     ratio = ch["vt_ttft_p99"] / max(mo["vt_ttft_p99"], 1e-9)
     tput_ratio = ch["vt_tokens_per_kunit"] / max(mo["vt_tokens_per_kunit"], 1e-9)
+
+    # every persisted number goes THROUGH the registry: the bench row is
+    # read back from the gauge it just set, so BENCH_serve_trace.json and
+    # METRICS_serve_trace.json are bit-identical by construction
     metrics = []
+
+    def summary(name, value, *, unit="", better="info", gate=False):
+        g = eng.obs.metrics.gauge(
+            name, "serve_trace summary metric", unit=unit,
+            better=better, gate=gate)
+        g.set(float(value))
+        metrics.append(metric(name, g.value(), unit=unit, better=better,
+                              gate=gate))
+
     for mode, r in results.items():
-        metrics += [
-            metric(f"{mode}_vt_ttft_p50", r["vt_ttft_p50"], unit="unit",
-                   better="lower", gate=True),
-            metric(f"{mode}_vt_ttft_p99", r["vt_ttft_p99"], unit="unit",
-                   better="lower", gate=True),
-            metric(f"{mode}_vt_itl_p50", r["vt_itl_p50"], unit="unit",
-                   better="lower", gate=True),
-            metric(f"{mode}_vt_itl_p99", r["vt_itl_p99"], unit="unit",
-                   better="lower", gate=True),
-            metric(f"{mode}_vt_tokens_per_kunit", r["vt_tokens_per_kunit"],
-                   unit="tok/kunit", better="higher", gate=True),
-            metric(f"{mode}_wall_seconds", r["wall_seconds"], unit="s"),
-            metric(f"{mode}_preemptions", r["preemptions"]),
-            metric(f"{mode}_mean_occupancy", r["mean_occupancy"]),
-            metric(f"{mode}_peak_blocks", r["peak_blocks"]),
-            metric(f"{mode}_prefix_block_hits", r["prefix_block_hits"]),
-        ]
-    metrics += [
-        metric("chunked_over_mono_ttft_p99", ratio, better="lower", gate=True),
-        metric("chunked_over_mono_tput", tput_ratio, better="higher", gate=True),
-        metric("chunked_prefill_chunks", ch["prefill_chunks"]),
-        metric("chunked_prefill_aborts", ch["prefill_aborts"]),
-        # chaos pass: leak gate + lifecycle / degradation counters
-        metric("faulted_leaked_blocks", fr["leaked_blocks"], unit="blocks",
-               better="lower", gate=True),
-        metric("faulted_rejected", fr["rejected"]),
-        metric("faulted_cancelled", fr["cancelled"]),
-        metric("faulted_deadline_exceeded", fr["deadline_exceeded"]),
-        metric("faulted_quarantined", fr["quarantined"]),
-        metric("faulted_budget_downshifts", fr["budget_downshifts"]),
-        metric("faulted_blocks_shed", fr["blocks_shed"]),
-        metric("faulted_insert_retries", fr["insert_retries"]),
-        metric("faulted_total_tokens", fr["total_tokens"]),
-    ]
+        summary(f"{mode}_vt_ttft_p50", r["vt_ttft_p50"], unit="unit",
+                better="lower", gate=True)
+        summary(f"{mode}_vt_ttft_p99", r["vt_ttft_p99"], unit="unit",
+                better="lower", gate=True)
+        summary(f"{mode}_vt_itl_p50", r["vt_itl_p50"], unit="unit",
+                better="lower", gate=True)
+        summary(f"{mode}_vt_itl_p99", r["vt_itl_p99"], unit="unit",
+                better="lower", gate=True)
+        summary(f"{mode}_vt_tokens_per_kunit", r["vt_tokens_per_kunit"],
+                unit="tok/kunit", better="higher", gate=True)
+        summary(f"{mode}_wall_seconds", r["wall_seconds"], unit="s")
+        summary(f"{mode}_preemptions", r["preemptions"])
+        summary(f"{mode}_mean_occupancy", r["mean_occupancy"])
+        summary(f"{mode}_peak_blocks", r["peak_blocks"])
+        summary(f"{mode}_prefix_block_hits", r["prefix_block_hits"])
+    summary("chunked_over_mono_ttft_p99", ratio, better="lower", gate=True)
+    summary("chunked_over_mono_tput", tput_ratio, better="higher", gate=True)
+    summary("chunked_prefill_chunks", ch["prefill_chunks"])
+    summary("chunked_prefill_aborts", ch["prefill_aborts"])
+    # chaos pass: leak gate + lifecycle / degradation counters
+    summary("faulted_leaked_blocks", fr["leaked_blocks"], unit="blocks",
+            better="lower", gate=True)
+    summary("faulted_rejected", fr["rejected"])
+    summary("faulted_cancelled", fr["cancelled"])
+    summary("faulted_deadline_exceeded", fr["deadline_exceeded"])
+    summary("faulted_quarantined", fr["quarantined"])
+    summary("faulted_budget_downshifts", fr["budget_downshifts"])
+    summary("faulted_blocks_shed", fr["blocks_shed"])
+    summary("faulted_insert_retries", fr["insert_retries"])
+    summary("faulted_total_tokens", fr["total_tokens"])
+
+    snap_doc = eng.obs.metrics.write_snapshot_json(
+        os.path.join(out_dir, "METRICS_serve_trace.json"))
+    by_name = {(s["name"], tuple(sorted(s["labels"].items()))): s["value"]
+               for s in snap_doc["series"]}
+    for m in metrics:
+        assert by_name[(m["name"], ())] == m["value"], m
+
     doc = write_bench_json(
         out_dir, "serve_trace",
         dict(seed=seed, trace="bursty", chunk_tokens=chunk_tokens,

@@ -21,6 +21,7 @@ __all__ = [
     "kvcache",
     "launch",
     "models",
+    "obs",
     "serving",
     # decode-attention API (re-exported from repro.core.policy)
     "AttentionBackend",

@@ -305,6 +305,27 @@ class BlockAllocator:
         """Blocks resident (referenced) / blocks allocated (pool size)."""
         return self.n_in_use / self.usable
 
+    def stats(self) -> dict[str, float]:
+        """The canonical pool-accounting snapshot, one ``pool_*`` name per
+        quantity.  This is the *single* naming scheme: the metrics
+        registry gauges use these names verbatim, and
+        ``Engine.pool_stats()`` is a thin shim aliasing its legacy keys
+        onto them (the allocator/engine dicts previously reported the
+        same quantities under divergent names — e.g. ``usable`` vs
+        ``blocks_allocated``)."""
+        return dict(
+            pool_blocks_total=self.n_blocks,
+            pool_blocks_usable=self.usable,
+            pool_blocks_in_use=self.n_in_use,
+            pool_blocks_free=len(self._free),
+            pool_blocks_cached=len(self._free_cached),
+            pool_utilization=self.utilization(),
+            pool_peak_in_use=self.peak_in_use,
+            pool_prefix_block_hits=self.prefix_block_hits,
+            pool_cow_copies=self.cow_copies,
+            pool_injected_alloc_failures=self.injected_alloc_failures,
+        )
+
     # -------------------------------------------------------------- alloc/free
     def fail_next(self, n: int = 1) -> None:
         """Chaos hook: make the next ``n`` :meth:`alloc` calls report an

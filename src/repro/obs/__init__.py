@@ -1,0 +1,108 @@
+"""Observability: metrics registry + span tracing + retrieval introspection.
+
+One :class:`Observability` bundle travels with a serving session: the
+engine and the scheduler share its :class:`~repro.obs.metrics.MetricsRegistry`
+(counters / gauges / histograms with labeled series, snapshot/diff,
+Prometheus-text + JSON exposition) and its
+:class:`~repro.obs.tracing.Tracer` (request-lifecycle spans and scheduler
+events on the virtual token clock, exported as Chrome trace-event /
+Perfetto JSON or JSONL).  ``introspect=True`` additionally attaches a
+:class:`~repro.obs.introspect.RetrievalIntrospector` that samples the
+FIER retrieval stage per decode step (budget utilization, τ thresholds,
+oracle overlap, recaptured attention mass) into the same registry.
+
+The default is **disabled**: ``Observability.disabled()`` (what an
+engine constructs when none is passed) hands out no-op instruments and
+the null tracer, so un-instrumented serving runs the same host work and
+the same jitted functions as before the subsystem existed — gated by
+the overhead/compile-count tests in tests/test_obs.py.
+
+See DESIGN.md §Observability and ``tools/obs_report.py``.
+"""
+from __future__ import annotations
+
+from .metrics import (
+    Counter,
+    Gauge,
+    Histogram,
+    MetricsRegistry,
+    Series,
+    Snapshot,
+    parse_prometheus_text,
+)
+from .tracing import (
+    NULL_TRACER,
+    Event,
+    Tracer,
+    derive_serving_metrics,
+    load_trace_events,
+    validate_chrome_trace,
+)
+
+__all__ = [
+    "Counter",
+    "Event",
+    "Gauge",
+    "Histogram",
+    "MetricsRegistry",
+    "NULL_TRACER",
+    "Observability",
+    "ProbeRecord",
+    "RetrievalIntrospector",
+    "Series",
+    "Snapshot",
+    "Tracer",
+    "derive_serving_metrics",
+    "load_trace_events",
+    "parse_prometheus_text",
+    "validate_chrome_trace",
+]
+
+# repro.obs.introspect needs numpy; metrics/tracing are stdlib-only, and
+# stdlib-only tools (tools/obs_report.py, tools/check_bench_regression.py)
+# import through this package — so the introspector loads lazily
+_INTROSPECT_NAMES = {"ProbeRecord", "RetrievalIntrospector"}
+
+
+def __getattr__(name: str):
+    if name in _INTROSPECT_NAMES:
+        from . import introspect
+
+        return getattr(introspect, name)
+    raise AttributeError(f"module 'repro.obs' has no attribute {name!r}")
+
+
+class Observability:
+    """The per-session observability bundle: ``metrics`` + ``tracer``
+    (+ optional ``introspector``).
+
+    ``enabled`` turns both the registry and the tracer on; pass
+    ``introspect=True`` (implies nothing about ``enabled`` — it needs it)
+    to attach the retrieval-quality debug probe.  ``metrics`` shares an
+    existing registry between sessions (benchmarks meter several replays
+    into one snapshot); the default is a fresh one.
+    """
+
+    def __init__(self, enabled: bool = True, *, introspect: bool = False,
+                 probe_layer: int = 0, probe_every: int = 1,
+                 metrics: MetricsRegistry | None = None):
+        self.enabled = enabled
+        self.metrics = (metrics if metrics is not None
+                        else MetricsRegistry(enabled=enabled))
+        self.tracer: Tracer = Tracer() if enabled else NULL_TRACER
+        self.introspector = None
+        if enabled and introspect:
+            from .introspect import RetrievalIntrospector
+
+            self.introspector = RetrievalIntrospector(
+                self.metrics, self.tracer,
+                probe_layer=probe_layer, every=probe_every,
+            )
+
+    @classmethod
+    def disabled(cls) -> "Observability":
+        return cls(enabled=False)
+
+    def __repr__(self) -> str:
+        return (f"Observability(enabled={self.enabled}, "
+                f"introspect={self.introspector is not None})")

@@ -1,3 +1,5 @@
+from repro.obs import Observability
+
 from .engine import Engine, SamplingConfig, serving_policy
 from .faults import FAULT_KINDS, FaultSpec, ServingFaultInjector
 from .health import (
@@ -16,6 +18,7 @@ __all__ = [
     "Engine",
     "FaultSpec",
     "HealthMonitor",
+    "Observability",
     "Request",
     "RequestOutcome",
     "SamplingConfig",

@@ -42,6 +42,7 @@ from repro.kvcache.paged import (
     block_hash_chain,
 )
 from repro.models.model_zoo import ModelBundle
+from repro.obs import Observability
 
 MAX_CACHED_PROMPT_LOGITS = 1024  # LRU bound on the full-prompt logits cache
 
@@ -142,8 +143,14 @@ class Engine:
         seed: int = 0,
         degrade_floor: int = 64,
         restore_free_frac: float = 0.5,
+        obs: Observability | None = None,
     ):
         self.bundle = bundle
+        # observability bundle (DESIGN.md §Observability): shared metrics
+        # registry + tracer.  The default is the disabled bundle — no-op
+        # instruments, null tracer — so an un-instrumented engine runs
+        # the identical host path and jitted functions as before.
+        self.obs = obs if obs is not None else Observability.disabled()
         self.n_slots = n_slots
         self.capacity = capacity
         self.sampling = sampling
@@ -172,6 +179,11 @@ class Engine:
         self.downshifts = 0
         self.restores = 0
         self.blocks_shed = 0
+        # prefill/prefix accounting lives on both layouts (engine_stats()
+        # reports it for slab engines too; prefix_hits stays 0 there — the
+        # prefix cache is a paged-pool feature)
+        self.prefill_count = 0
+        self.prefix_hits = 0
         self._budget_fns = {self.base_budget: (self._decode, self._decode_active)}
 
         # chunked prefill (ContinuousScheduler's token quantum): one jitted
@@ -211,8 +223,6 @@ class Engine:
             self.allocator = BlockAllocator(self.pool_blocks, self.block_size)
             self._seq: dict[int, SeqBlocks] = {}
             self._prompt_logits: OrderedDict[int, np.ndarray] = OrderedDict()
-            self.prefill_count = 0
-            self.prefix_hits = 0
             self._paged_scatter = jax.jit(
                 self._paged_scatter_impl, donate_argnums=(0,)
             )
@@ -260,6 +270,7 @@ class Engine:
         pool_blocks: int = 0,
         degrade_floor: int = 64,
         restore_free_frac: float = 0.5,
+        obs: Observability | None = None,
         **build_kwargs,
     ) -> "Engine":
         """Build bundle + engine with the serving defaults: when ``policy``
@@ -308,6 +319,7 @@ class Engine:
         return cls(
             bundle, n_slots=n_slots, capacity=capacity, sampling=sampling,
             degrade_floor=degrade_floor, restore_free_frac=restore_free_frac,
+            obs=obs,
         )
 
     # ------------------------------------------------------------ lifecycle
@@ -355,6 +367,7 @@ class Engine:
         if extras:
             batch.update(extras)
         logits, single = self._prefill(params, batch)
+        self.prefill_count += 1
         return logits, self._insert(batched_cache, single, jnp.int32(slot))
 
     # ------------------------------------------------------- paged lifecycle
@@ -721,22 +734,54 @@ class Engine:
             )
         return cache
 
-    def pool_stats(self) -> dict:
-        """Blocks resident / allocated, peak, sharing and CoW counters."""
-        a = self.allocator
+    # legacy pool_stats key → canonical BlockAllocator.stats() name
+    _POOL_STAT_ALIASES = {
+        "blocks_in_use": "pool_blocks_in_use",
+        "blocks_allocated": "pool_blocks_usable",
+        "utilization": "pool_utilization",
+        "peak_in_use": "pool_peak_in_use",
+        "prefix_block_hits": "pool_prefix_block_hits",
+        "cow_copies": "pool_cow_copies",
+    }
+
+    def engine_stats(self) -> dict:
+        """Engine-level serving counters under their canonical (registry)
+        names — the companion of ``BlockAllocator.stats()``."""
         return dict(
-            blocks_in_use=a.n_in_use,
-            blocks_allocated=a.usable,
-            utilization=a.utilization(),
-            peak_in_use=a.peak_in_use,
-            prefix_block_hits=a.prefix_block_hits,
-            cow_copies=a.cow_copies,
+            engine_prefills=self.prefill_count,
+            engine_prefix_hits=self.prefix_hits,
+            engine_budget_downshifts=self.downshifts,
+            engine_budget_restores=self.restores,
+            engine_blocks_shed=self.blocks_shed,
+            engine_current_budget=self.current_budget,
+        )
+
+    def pool_stats(self) -> dict:
+        """Thin snapshot shim over the canonical accounting: legacy keys
+        alias onto ``BlockAllocator.stats()`` / ``engine_stats()`` names
+        (kept for existing callers; new code should read the canonical
+        ``pool_*`` / ``engine_*`` names or the metrics registry)."""
+        canon = self.allocator.stats()
+        out = {k: canon[v] for k, v in self._POOL_STAT_ALIASES.items()}
+        out.update(
             prefix_hits=self.prefix_hits,
             prefills=self.prefill_count,
             budget_downshifts=self.downshifts,
             budget_restores=self.restores,
             blocks_shed=self.blocks_shed,
         )
+        return out
+
+    def sample_pool_gauges(self) -> None:
+        """Push the canonical pool + engine counters into the metrics
+        registry as gauges (sampled by the scheduler once per step; no-op
+        when observability is disabled)."""
+        if not self.obs.metrics.enabled:
+            return
+        m = self.obs.metrics
+        if self.paged:
+            m.set_gauges(self.allocator.stats())
+        m.set_gauges(self.engine_stats())
 
     # --------------------------------------------- graceful budget degradation
     @property
@@ -774,16 +819,32 @@ class Engine:
         new = max(self.degrade_floor, self.current_budget // 2)
         if new >= self.current_budget:
             return False
+        prev = self.current_budget
         self._swap_budget(new)
         self.downshifts += 1
+        if self.obs.enabled:
+            self.obs.tracer.instant(
+                "budget_downshift", cat="degradation",
+                from_budget=prev, to_budget=new)
+            self.obs.metrics.counter(
+                "budget_downshifts_total",
+                "degradation-ladder budget halvings").inc()
         return True
 
     def restore_budget(self) -> bool:
         """Back to the full configured budget (pressure cleared)."""
         if self.current_budget == self.base_budget:
             return False
+        prev = self.current_budget
         self._swap_budget(self.base_budget)
         self.restores += 1
+        if self.obs.enabled:
+            self.obs.tracer.instant(
+                "budget_restore", cat="degradation",
+                from_budget=prev, to_budget=self.base_budget)
+            self.obs.metrics.counter(
+                "budget_restores_total",
+                "degradation-ladder full-budget restores").inc()
         return True
 
     def maybe_restore_budget(self) -> bool:
@@ -827,6 +888,12 @@ class Engine:
             self.allocator.free(b)
             freed += 1
         self.blocks_shed += freed
+        if freed and self.obs.enabled:
+            self.obs.tracer.instant(
+                "blocks_shed", cat="degradation", slot=slot, freed=freed)
+            self.obs.metrics.counter(
+                "blocks_shed_total",
+                "middle blocks freed by budget degradation").inc(freed)
         return freed, cache
 
     # ----------------------------------------------------- faults & auditing
@@ -874,6 +941,28 @@ class Engine:
             ):
                 return True, self._corrupt_meta(cache, jnp.int32(b))
         return False, cache
+
+    def jit_cache_sizes(self) -> dict[str, int]:
+        """Compile-cache entry counts of every jitted engine function —
+        the overhead-guard tests' compile-count spy: enabling metrics or
+        tracing must add ZERO entries to any of these (observability is
+        host-side only and never enters a traced computation)."""
+        fns: dict[str, Any] = {"prefill": self._prefill}
+        for b, (dec, dec_act) in self._budget_fns.items():
+            fns[f"decode[{b}]"] = dec
+            fns[f"decode_active[{b}]"] = dec_act
+        for final, fn in self._chunk_jits.items():
+            fns[f"prefill_chunk[final={final}]"] = fn
+        fns["set_length"] = self._set_length
+        if self.paged:
+            fns.update(
+                paged_scatter=self._paged_scatter,
+                set_slot_state=self._set_slot_state,
+                set_table_entry=self._set_table_entry,
+                copy_block=self._copy_block,
+                zero_block=self._zero_block,
+            )
+        return {name: int(fn._cache_size()) for name, fn in fns.items()}
 
     def audit(self) -> None:
         """Cross-check the allocator against the engine's live sequences:

@@ -100,9 +100,20 @@ class ServingFaultInjector:
         return cls(specs)
 
     # ------------------------------------------------------------------ hooks
-    def _mark(self, i: int, spec: FaultSpec, step: int) -> None:
+    def _mark(self, i: int, spec: FaultSpec, sched) -> None:
         self._fired.add(i)
-        self.fired_log.append((step, spec.kind, spec.rid))
+        self.fired_log.append((sched.steps, spec.kind, spec.rid))
+        # fired faults are trace events: a chaos run's injections land on
+        # the same virtual-clock timeline as the preemptions/quarantines
+        # they provoke (obs disabled → the null tracer swallows this)
+        obs = getattr(sched, "obs", None)
+        if obs is not None and obs.enabled:
+            obs.tracer.instant(
+                "fault", cat="fault", kind=spec.kind, rid=spec.rid,
+                step=sched.steps, count=spec.count)
+            obs.metrics.counter(
+                "faults_injected_total", "chaos-harness faults fired",
+            ).inc(kind=spec.kind)
 
     def on_step_begin(self, sched) -> None:
         """Fire step-armed faults: cancels, allocation-failure bursts, and
@@ -115,18 +126,18 @@ class ServingFaultInjector:
             if spec.kind == "cancel":
                 # not submitted yet → cancel() refuses; retry next step
                 if sched.cancel(spec.rid, reason="fault-injected cancel"):
-                    self._mark(i, spec, sched.steps)
+                    self._mark(i, spec, sched)
             elif spec.kind == "alloc_fail":
                 if eng.paged:
                     eng.allocator.fail_next(spec.count)
-                self._mark(i, spec, sched.steps)
+                self._mark(i, spec, sched)
             elif spec.kind == "corrupt_metadata":
                 slot = sched.slot_of(spec.rid)
                 if slot is None:
                     continue  # not resident yet; retry next step
                 ok, sched._cache = eng.corrupt_slot_metadata(sched._cache, slot)
                 if ok:  # no privately-held block yet: retry next step
-                    self._mark(i, spec, sched.steps)
+                    self._mark(i, spec, sched)
 
     def poison_logits(self, sched, logits: np.ndarray) -> np.ndarray:
         """Overwrite armed targets' logits rows with NaN (models a
@@ -143,7 +154,7 @@ class ServingFaultInjector:
                 continue  # not resident yet; retry next step
             logits = np.array(logits)  # never scribble on a shared buffer
             logits[slot] = np.nan
-            self._mark(i, spec, sched.steps)
+            self._mark(i, spec, sched)
         return logits
 
     @property

@@ -43,6 +43,10 @@ class RequestOutcome:
     reason: str = ""             # human-readable detail
     tokens: int = 0              # generated tokens at retirement
     vtime: float = 0.0           # scheduler virtual-token clock at retirement
+    slot: int | None = None      # decode slot held at retirement (None when
+                                 # queued / mid-prefill) — quarantines and
+                                 # preempt-retires are diagnosable from the
+                                 # outcome record alone
 
     def __post_init__(self):
         if self.status not in STATUSES:
@@ -99,9 +103,22 @@ class HealthMonitor:
         self.counts: dict[str, int] = {s: 0 for s in STATUSES}
         self.audits_run = 0
         self.self_preempt_retires = 0
+        # structured event log: quarantines, preemptions, prefill aborts —
+        # each a dict with at least {kind, slot, rid, reason}, so chaos
+        # runs are diagnosable without parsing warning text
+        self.events: list[dict] = []
 
     def record(self, outcome: RequestOutcome) -> None:
         self.counts[outcome.status] += 1
+
+    def record_event(self, kind: str, *, slot: int | None = None,
+                     rid: int | None = None, reason: str = "",
+                     **detail) -> dict:
+        """Log one structured health event (quarantine / preempt /
+        prefill_abort / …) with its slot id, request id, and reason."""
+        ev = dict(kind=kind, slot=slot, rid=rid, reason=reason, **detail)
+        self.events.append(ev)
+        return ev
 
     def maybe_audit(self, engine, step: int) -> bool:
         """Run the engine's allocator audit every ``audit_every`` decode
@@ -115,4 +132,5 @@ class HealthMonitor:
 
     def summary(self) -> dict:
         return dict(self.counts, audits_run=self.audits_run,
-                    self_preempt_retires=self.self_preempt_retires)
+                    self_preempt_retires=self.self_preempt_retires,
+                    events=len(self.events))

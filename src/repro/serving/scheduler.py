@@ -54,6 +54,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.obs.tracing import PID_REQUEST
+
 from . import engine as engine_mod
 from .health import HealthMonitor, RequestOutcome, ServeResult, StepReport, nonfinite_slots
 
@@ -76,6 +78,10 @@ class Request:
     # self-preemptions and the progress marker at the last one
     self_preempts: int = 0
     preempt_progress: int = -1
+    # virtual-clock submission time, recorded by ContinuousScheduler.submit
+    # (trace-driven callers may pass an explicit arrival) — anchors the
+    # request's queued/lifetime spans and TTFT
+    arrival: float | None = None
 
 
 @dataclasses.dataclass
@@ -112,6 +118,14 @@ class ContinuousScheduler:
         self.self_preempt_limit = self_preempt_limit
         self.watchdog = watchdog
         self.vtime = 0.0                        # virtual-token clock
+        # observability: the scheduler shares the engine's bundle and owns
+        # the tracer's clock (spans/events land on this vtime).  Tokens
+        # produced during a step are buffered and stamped once at the
+        # step's *final* vtime — the clock semantics TTFT/ITL are derived
+        # from (DESIGN.md §Observability).
+        self.obs = engine.obs
+        self.obs.tracer.set_clock(lambda: self.vtime)
+        self._step_tokens: list[tuple[int, int]] = []   # (rid, token)
         self.outcomes: dict[int, RequestOutcome] = {}
         self._step_retired: list[RequestOutcome] = []
         # chunked prefill: per-step token quantum.  None keeps monolithic
@@ -152,21 +166,41 @@ class ContinuousScheduler:
         return cache
 
     # --------------------------------------------------- request lifecycle
-    def _retire(self, req: Request, status: str, reason: str = "") -> RequestOutcome:
+    def _retire(
+        self, req: Request, status: str, reason: str = "",
+        slot: int | None = None,
+    ) -> RequestOutcome:
         """Record a request's terminal outcome (bookkeeping only — the
         caller releases slots/blocks at its own call site, since cache
-        threading differs per path)."""
+        threading differs per path).  ``slot`` is the decode slot the
+        request held at retirement (None when queued / prefilling), kept
+        on the outcome so chaos-lane failures are diagnosable from the
+        artifact alone."""
         req.done = True
         if status == "rejected":
             req.rejected = True
         oc = RequestOutcome(
             rid=req.rid, status=status, reason=reason,
-            tokens=len(req.out), vtime=self.vtime,
+            tokens=len(req.out), vtime=self.vtime, slot=slot,
         )
         req.outcome = oc
         self.outcomes[req.rid] = oc
         self.health.record(oc)
         self._step_retired.append(oc)
+        if self.obs.enabled:
+            tr = self.obs.tracer
+            tr.instant(
+                "retired", pid=PID_REQUEST, tid=req.rid, cat="lifecycle",
+                status=status, reason=reason, slot=slot,
+                tokens=len(req.out))
+            if req.arrival is not None:
+                tr.complete(
+                    "request", req.arrival, self.vtime - req.arrival,
+                    pid=PID_REQUEST, tid=req.rid, cat="lifecycle",
+                    status=status)
+            self.obs.metrics.counter(
+                "requests_retired_total", "terminal request outcomes",
+            ).inc(status=status)
         return oc
 
     def slot_of(self, rid: int) -> int | None:
@@ -191,13 +225,13 @@ class ContinuousScheduler:
             self._cache = self.engine.abort_chunked(self._cache, st.slot)
             self.free.append(st.slot)
             self._prefilling = None
-            self._retire(st.req, "cancelled", reason)
+            self._retire(st.req, "cancelled", reason, slot=st.slot)
             return True
         slot = self.slot_of(rid)
         if slot is not None:
             req = self.running.pop(slot)
             self._cache = self._release(self._cache, slot)
-            self._retire(req, "cancelled", reason)
+            self._retire(req, "cancelled", reason, slot=slot)
             return True
         return False
 
@@ -217,13 +251,18 @@ class ContinuousScheduler:
             self._cache = self.engine.abort_chunked(self._cache, st.slot)
             self.free.append(st.slot)
             self._prefilling = None
-            self._retire(st.req, "deadline_exceeded", "expired mid-chunked-prefill")
+            self._retire(
+                st.req, "deadline_exceeded", "expired mid-chunked-prefill",
+                slot=st.slot,
+            )
             any_expired = True
         for slot, req in list(self.running.items()):
             if req.deadline is not None and self.vtime >= req.deadline:
                 del self.running[slot]
                 self._cache = self._release(self._cache, slot)
-                self._retire(req, "deadline_exceeded", "expired mid-decode")
+                self._retire(
+                    req, "deadline_exceeded", "expired mid-decode", slot=slot
+                )
                 any_expired = True
         return any_expired
 
@@ -329,9 +368,15 @@ class ContinuousScheduler:
                 skipped.append(req)
                 self.insert_retries += 1
                 continue
+            if self.obs.enabled:
+                self._trace_admission_start(req)
+                self.obs.tracer.complete(
+                    "prefill", self.vtime, len(toks), pid=PID_REQUEST,
+                    tid=req.rid, cat="prefill", slot=slot, tokens=len(toks))
             self.vtime += len(toks)
             first = self._sample(logits)
             req.out.append(first)
+            self._step_tokens.append((req.rid, first))
             # the prefill-produced token counts: check termination before
             # the slot ever decodes.  at_capacity: a full-capacity prompt
             # has nowhere to write the next token's KV — retire now rather
@@ -344,7 +389,7 @@ class ContinuousScheduler:
                 or (req.eos is not None and first == req.eos)
                 or at_capacity
             ):
-                self._retire(req, "finished")
+                self._retire(req, "finished", slot=slot)
                 cache = self._release(cache, slot)
                 continue
             cur_tokens[slot] = first
@@ -370,6 +415,21 @@ class ContinuousScheduler:
         req = self.running.pop(slot)
         cache = self._release(cache, slot)
         self.preemptions += 1
+        reason = (
+            "self-preemption (own dry append)" if slot == requester
+            else f"preempted for slot {requester} (pool dry)"
+        )
+        self.health.record_event(
+            "preempt", slot=slot, rid=req.rid, reason=reason,
+            requester=requester,
+        )
+        if self.obs.enabled:
+            self.obs.tracer.instant(
+                "preempt", cat="preemption", slot=slot, rid=req.rid,
+                requester=requester)
+            self.obs.metrics.counter(
+                "preemptions_total", "running requests evicted for space",
+            ).inc()
         if slot == requester and self._note_self_preempt(
             req, len(req.tokens) + len(req.out)
         ):
@@ -380,7 +440,7 @@ class ContinuousScheduler:
                 f"block pool); retired"
             )
             warnings.warn(msg)
-            self._retire(req, "rejected", msg)
+            self._retire(req, "rejected", msg, slot=slot)
         else:
             queue.appendleft(req)
         return slot, cache
@@ -421,15 +481,40 @@ class ContinuousScheduler:
         self.outcomes = {}
         self._step_retired = []
         self.health = HealthMonitor(self.health.audit_every)
+        self._step_tokens = []
+        # one session, one trace: vtime restarts at 0, so a carried-over
+        # event buffer would be non-monotone
+        self.obs.tracer.reset()
 
-    def submit(self, req: Request):
-        """Enqueue a request (FIFO admission order)."""
+    def submit(self, req: Request, arrival: float | None = None):
+        """Enqueue a request (FIFO admission order).  ``arrival`` pins the
+        request's virtual-clock submission time (default: now) — the
+        anchor of its queued span and TTFT."""
+        req.arrival = self.vtime if arrival is None else float(arrival)
         self._queue.append(req)
+        if self.obs.enabled:
+            self.obs.tracer.instant(
+                "submitted", ts=req.arrival, pid=PID_REQUEST, tid=req.rid,
+                cat="lifecycle", prompt_tokens=len(req.tokens),
+                max_new=req.max_new)
+
+    def idle_until(self, t: float) -> None:
+        """Advance the virtual clock to ``t`` (no-op when already past) —
+        trace replay uses this to model idle gaps between arrivals."""
+        self.vtime = max(self.vtime, float(t))
 
     @property
     def busy(self) -> bool:
         """Work left: anything running, queued, or mid-chunked-prefill."""
         return bool(self.running or self._queue or self._prefilling)
+
+    def _trace_admission_start(self, req: Request) -> None:
+        """Close the request's queued span at the moment it leaves the
+        queue (monolithic admission, chunked open, or prefix replay)."""
+        if req.arrival is not None:
+            self.obs.tracer.complete(
+                "queued", req.arrival, self.vtime - req.arrival,
+                pid=PID_REQUEST, tid=req.rid, cat="lifecycle")
 
     def _finish_admission(self, req: Request, slot: int, logits):
         """Sample the prefill-produced first token, then either retire the
@@ -437,13 +522,14 @@ class ContinuousScheduler:
         running — the same contract as the tail of ``_admit``."""
         first = self._sample(logits)
         req.out.append(first)
+        self._step_tokens.append((req.rid, first))
         at_capacity = len(req.tokens) + len(req.out) - 1 >= self.engine.capacity
         if (
             len(req.out) >= req.max_new
             or (req.eos is not None and first == req.eos)
             or at_capacity
         ):
-            self._retire(req, "finished")
+            self._retire(req, "finished", slot=slot)
             self._cache = self._release(self._cache, slot)
         else:
             self._cur[slot] = first
@@ -477,11 +563,18 @@ class ContinuousScheduler:
                     self._cache, toks_list, slot
                 )
                 if logits is not None:
+                    if self.obs.enabled:
+                        self._trace_admission_start(req)
+                        self.obs.tracer.instant(
+                            "prefix_replay", pid=PID_REQUEST, tid=req.rid,
+                            cat="prefill", slot=slot, tokens=len(toks_list))
                     self._finish_admission(req, slot, logits)
                     progressed = True
                     continue
             else:
                 slot = self.free.pop()
+            if self.obs.enabled:
+                self._trace_admission_start(req)
             toks = np.asarray(toks_list, np.int32)
             resume, self._cache = eng.begin_chunked(self._cache, slot, toks)
             self._prefilling = _ChunkState(req=req, slot=slot, toks=toks, pos=resume)
@@ -519,6 +612,17 @@ class ContinuousScheduler:
             self._prefilling = None
             self.preemptions += 1
             self.prefill_aborts += 1
+            self.health.record_event(
+                "prefill_abort", slot=st.slot, rid=st.req.rid,
+                reason="pool dry mid-chunked-prefill", pos=st.pos,
+            )
+            if self.obs.enabled:
+                self.obs.tracer.instant(
+                    "prefill_abort", cat="preemption", slot=st.slot,
+                    rid=st.req.rid, pos=st.pos)
+                self.obs.metrics.counter(
+                    "prefill_aborts_total",
+                    "chunked admissions aborted by pool pressure").inc()
             if self._note_self_preempt(st.req, st.pos):
                 self.health.self_preempt_retires += 1
                 msg = (
@@ -527,11 +631,16 @@ class ContinuousScheduler:
                     f"prompt); retired"
                 )
                 warnings.warn(msg)
-                self._retire(st.req, "rejected", msg)
+                self._retire(st.req, "rejected", msg, slot=st.slot)
             else:
                 self._queue.appendleft(st.req)
             return True
         self.prefill_chunks += 1
+        if self.obs.enabled:
+            self.obs.tracer.complete(
+                f"prefill_chunk[{st.pos // self.chunk_tokens}]",
+                self.vtime, n, pid=PID_REQUEST, tid=st.req.rid,
+                cat="prefill", slot=st.slot, start=st.pos, tokens=n)
         self.vtime += n
         st.pos += n
         if logits is not None:
@@ -594,13 +703,22 @@ class ContinuousScheduler:
                         # the batch decodes on untouched
                         req = self.running.pop(slot)
                         self._cache = self._release(self._cache, slot)
-                        self._retire(
-                            req, "quarantined",
-                            f"non-finite logits at decode step {self.steps}",
+                        reason = (
+                            f"non-finite logits at decode step {self.steps}"
                         )
+                        self.health.record_event(
+                            "quarantine", slot=slot, rid=req.rid,
+                            reason=reason,
+                        )
+                        if self.obs.enabled:
+                            self.obs.tracer.instant(
+                                "quarantine", cat="health", slot=slot,
+                                rid=req.rid, reason=reason)
+                        self._retire(req, "quarantined", reason, slot=slot)
             for slot, req in list(self.running.items()):
                 tok = int(nxt[slot])
                 req.out.append(tok)
+                self._step_tokens.append((req.rid, tok))
                 self._cur[slot] = tok
                 at_capacity = (
                     len(req.tokens) + len(req.out) - 1 >= self.engine.capacity
@@ -610,12 +728,48 @@ class ContinuousScheduler:
                     or (req.eos is not None and tok == req.eos)
                     or at_capacity
                 ):
-                    self._retire(req, "finished")
+                    self._retire(req, "finished", slot=slot)
                     del self.running[slot]
                     self._cache = self._release(self._cache, slot)
             progressed = True
+            if self.obs.introspector is not None and self.running:
+                self.obs.introspector.probe(
+                    self.engine, self._cache, list(self.running), self.steps
+                )
+        if self.obs.enabled:
+            self._flush_step_obs()
         self.health.maybe_audit(self.engine, self.steps)
         return StepReport(progressed, self._step_retired)
+
+    def _flush_step_obs(self) -> None:
+        """End-of-step observability flush: stamp the step's buffered
+        tokens at the *final* vtime (an admission-produced first token and
+        a same-step decode token share one stamp — the clock semantics
+        TTFT/ITL percentiles are derived from), then sample the counter
+        tracks and gauges."""
+        tr = self.obs.tracer
+        for rid, tok in self._step_tokens:
+            tr.instant("token", pid=PID_REQUEST, tid=rid, cat="decode",
+                       token=tok)
+        self._step_tokens = []
+        tr.counter("occupancy", {"running": len(self.running),
+                                 "queued": len(self._queue)})
+        if self.engine.paged:
+            a = self.engine.allocator
+            tr.counter("pool", {"in_use": a.n_in_use,
+                                "free": len(a._free),
+                                "cached": len(a._free_cached)})
+        self.engine.sample_pool_gauges()
+        self.obs.metrics.set_gauges(dict(
+            sched_steps=self.steps,
+            sched_vtime=self.vtime,
+            sched_running=len(self.running),
+            sched_queue_depth=len(self._queue),
+            sched_preemptions=self.preemptions,
+            sched_prefill_chunks=self.prefill_chunks,
+            sched_prefill_aborts=self.prefill_aborts,
+            sched_insert_retries=self.insert_retries,
+        ))
 
     def run(self, requests: Sequence[Request]) -> ServeResult:
         """Serve ``requests`` to completion.  Returns a :class:`ServeResult`

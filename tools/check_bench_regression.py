@@ -1,6 +1,17 @@
 #!/usr/bin/env python3
-"""Compare fresh BENCH_*.json results against the committed baselines and
-fail (exit 1) on a perf regression.
+"""Compare fresh BENCH_*.json / METRICS_*.json results against the
+committed baselines and fail (exit 1) on a perf regression.
+
+Two input formats, one gate:
+
+  * ``BENCH_*.json`` — the benchmarks/persist.py document (flat metric
+    list with ``better``/``gate``).
+  * ``METRICS_*.json`` — a metrics-registry snapshot
+    (``repro.obs.metrics.Snapshot.to_json``: ``kind: metrics_snapshot``).
+    Each series becomes a metric named ``name{label="v",...}``; series
+    metadata carries the same ``better``/``gate`` contract, so gated
+    registry series (the serve-trace summary gauges) are regression-
+    checked exactly like bench metrics.
 
 Only metrics with ``gate: true`` participate; everything else is printed
 for the record.  Tolerances:
@@ -34,14 +45,47 @@ import shutil
 import sys
 
 SCHEMA_VERSION = 1
+OBS_SCHEMA_VERSION = 1  # repro.obs.metrics.OBS_SCHEMA_VERSION (stdlib tool:
+                        # the constant is mirrored, not imported)
 LOWER_TOL = 0.20   # +20% allowed on lower-is-better (latency) metrics
 HIGHER_TOL = 0.10  # -10% allowed on higher-is-better (throughput) metrics
 ZERO_EPS = 1e-9    # zero baselines gate exactly
 
 
+def _snapshot_to_bench(doc: dict, path: str) -> dict:
+    """Flatten a metrics-registry snapshot into the bench-doc shape so
+    one compare path serves both formats.  Labeled series keep their
+    labels in the metric name (``name{k="v"}``) — unique per series."""
+    metrics = []
+    for s in doc["series"]:
+        labels = s.get("labels", {})
+        lab = ("" if not labels else
+               "{" + ",".join(f'{k}="{v}"'
+                              for k, v in sorted(labels.items())) + "}")
+        metrics.append({
+            "name": s["name"] + lab,
+            "value": float(s["value"]),
+            "unit": s.get("unit", ""),
+            "better": s.get("better", "info"),
+            "gate": bool(s.get("gate", False)),
+        })
+    return {
+        "schema": SCHEMA_VERSION,
+        "bench": os.path.basename(path),
+        "git_sha": "metrics-snapshot",
+        "metrics": metrics,
+    }
+
+
 def load(path: str) -> dict:
     with open(path) as f:
         doc = json.load(f)
+    if doc.get("kind") == "metrics_snapshot":
+        if doc.get("obs_schema") != OBS_SCHEMA_VERSION:
+            raise SystemExit(
+                f"{path}: obs_schema {doc.get('obs_schema')} != "
+                f"{OBS_SCHEMA_VERSION}")
+        return _snapshot_to_bench(doc, path)
     if doc.get("schema") != SCHEMA_VERSION:
         raise SystemExit(f"{path}: schema {doc.get('schema')} != {SCHEMA_VERSION}")
     return doc
@@ -108,9 +152,13 @@ def main() -> int:
                          "instead of checking")
     args = ap.parse_args()
 
-    new_paths = sorted(glob.glob(os.path.join(args.new_dir, "BENCH_*.json")))
+    new_paths = sorted(
+        glob.glob(os.path.join(args.new_dir, "BENCH_*.json"))
+        + glob.glob(os.path.join(args.new_dir, "METRICS_*.json"))
+    )
     if not new_paths:
-        print(f"no BENCH_*.json under {args.new_dir}", file=sys.stderr)
+        print(f"no BENCH_*.json / METRICS_*.json under {args.new_dir}",
+              file=sys.stderr)
         return 1
 
     if args.update_baseline:

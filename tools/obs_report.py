@@ -1,0 +1,135 @@
+#!/usr/bin/env python3
+"""Render serving observability artifacts as human-readable summaries.
+
+Input files are auto-detected by shape:
+
+  * Chrome trace-event JSON (``*.trace.json``, written by
+    ``Tracer.write_chrome_trace``) — prints the span-derived serving
+    metrics (TTFT / ITL / throughput on the virtual token clock), the
+    event census by name, and the notable lifecycle events (preemptions,
+    quarantines, faults, budget downshifts).
+  * Metrics-registry snapshots (``METRICS_*.json``, written by
+    ``MetricsRegistry.write_snapshot_json``) — prints every series with
+    kind / value / unit, gated series flagged.
+
+``--validate`` runs the stdlib-only structural checker
+(``repro.obs.tracing.validate_chrome_trace``) over every trace file and
+exits non-zero on the first malformed document — the CI bench lane's
+Perfetto-JSON gate.  The whole tool is stdlib-only (run with
+``PYTHONPATH=src``): ``repro.obs.tracing`` / ``repro.obs.metrics``
+import no third-party packages.
+
+Typical use::
+
+    PYTHONPATH=src python tools/obs_report.py bench_out/serve_trace_chunked.trace.json \\
+        bench_out/METRICS_serve_trace.json
+    PYTHONPATH=src python tools/obs_report.py --validate bench_out/*.trace.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from collections import Counter
+
+from repro.obs.metrics import Snapshot
+from repro.obs.tracing import (
+    derive_serving_metrics,
+    load_trace_events,
+    validate_chrome_trace,
+)
+
+# instants worth listing one-by-one (the "what went wrong" events)
+NOTABLE = ("preempt", "prefill_abort", "quarantine", "fault",
+           "budget_downshift", "budget_restore", "blocks_shed")
+
+
+def _fmt(v: float) -> str:
+    return f"{v:.3f}".rstrip("0").rstrip(".") if isinstance(v, float) else str(v)
+
+
+def report_trace(path: str, doc: dict) -> None:
+    events = load_trace_events(doc)
+    derived = derive_serving_metrics(events)
+    print(f"\n== {path} ({len(events)} events)")
+    print("-- span-derived serving metrics (virtual token clock)")
+    for k in ("n_requests", "n_finished_first_token", "total_tokens",
+              "makespan", "ttft_p50", "ttft_p99", "itl_p50", "itl_p99",
+              "tokens_per_kunit"):
+        print(f"   {k:24s} {_fmt(derived[k]):>12s}")
+    census = Counter(e.name.split("[")[0] for e in events)
+    print("-- event census")
+    for name, n in sorted(census.items()):
+        print(f"   {name:24s} {n:>6d}")
+    notable = [e for e in events if e.name in NOTABLE]
+    if notable:
+        print("-- notable events")
+        for e in notable:
+            args = " ".join(f"{k}={v}" for k, v in e.args)
+            print(f"   t={_fmt(e.ts):>10s} {e.name:16s} {args}")
+
+
+def report_snapshot(path: str, doc: dict) -> None:
+    snap = Snapshot.from_json(doc)
+    print(f"\n== {path} ({len(snap.series)} series)")
+    print(f"   {'series':44s} {'kind':10s} {'value':>14s} unit")
+    for s in snap.series:
+        flag = "  [gated]" if s.gate else ""
+        print(f"   {s.full_name:44s} {s.kind:10s} {_fmt(s.value):>14s} "
+              f"{s.unit}{flag}")
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(
+        description=__doc__, formatter_class=argparse.RawDescriptionHelpFormatter
+    )
+    ap.add_argument("paths", nargs="+",
+                    help="trace (*.trace.json) and/or metrics snapshot "
+                         "(METRICS_*.json) files")
+    ap.add_argument("--validate", action="store_true",
+                    help="structurally validate trace files (Perfetto/"
+                         "Chrome trace-event schema) instead of reporting")
+    args = ap.parse_args()
+
+    status = 0
+    for path in args.paths:
+        with open(path) as f:
+            doc = json.load(f)
+        is_trace = isinstance(doc, dict) and "traceEvents" in doc
+        is_snapshot = isinstance(doc, dict) and doc.get("kind") == "metrics_snapshot"
+        if args.validate:
+            if is_trace:
+                errs = validate_chrome_trace(doc)
+                if errs:
+                    status = 1
+                    print(f"{path}: INVALID ({len(errs)} problems)",
+                          file=sys.stderr)
+                    for e in errs[:20]:
+                        print(f"  {e}", file=sys.stderr)
+                else:
+                    print(f"{path}: ok "
+                          f"({len(doc['traceEvents'])} trace events)")
+            elif is_snapshot:
+                try:
+                    Snapshot.from_json(doc)
+                    print(f"{path}: ok ({len(doc['series'])} series)")
+                except (KeyError, ValueError) as e:
+                    status = 1
+                    print(f"{path}: INVALID ({e})", file=sys.stderr)
+            else:
+                status = 1
+                print(f"{path}: unrecognized document", file=sys.stderr)
+            continue
+        if is_trace:
+            report_trace(path, doc)
+        elif is_snapshot:
+            report_snapshot(path, doc)
+        else:
+            status = 1
+            print(f"{path}: unrecognized document (neither a Chrome trace "
+                  f"nor a metrics snapshot)", file=sys.stderr)
+    return status
+
+
+if __name__ == "__main__":
+    sys.exit(main())
