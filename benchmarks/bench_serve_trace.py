@@ -34,6 +34,16 @@ the same trace on a degradation-enabled engine under a fixed
 an already-expired deadline, and gates zero leaked blocks at drain.
 Results go to ``BENCH_serve_trace.json`` (see benchmarks/persist.py;
 baseline checked by tools/check_bench_regression.py).
+
+``--prefix-mix`` replays a prefix-heavy trace (two thirds of the
+requests share one of two 128-token family prefixes, with a
+distinct-prompt filler phase that ages the parked prefixes past the
+TTL) on two engines sharing the same weights: a baseline whose expired
+prefix blocks are destroyed, and a two-tier engine that demotes them to
+host DRAM and recalls them on reuse (DESIGN.md §KV reuse tiers).  It
+gates identical outputs, a positive prefix hit-rate / recall count, and
+strictly fewer recomputed prompt tokens on the offload engine; results
+go to ``BENCH_serve_prefix.json``.
 """
 from __future__ import annotations
 
@@ -109,10 +119,40 @@ def poisson_trace(
     return trace
 
 
+def prefix_mix_trace(seed: int, vocab: int) -> list[tuple[float, dict]]:
+    """The --prefix-mix workload: 12 of 18 requests (67%) share one of
+    two 128-token family prefixes.  A warm phase parks both families in
+    the prefix cache, a distinct-prompt filler phase ages them past the
+    park TTL (a baseline engine destroys the expired blocks; a two-tier
+    engine demotes them to host DRAM), then a reuse phase re-sends the
+    families — recall vs recompute is exactly the difference measured."""
+    rng = np.random.default_rng(seed)
+    toks = lambda n: rng.integers(1, vocab, size=n).tolist()
+    families = [toks(128) for _ in range(2)]
+    trace, rid = [], 0
+    for i in range(4):          # warm: park both families
+        fam = families[i % 2]
+        trace.append((0.0, dict(rid=rid, tokens=fam + toks(32), max_new=8)))
+        rid += 1
+    t = 900.0
+    for _ in range(6):          # fillers: age the parked prefixes out
+        trace.append((t, dict(rid=rid, tokens=toks(256), max_new=8)))
+        rid += 1
+        t += 120.0
+    t = 3200.0
+    for i in range(8):          # reuse: recall (offload) vs recompute (base)
+        fam = families[i % 2]
+        trace.append((t, dict(rid=rid, tokens=fam + toks(48), max_new=8)))
+        rid += 1
+        t += 60.0
+    return trace
+
+
 # ------------------------------------------------------------------- replay
 
 def build_serving(pipeline: str, *, capacity: int, n_slots: int,
-                  pool_blocks: int, block_size: int = 32):
+                  pool_blocks: int, block_size: int = 32,
+                  prefix_ttl: float | None = None, offload_blocks: int = 0):
     cfg = reduced_config("olmo-1b")
     pol = PolicyConfig(
         kind="fier", budget=64, group=32, skip_layers=1, sink=4, recent=32,
@@ -122,11 +162,12 @@ def build_serving(pipeline: str, *, capacity: int, n_slots: int,
     bundle = build_model(cfg, pol)
     params = bundle.init(jax.random.PRNGKey(0))
     eng = Engine(bundle, n_slots=n_slots, capacity=capacity,
-                 obs=Observability())
+                 obs=Observability(), prefix_ttl=prefix_ttl,
+                 offload_blocks=offload_blocks)
     return cfg, params, eng
 
 
-def replay(eng, sched, trace):
+def replay(eng, sched, trace, outputs: dict | None = None):
     """Drive one trace through the scheduler; returns the stats dict.
 
     The scheduler's virtual token clock IS the replay clock: arrivals pin
@@ -167,6 +208,8 @@ def replay(eng, sched, trace):
     # request kept must have exactly one span stamp
     assert d["total_tokens"] == sum(len(r.out) for r in reqs), (
         d["total_tokens"], sum(len(r.out) for r in reqs))
+    if outputs is not None:
+        outputs.update({r.rid: list(r.out) for r in reqs})
     return dict(
         vt_ttft_p50=d["ttft_p50"], vt_ttft_p99=d["ttft_p99"],
         vt_itl_p50=d["itl_p50"], vt_itl_p99=d["itl_p99"],
@@ -342,6 +385,115 @@ def smoke(out_dir: str, *, seed: int = 0, chunk_tokens: int = 256,
     return doc
 
 
+# --prefix-mix engine shape: a pool small enough that the filler phase
+# pressures the warm families out, a host tier large enough to hold every
+# demoted block (host DRAM is the cheap tier), and a park TTL well under
+# the filler phase's virtual-time span so expiry — not just pressure —
+# moves the prefixes between tiers
+PREFIX_ENGINE = dict(capacity=512, n_slots=4, pool_blocks=30, block_size=32)
+PREFIX_TTL = 600.0
+PREFIX_OFFLOAD_BLOCKS = 80
+PREFIX_CHUNK_TOKENS = 64
+
+
+def prefix_mix(out_dir: str, *, seed: int = 0,
+               pipeline: str = "reference") -> dict:
+    """CI gate for the two-tier KV reuse subsystem: the prefix-mix trace
+    on a baseline (TTL only — expired prefix blocks destroyed) vs a
+    host-offload engine (expired blocks demoted, recalled on reuse),
+    sharing the same weights.  Asserts bit-identical outputs, a positive
+    prefix hit-rate and recall count, and strictly fewer recomputed
+    prompt tokens on the offload engine; writes BENCH_serve_prefix.json
+    + METRICS_serve_prefix.json + per-variant Perfetto traces."""
+    cfg, params, base = build_serving(
+        pipeline, **PREFIX_ENGINE, prefix_ttl=PREFIX_TTL)
+    off = Engine(
+        base.bundle, n_slots=PREFIX_ENGINE["n_slots"],
+        capacity=PREFIX_ENGINE["capacity"], obs=Observability(),
+        prefix_ttl=PREFIX_TTL, offload_blocks=PREFIX_OFFLOAD_BLOCKS,
+    )
+    trace = prefix_mix_trace(seed, cfg.vocab)
+    n_requests = len(trace)
+    engines = {"base": base, "offload": off}
+    results, outs = {}, {}
+    for name, eng in engines.items():
+        sched = ContinuousScheduler(
+            eng, params, chunk_tokens=PREFIX_CHUNK_TOKENS)
+        outs[name] = {}
+        results[name] = replay(eng, sched, trace, outputs=outs[name])
+        eng.obs.tracer.write_chrome_trace(
+            os.path.join(out_dir, f"serve_prefix_{name}.trace.json"))
+        eng.audit()  # device-pool AND host-tier invariants at drain
+        print(f"-- {name}: recomputed={eng.tokens_recomputed} "
+              f"hits={eng.prefix_partial_hits} "
+              f"recalled={eng.blocks_recalled} "
+              f"ttft_p99={results[name]['vt_ttft_p99']:.0f}")
+
+    metrics = []
+    reg = off.obs.metrics
+
+    def summary(name, value, *, unit="", better="info", gate=False):
+        g = reg.gauge(name, "serve_prefix summary metric", unit=unit,
+                      better=better, gate=gate)
+        g.set(float(value))
+        metrics.append(metric(name, g.value(), unit=unit, better=better,
+                              gate=gate))
+
+    for name, eng in engines.items():
+        r = results[name]
+        summary(f"{name}_tokens_recomputed", eng.tokens_recomputed,
+                unit="tok", better="lower", gate=True)
+        summary(f"{name}_prefix_hit_rate",
+                eng.prefix_partial_hits / n_requests,
+                better="higher", gate=(name == "offload"))
+        summary(f"{name}_vt_ttft_p99", r["vt_ttft_p99"], unit="unit",
+                better="lower", gate=True)
+        summary(f"{name}_vt_tokens_per_kunit", r["vt_tokens_per_kunit"],
+                unit="tok/kunit", better="higher", gate=True)
+        summary(f"{name}_total_tokens", r["total_tokens"])
+        summary(f"{name}_preemptions", r["preemptions"])
+        summary(f"{name}_leaked_blocks", r["leaked_blocks"], unit="blocks",
+                better="lower", gate=True)
+    summary("offload_blocks_recalled", off.blocks_recalled, unit="blocks",
+            better="higher", gate=True)
+    summary("offload_tokens_recalled", off.tokens_recalled, unit="tok")
+    summary("offload_host_resident", len(off.offload), unit="blocks")
+    summary("offload_over_base_recomputed",
+            off.tokens_recomputed / max(base.tokens_recomputed, 1),
+            better="lower", gate=True)
+
+    snap_doc = reg.write_snapshot_json(
+        os.path.join(out_dir, "METRICS_serve_prefix.json"))
+    by_name = {(s["name"], tuple(sorted(s["labels"].items()))): s["value"]
+               for s in snap_doc["series"]}
+    for m in metrics:
+        assert by_name[(m["name"], ())] == m["value"], m
+
+    doc = write_bench_json(
+        out_dir, "serve_prefix",
+        dict(seed=seed, trace="prefix_mix", pipeline=pipeline,
+             chunk_tokens=PREFIX_CHUNK_TOKENS, prefix_ttl=PREFIX_TTL,
+             offload_blocks=PREFIX_OFFLOAD_BLOCKS,
+             decode_token_cost=DECODE_TOKEN_COST, **PREFIX_ENGINE),
+        metrics,
+    )
+    # the subsystem's claim, asserted: the host tier changes WHAT is
+    # recomputed, never what is generated
+    assert outs["offload"] == outs["base"], "offload changed outputs"
+    assert off.prefix_partial_hits > 0, "no prefix hits on the mix trace"
+    assert off.blocks_recalled > 0, "host tier never recalled a block"
+    assert off.tokens_recomputed < base.tokens_recomputed, (
+        off.tokens_recomputed, base.tokens_recomputed)
+    assert results["base"]["leaked_blocks"] == 0
+    assert results["offload"]["leaked_blocks"] == 0
+    print(f"prefix-mix ok: recomputed {off.tokens_recomputed} (offload) vs "
+          f"{base.tokens_recomputed} (base), "
+          f"{off.blocks_recalled} blocks recalled, "
+          f"hit-rate {off.prefix_partial_hits / n_requests:.2f}, "
+          f"identical outputs")
+    return doc
+
+
 def full(*, seed: int = 0, chunk_tokens: int = 256,
          pipeline: str = "reference", n_requests: int = 48):
     """Exploratory sweep (not persisted): Poisson arrivals at a few
@@ -368,6 +520,10 @@ def main():
     ap.add_argument("--smoke", action="store_true",
                     help="CI gate: bursty trace, chunked vs monolithic, "
                          "writes BENCH_serve_trace.json")
+    ap.add_argument("--prefix-mix", action="store_true",
+                    help="CI gate: prefix-heavy trace, baseline vs "
+                         "host-offload engine, writes "
+                         "BENCH_serve_prefix.json")
     ap.add_argument("--out", default=".",
                     help="directory (or file) for BENCH_serve_trace.json")
     ap.add_argument("--seed", type=int, default=0)
@@ -376,12 +532,13 @@ def main():
                     choices=("reference", "one_pass"))
     ap.add_argument("--n-requests", type=int, default=48)
     args = ap.parse_args()
-    if args.smoke:
-        import os
-
+    if args.smoke or args.prefix_mix:
         os.makedirs(args.out, exist_ok=True)
-        smoke(args.out, seed=args.seed, chunk_tokens=args.chunk_tokens,
-              pipeline=args.pipeline)
+        if args.smoke:
+            smoke(args.out, seed=args.seed, chunk_tokens=args.chunk_tokens,
+                  pipeline=args.pipeline)
+        if args.prefix_mix:
+            prefix_mix(args.out, seed=args.seed, pipeline=args.pipeline)
     else:
         full(seed=args.seed, chunk_tokens=args.chunk_tokens,
              pipeline=args.pipeline, n_requests=args.n_requests)

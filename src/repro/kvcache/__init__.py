@@ -1,20 +1,29 @@
 from .cache import append_kv, append_token_metadata, init_layer_cache
+from .offload import HostBlock, HostOffloadTier, double_buffered_puts
 from .paged import (
     AllocatorAuditError,
     BlockAllocator,
+    EvictedBlock,
     block_hash_chain,
     gather_paged_kv,
     init_paged_pool,
     paged_append_kv,
     paged_append_token_metadata,
 )
+from .prefix_tree import PrefixTree, TrieNode
 
 __all__ = [
     "AllocatorAuditError",
     "BlockAllocator",
+    "EvictedBlock",
+    "HostBlock",
+    "HostOffloadTier",
+    "PrefixTree",
+    "TrieNode",
     "append_kv",
     "append_token_metadata",
     "block_hash_chain",
+    "double_buffered_puts",
     "gather_paged_kv",
     "init_layer_cache",
     "init_paged_pool",

@@ -1,0 +1,222 @@
+"""Host-DRAM KV offload tier: the second level of the two-tier prefix
+cache (DESIGN.md §KV reuse tiers).
+
+The device pool's free-but-cached blocks are the first tier: zero-copy
+prefix hits until LRU/TTL pressure evicts them.  Without this module an
+eviction destroys the block's contents and a later request re-prefills
+the prefix from scratch.  With an offload tier attached, the engine
+snapshots each evicted block — one ``jax.device_get`` of its ``[L, bs,
+…]`` rows across every pool leaf (K/V and the FIER code side-car) —
+into host DRAM *before* the pool row is overwritten, keyed by the same
+chained block hash the trie uses.  A later admission whose prefix walk
+runs off the device trie extends the match through the host tier:
+freshly allocated device blocks are filled by **double-buffered async
+recall** (``jax.device_put`` of block ``i+1`` dispatched while block
+``i`` commits through a jitted single-block scatter), then re-registered
+in the trie under their original parent linkage — bit-identical to never
+having been evicted, for a per-block cost far below re-prefilling
+``block_size`` tokens.
+
+Ownership invariant: a key lives in **exactly one tier**.  ``save`` is
+called only for keys just removed from the trie; recall ``pop``s the
+host entry before the device re-registration.  ``BlockAllocator.audit``
+cross-checks the two key sets every time the engine audits.
+
+Everything here is host-side bookkeeping plus explicit H2D/D2H copies —
+no jitted code, no new kernels.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import OrderedDict
+from typing import Any, Callable, Iterable, Iterator
+
+import jax
+import numpy as np
+
+__all__ = ["HostBlock", "HostOffloadTier", "double_buffered_puts"]
+
+
+def payload_nbytes(payload: Any) -> int:
+    """Total host bytes of a block payload pytree."""
+    return sum(int(np.asarray(leaf).nbytes) for leaf in jax.tree.leaves(payload))
+
+
+def to_host(payload: Any) -> Any:
+    """Materialise a device pytree as numpy on the host (one transfer per
+    leaf; bf16 leaves round-trip exactly through ml_dtypes)."""
+    return jax.tree.map(np.asarray, jax.device_get(payload))
+
+
+@dataclasses.dataclass
+class HostBlock:
+    """One offloaded block: its prefix-cache identity plus the host copy
+    of every pool leaf's ``[L, rows, …]`` slice for that block."""
+
+    key: int
+    parent_key: int | None
+    payload: Any                    # pytree of np.ndarray, pool-leaf layout
+    nbytes: int
+    saved_at: float                 # tier clock (scheduler vtime when wired)
+    reason: str = "lru"             # "lru" | "ttl" | "shed"
+
+
+class HostOffloadTier:
+    """Bounded LRU store of evicted KV blocks in host DRAM.
+
+    ``capacity_blocks`` bounds residency (0 disables saves entirely —
+    the engine treats a 0-capacity tier as absent).  The tier is passive:
+    the engine decides what to save (allocator eviction log, shed middle
+    blocks) and what to recall (admission-time prefix walk); the tier
+    only owns the host copies and their LRU/accounting.
+    """
+
+    def __init__(self, capacity_blocks: int,
+                 clock: Callable[[], float] | None = None):
+        self.capacity_blocks = int(capacity_blocks)
+        self._clock: Callable[[], float] = clock if clock is not None else (
+            lambda: 0.0
+        )
+        self._store: OrderedDict[int, HostBlock] = OrderedDict()
+        self.nbytes = 0
+        self.saves = 0
+        self.recalls = 0
+        self.lru_evictions = 0      # host-capacity pressure
+        self.dropped = 0            # chaos-injected losses
+        self.recall_wall_s = 0.0    # cumulative wall time inside recalls
+
+    # ------------------------------------------------------------- clock
+    def set_clock(self, clock: Callable[[], float]) -> None:
+        self._clock = clock
+
+    def now(self) -> float:
+        return float(self._clock())
+
+    # ----------------------------------------------------------- queries
+    def __len__(self) -> int:
+        return len(self._store)
+
+    def __contains__(self, key: int) -> bool:
+        return key in self._store
+
+    def keys(self) -> set[int]:
+        return set(self._store)
+
+    def match_extension(self, keys: list[int], start: int) -> list[int]:
+        """How far the host tier extends a device prefix match: the keys
+        ``keys[start:start+n]`` resident here, stopping at the first
+        miss.  No state change."""
+        out: list[int] = []
+        for key in keys[start:]:
+            if key not in self._store:
+                break
+            out.append(key)
+        return out
+
+    # --------------------------------------------------------- save/recall
+    def save(self, key: int, parent_key: int | None, payload: Any,
+             reason: str = "lru") -> bool:
+        """Admit one evicted block (host copy already materialised).
+        False when the tier is disabled or the key is already resident
+        (first writer wins, same as the trie)."""
+        if self.capacity_blocks <= 0 or key in self._store:
+            return False
+        hb = HostBlock(
+            key=key, parent_key=parent_key, payload=payload,
+            nbytes=payload_nbytes(payload), saved_at=self.now(),
+            reason=reason,
+        )
+        self._store[key] = hb
+        self.nbytes += hb.nbytes
+        self.saves += 1
+        while len(self._store) > self.capacity_blocks:
+            _, old = self._store.popitem(last=False)
+            self.nbytes -= old.nbytes
+            self.lru_evictions += 1
+        return True
+
+    def pop(self, key: int) -> HostBlock | None:
+        """Recall: remove and return the host entry (ownership moves back
+        to the device tier — the caller re-registers it in the trie)."""
+        hb = self._store.pop(key, None)
+        if hb is not None:
+            self.nbytes -= hb.nbytes
+            self.recalls += 1
+        return hb
+
+    def drop_lru(self, n: int = 1) -> int:
+        """Chaos hook: lose ``n`` LRU entries (models host-tier memory
+        reclaim / a dropped transfer).  Recalls that would have hit now
+        miss and fall back to recompute — outputs must not change."""
+        dropped = 0
+        while self._store and dropped < n:
+            _, hb = self._store.popitem(last=False)
+            self.nbytes -= hb.nbytes
+            dropped += 1
+        self.dropped += dropped
+        return dropped
+
+    # ------------------------------------------------------------- stats
+    def stats(self) -> dict[str, float]:
+        """Canonical ``offload_*`` accounting (registry-gauge names)."""
+        return dict(
+            offload_capacity_blocks=self.capacity_blocks,
+            offload_blocks=len(self._store),
+            offload_bytes=self.nbytes,
+            offload_saves=self.saves,
+            offload_recalls=self.recalls,
+            offload_lru_evictions=self.lru_evictions,
+            offload_dropped=self.dropped,
+            offload_recall_wall_s=self.recall_wall_s,
+        )
+
+    def audit(self) -> list[str]:
+        """Internal invariants; returns violation strings (empty = clean).
+        The engine folds these into ``BlockAllocator.audit`` alongside
+        the cross-tier key-disjointness check."""
+        errs: list[str] = []
+        if len(self._store) > max(self.capacity_blocks, 0):
+            errs.append(
+                f"host tier over capacity: {len(self._store)} > "
+                f"{self.capacity_blocks}"
+            )
+        nbytes = sum(hb.nbytes for hb in self._store.values())
+        if nbytes != self.nbytes:
+            errs.append(f"byte accounting drift: {self.nbytes} != {nbytes}")
+        for key, hb in self._store.items():
+            if hb.key != key:
+                errs.append(f"store key mismatch at {key}")
+        return errs
+
+
+def double_buffered_puts(
+    entries: Iterable[tuple[int, Any]],
+) -> Iterator[tuple[int, Any]]:
+    """Two-deep host→device pipeline: yields ``(bid, device_payload)``
+    with the *next* entry's ``jax.device_put`` already dispatched before
+    the current one is handed to the (blocking) commit scatter.  jax's
+    async dispatch overlaps the H2D copy of block ``i+1`` with the commit
+    of block ``i`` — the recall analogue of the one-pass kernel hiding
+    scoring behind the gather; on backends where device_put is
+    synchronous the pipeline degrades to sequential copies with identical
+    results."""
+    it = iter(entries)
+    staged: tuple[int, Any] | None = None
+    for bid, payload in it:
+        nxt = (bid, jax.tree.map(jax.device_put, payload))
+        if staged is not None:
+            yield staged
+        staged = nxt
+    if staged is not None:
+        yield staged
+
+
+def timed(fn, tier: HostOffloadTier):
+    """Run ``fn()`` accumulating its wall time into the tier's recall
+    clock (kept out of the virtual clock: wall time is info-only)."""
+    t0 = time.monotonic()
+    try:
+        return fn()
+    finally:
+        tier.recall_wall_s += time.monotonic() - t0

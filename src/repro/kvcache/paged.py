@@ -43,13 +43,15 @@ matrix in tests/test_paged.py.
 from __future__ import annotations
 
 import dataclasses
-from collections import OrderedDict, deque
+from collections import deque
 from typing import Any
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.policy import PolicyConfig
+
+from .prefix_tree import PrefixTree
 
 NULL_BLOCK = 0  # reserved trash block: never allocated, masked everywhere
 
@@ -255,20 +257,45 @@ class AllocatorAuditError(AssertionError):
     drift, free-list/table overlap, or hash-index inconsistency)."""
 
 
+@dataclasses.dataclass(frozen=True)
+class EvictedBlock:
+    """One block demoted out of the device prefix cache (LRU pressure or
+    TTL expiry) while its contents were still valid — the record the
+    engine's host-offload hook consumes (:mod:`repro.kvcache.offload`).
+    ``parent_key`` preserves the trie linkage so a recall re-inserts the
+    node under its original prefix parent."""
+
+    bid: int
+    key: int
+    parent_key: int | None
+    reason: str  # "lru" | "ttl"
+
+
 class BlockAllocator:
-    """Free-list block allocator with ref counts and a prefix cache.
+    """Free-list block allocator with ref counts and a radix-trie prefix
+    cache (:class:`~repro.kvcache.prefix_tree.PrefixTree`).
 
     States of a block id (> 0):
       * in use:        ref >= 1 (possibly shared; possibly hash-registered)
-      * free-cached:   ref == 0 but hash-registered; contents still valid
-                       for prefix hits, evicted LRU when the free list
-                       runs dry
+      * free-cached:   ref == 0 but hash-registered (a *parked* trie
+                       node); contents still valid for prefix hits,
+                       evicted leaf-first LRU when the free list runs
+                       dry, or by TTL (``park_ttl`` clock units on the
+                       trie's pluggable clock — the serving scheduler
+                       wires its virtual token clock in)
       * free:          ref == 0, no hash; next to be handed out
 
     Block 0 (the null block) is never handed out.
+
+    Evictions of still-valid cached blocks are observable: with
+    ``record_evictions`` set (the engine enables it when a host offload
+    tier is attached), every LRU/TTL demotion lands in an internal log
+    drained via :meth:`take_evicted` — the engine snapshots those blocks
+    to host DRAM *before* their pool rows are overwritten.
     """
 
-    def __init__(self, n_blocks: int, block_size: int):
+    def __init__(self, n_blocks: int, block_size: int,
+                 park_ttl: float | None = None):
         if n_blocks < 2:
             raise ValueError(f"pool needs >= 2 blocks, got {n_blocks}")
         check_block_size(block_size)
@@ -276,17 +303,31 @@ class BlockAllocator:
         self.block_size = block_size
         self.ref = [0] * n_blocks
         self._free: deque[int] = deque(range(1, n_blocks))
-        self._free_cached: OrderedDict[int, int] = OrderedDict()  # bid → key
-        self._by_hash: dict[int, int] = {}                        # key → bid
-        self._hash_of: dict[int, int] = {}                        # bid → key
+        self.tree = PrefixTree()
+        self.park_ttl = park_ttl
         self._in_use = 0
         self._fail_next = 0  # fault injection: fail the next N alloc() calls
         self.peak_in_use = 0
         self.cow_copies = 0
         self.prefix_block_hits = 0
         self.injected_alloc_failures = 0
+        self.ttl_evictions = 0
+        # eviction log for the offload hook (bounded by its consumer: the
+        # engine drains it inside the same operation that evicted)
+        self.record_evictions = False
+        self._evicted: list[EvictedBlock] = []
 
     # ------------------------------------------------------------- accounting
+    def set_clock(self, clock) -> None:
+        """Wire the trie's park/TTL clock to an external monotone clock
+        (the scheduler's virtual token clock)."""
+        self.tree.set_clock(clock)
+
+    def key_of(self, bid: int) -> int | None:
+        """The prefix-cache key ``bid`` is registered under (None when
+        unregistered) — the trie-era spelling of the old ``_hash_of``."""
+        return self.tree.key_of(bid)
+
     @property
     def usable(self) -> int:
         return self.n_blocks - 1
@@ -296,14 +337,28 @@ class BlockAllocator:
         return self._in_use
 
     @property
+    def n_parked(self) -> int:
+        """Free-but-cached blocks (parked trie nodes)."""
+        return self.tree.n_parked
+
+    @property
     def n_free(self) -> int:
         """Blocks available to a fresh allocation (evictable cached ones
-        included — alloc() reclaims them LRU)."""
-        return len(self._free) + len(self._free_cached)
+        included — alloc() reclaims them leaf-first LRU)."""
+        return len(self._free) + self.tree.n_parked
 
     def utilization(self) -> float:
         """Blocks resident (referenced) / blocks allocated (pool size)."""
         return self.n_in_use / self.usable
+
+    @staticmethod
+    def _percentile(sorted_vals: list[float], q: float) -> float:
+        """Nearest-rank percentile over a pre-sorted list (0 when empty) —
+        keeps paged.py numpy-free."""
+        if not sorted_vals:
+            return 0.0
+        idx = min(len(sorted_vals) - 1, int(q * (len(sorted_vals) - 1) + 0.5))
+        return float(sorted_vals[idx])
 
     def stats(self) -> dict[str, float]:
         """The canonical pool-accounting snapshot, one ``pool_*`` name per
@@ -313,17 +368,28 @@ class BlockAllocator:
         onto them (the allocator/engine dicts previously reported the
         same quantities under divergent names — e.g. ``usable`` vs
         ``blocks_allocated``)."""
+        ages = sorted(self.tree.parked_ages())
         return dict(
             pool_blocks_total=self.n_blocks,
             pool_blocks_usable=self.usable,
             pool_blocks_in_use=self.n_in_use,
             pool_blocks_free=len(self._free),
-            pool_blocks_cached=len(self._free_cached),
+            pool_blocks_cached=self.tree.n_parked,
             pool_utilization=self.utilization(),
             pool_peak_in_use=self.peak_in_use,
             pool_prefix_block_hits=self.prefix_block_hits,
             pool_cow_copies=self.cow_copies,
             pool_injected_alloc_failures=self.injected_alloc_failures,
+            # parked-block age percentiles on the trie clock: how long
+            # free-but-cached prefixes have been cold (satellite: stale
+            # prefixes must age out deterministically, and their age is
+            # the evidence)
+            pool_parked_age_p50=self._percentile(ages, 0.50),
+            pool_parked_age_p90=self._percentile(ages, 0.90),
+            pool_parked_age_max=ages[-1] if ages else 0.0,
+            pool_ttl_evictions=self.ttl_evictions,
+            pool_leaf_evictions=self.tree.leaf_evictions,
+            pool_interior_evictions=self.tree.interior_evictions,
         )
 
     # -------------------------------------------------------------- alloc/free
@@ -336,19 +402,22 @@ class BlockAllocator:
 
     def alloc(self) -> int | None:
         """Hand out a free block (ref=1), evicting the LRU free-cached
-        block's hash if the plain free list is empty.  None when dry."""
+        trie leaf if the plain free list is empty (oldest parked node as
+        a fallback when every parked node shields cached children).
+        None when dry."""
         if self._fail_next > 0:
             self._fail_next -= 1
             self.injected_alloc_failures += 1
             return None
         if self._free:
             bid = self._free.popleft()
-        elif self._free_cached:
-            bid, key = self._free_cached.popitem(last=False)
-            del self._by_hash[key]
-            del self._hash_of[bid]
         else:
-            return None
+            ev = self.tree.pop_eviction()
+            if ev is None:
+                return None
+            bid, key, parent_key = ev
+            if self.record_evictions:
+                self._evicted.append(EvictedBlock(bid, key, parent_key, "lru"))
         self.ref[bid] = 1
         self._in_use += 1
         self.peak_in_use = max(self.peak_in_use, self._in_use)
@@ -361,34 +430,39 @@ class BlockAllocator:
         self.ref[bid] -= 1
         if self.ref[bid] == 0:
             self._in_use -= 1
-            key = self._hash_of.get(bid)
-            if key is not None:
-                # fresh insertion lands at the OrderedDict's end — the
-                # LRU eviction order — since a block cannot already be
-                # parked while its ref count was > 0
-                self._free_cached[bid] = key
+            if self.tree.key_of(bid) is not None:
+                # parks at the LRU end — a block cannot already be parked
+                # while its ref count was > 0
+                self.tree.park(bid)
             else:
                 self._free.append(bid)
 
     # ------------------------------------------------------------ prefix cache
-    def register(self, bid: int, key: int) -> None:
+    def register(self, bid: int, key: int, parent_key: int | None = None) -> None:
         """Publish an in-use block's content hash for future prefix hits.
-        First writer wins: an already-registered key keeps its block."""
+        First writer wins: an already-registered key keeps its block.
+        ``parent_key`` (the previous key of the ``block_hash_chain``)
+        links the trie node under its prefix parent — omitted, the node
+        attaches at the root and behaves exactly like the old flat
+        chained-hash map."""
         assert self.ref[bid] > 0, bid
-        if key in self._by_hash:
+        if key in self.tree:
             return
-        self._by_hash[key] = bid
-        self._hash_of[bid] = key
+        if self.tree.key_of(bid) is not None:
+            return  # block already published under its own (older) key
+        self.tree.insert(key, bid, parent_key)
 
     def lookup(self, key: int) -> int | None:
         """Prefix hit: take a reference on the block registered under
         ``key`` (reviving it from the free-cached pool if parked)."""
-        bid = self._by_hash.get(key)
+        bid = self.tree.get(key)
         if bid is None:
             return None
         if self.ref[bid] == 0:
-            del self._free_cached[bid]
+            self.tree.revive(bid)
             self._in_use += 1
+        else:
+            self.tree.touch(bid)
         self.ref[bid] += 1
         self.peak_in_use = max(self.peak_in_use, self._in_use)
         self.prefix_block_hits += 1
@@ -408,11 +482,50 @@ class BlockAllocator:
         change."""
         flags: list[bool] = []
         for key in keys:
-            bid = self._by_hash.get(key)
+            bid = self.tree.get(key)
             if bid is None:
                 break
             flags.append(self.ref[bid] == 0)
         return flags
+
+    # ---------------------------------------------------- eviction / offload
+    def expire_parked(self) -> int:
+        """TTL sweep: demote every parked block older than ``park_ttl``
+        (trie clock units) back to the plain free list, logging each for
+        the offload hook.  Returns the number demoted; no-op without a
+        TTL.  The scheduler runs this once per step, so on its virtual
+        token clock stale prefixes age out deterministically."""
+        if self.park_ttl is None:
+            return 0
+        n = 0
+        for bid in self.tree.expired(self.park_ttl):
+            key, parent_key = self.tree.remove(bid)
+            self.tree.ttl_evictions += 1
+            self.ttl_evictions += 1
+            if self.record_evictions:
+                self._evicted.append(EvictedBlock(bid, key, parent_key, "ttl"))
+            self._free.append(bid)
+            n += 1
+        return n
+
+    def take_evicted(self) -> list[EvictedBlock]:
+        """Drain the pending eviction log (records appear only while
+        ``record_evictions`` is set).  The engine calls this immediately
+        after any operation that can evict — before the evicted blocks'
+        pool rows are overwritten — and snapshots them to the host tier."""
+        out, self._evicted = self._evicted, []
+        return out
+
+    def drop_key(self, key: int) -> int | None:
+        """Unregister a *parked* prefix-cache entry and return its block
+        to the plain free list (None when the key is absent or in use) —
+        the chaos harness's host-tier drop needs the device analogue."""
+        bid = self.tree.get(key)
+        if bid is None or self.ref[bid] != 0:
+            return None
+        self.tree.remove(bid)
+        self._free.append(bid)
+        return bid
 
     def blocks_needed(self, n_tokens: int, keys: list[int] | None = None) -> int:
         """Fresh blocks a prompt admission would consume (prefix-cache
@@ -424,19 +537,27 @@ class BlockAllocator:
         return nb - n_hit + revivals
 
     # ------------------------------------------------------------------- audit
-    def audit(self, owners: dict[int, int] | None = None) -> None:
+    def audit(
+        self,
+        owners: dict[int, int] | None = None,
+        host_keys: "set[int] | None" = None,
+    ) -> None:
         """Invariant checker; raises :class:`AllocatorAuditError` on the
         first violation, returns None when clean.
 
         Checks: (a) every block id is in exactly one state — in use
-        (ref > 0), free, or free-cached — i.e. the free structures are
-        disjoint from each other and from referenced blocks, with no
-        duplicates and no leaked ids; (b) ``_in_use`` matches the ref
-        counts; (c) the hash index and its inverse agree, and every
-        free-cached block is hash-registered with ref == 0; (d) with
-        ``owners`` (bid → expected ref count from the engine's live
-        sequences), ref-count conservation holds *exactly* — a double
-        free or a leaked reference cannot hide.
+        (ref > 0), free, or free-cached (parked trie node) — i.e. the
+        free structures are disjoint from each other and from referenced
+        blocks, with no duplicates and no leaked ids; (b) ``_in_use``
+        matches the ref counts; (c) the trie's internal indices agree
+        (key↔bid symmetry, parent/child symmetry, parked bookkeeping) and
+        every parked block has ref == 0; (d) with ``owners`` (bid →
+        expected ref count from the engine's live sequences), ref-count
+        conservation holds *exactly* — a double free or a leaked
+        reference cannot hide; (e) with ``host_keys`` (the offload
+        tier's resident keys), no key is owned by both tiers — a
+        double-owned block would let a recall clobber a live device
+        registration.
         """
         def fail(msg: str) -> None:
             raise AllocatorAuditError(f"allocator audit: {msg}")
@@ -444,7 +565,7 @@ class BlockAllocator:
         if self.ref[NULL_BLOCK] != 0:
             fail(f"null block has ref {self.ref[NULL_BLOCK]}")
         free = list(self._free)
-        cached = list(self._free_cached)
+        cached = list(self.tree._parked)
         if NULL_BLOCK in free or NULL_BLOCK in cached:
             fail("null block on a free list")
         if len(set(free)) != len(free):
@@ -462,17 +583,14 @@ class BlockAllocator:
             fail(f"leaked blocks (in no state): {sorted(unaccounted)}")
         if self._in_use != len(in_use):
             fail(f"_in_use counter {self._in_use} != referenced blocks {len(in_use)}")
-        for key, bid in self._by_hash.items():
-            if self._hash_of.get(bid) != key:
-                fail(f"hash index asymmetry: key {key} -> block {bid}")
-        for bid, key in self._hash_of.items():
-            if self._by_hash.get(key) != bid:
-                fail(f"hash inverse asymmetry: block {bid} -> key {key}")
-        for bid, key in self._free_cached.items():
+        for err in self.tree.audit():
+            fail(f"prefix trie: {err}")
+        for bid in cached:
             if self.ref[bid] != 0:
                 fail(f"free-cached block {bid} has ref {self.ref[bid]}")
-            if self._hash_of.get(bid) != key:
-                fail(f"free-cached block {bid} not hash-registered under {key}")
+        for bid in self.tree._by_bid:
+            if bid in free:
+                fail(f"registered block {bid} sits on the plain free list")
         if owners is not None:
             for b in range(1, self.n_blocks):
                 expect = owners.get(b, 0)
@@ -481,3 +599,10 @@ class BlockAllocator:
                         f"ref-count drift on block {b}: allocator says "
                         f"{self.ref[b]}, owners hold {expect}"
                     )
+        if host_keys is not None:
+            both = host_keys & set(self.tree._by_key)
+            if both:
+                fail(
+                    f"keys owned by both tiers (device trie AND host "
+                    f"offload): {sorted(both)[:8]}"
+                )

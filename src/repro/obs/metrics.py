@@ -157,6 +157,26 @@ class Histogram(_Instrument):
             return 0.0
         return state[1] / state[2]
 
+    def percentile(self, q: float, **labels: str) -> float:
+        """Bucket-resolution quantile estimate (``0 <= q <= 1``): the
+        upper bound of the first bucket whose cumulative count reaches
+        ``q · count``.  Observations past the last bound clamp to it, so
+        the estimate never exceeds the configured bucket range — use
+        ``sum()/count()`` when exact tails matter."""
+        if not 0.0 <= q <= 1.0:
+            raise ValueError(f"quantile {q} outside [0, 1]")
+        state = self._series.get(_label_key(labels))
+        if state is None or state[2] == 0:
+            return 0.0
+        counts, _, total = state
+        rank = q * total
+        cum = 0
+        for i, ub in enumerate(self.buckets):
+            cum += counts[i]
+            if cum >= rank:
+                return ub
+        return self.buckets[-1]
+
 
 class _NullInstrument:
     """The disabled registry's single shared instrument: every mutator is
@@ -170,6 +190,7 @@ class _NullInstrument:
     def count(self, **labels: str) -> int: return 0
     def sum(self, **labels: str) -> float: return 0.0
     def mean(self, **labels: str) -> float: return 0.0
+    def percentile(self, q: float, **labels: str) -> float: return 0.0
 
 
 _NULL = _NullInstrument()

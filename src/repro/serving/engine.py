@@ -25,6 +25,7 @@ the pool — HBM is bounded by tokens resident, not slots × capacity.
 from __future__ import annotations
 
 import dataclasses
+import time
 import weakref
 from collections import Counter, OrderedDict
 from functools import partial
@@ -35,8 +36,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.policy import DecodePlan, PolicyConfig
+from repro.kvcache.offload import HostOffloadTier, double_buffered_puts, to_host
 from repro.kvcache.paged import (
     NULL_BLOCK,
+    AllocatorAuditError,
     BlockAllocator,
     SeqBlocks,
     block_hash_chain,
@@ -144,6 +147,9 @@ class Engine:
         degrade_floor: int = 64,
         restore_free_frac: float = 0.5,
         obs: Observability | None = None,
+        offload_blocks: int = 0,
+        prefix_ttl: float | None = None,
+        recall_cost: float = 1.0,
     ):
         self.bundle = bundle
         # observability bundle (DESIGN.md §Observability): shared metrics
@@ -220,11 +226,34 @@ class Engine:
                     f"requests outgrowing the pool will be retired as "
                     f"rejected instead of running to capacity"
                 )
-            self.allocator = BlockAllocator(self.pool_blocks, self.block_size)
+            # two-tier KV reuse (DESIGN.md §KV reuse tiers): the trie-
+            # backed allocator is tier 1 (free-but-cached device blocks,
+            # TTL-aged on the scheduler's virtual clock); an optional
+            # host-DRAM tier receives LRU/TTL-evicted blocks and recalls
+            # them bit-identically at admission time
+            self.prefix_ttl = prefix_ttl
+            self.recall_cost = float(recall_cost)
+            self.allocator = BlockAllocator(
+                self.pool_blocks, self.block_size, park_ttl=prefix_ttl
+            )
+            self.offload: HostOffloadTier | None = (
+                HostOffloadTier(offload_blocks) if offload_blocks > 0 else None
+            )
+            self.allocator.record_evictions = self.offload is not None
+            self._pool_clock = None
+            self.prefix_partial_hits = 0
+            self.blocks_recalled = 0
+            self.tokens_recalled = 0
+            self.tokens_recomputed = 0
+            self._recall_units = 0.0
             self._seq: dict[int, SeqBlocks] = {}
             self._prompt_logits: OrderedDict[int, np.ndarray] = OrderedDict()
             self._paged_scatter = jax.jit(
                 self._paged_scatter_impl, donate_argnums=(0,)
+            )
+            self._read_block = jax.jit(self._read_block_impl)
+            self._write_block = jax.jit(
+                self._write_block_impl, donate_argnums=(0,)
             )
             self._set_slot_state = jax.jit(
                 self._set_slot_state_impl, donate_argnums=(0,)
@@ -235,6 +264,7 @@ class Engine:
             self._copy_block = jax.jit(self._copy_block_impl, donate_argnums=(0,))
             self._zero_block = jax.jit(self._zero_block_impl, donate_argnums=(0,))
         else:
+            self.offload = None
             self._batch_axes = _cache_batch_axes(bundle, capacity)
             self._insert = jax.jit(self._insert_impl, donate_argnums=(0,))
         self._corrupt_meta = jax.jit(self._corrupt_meta_impl, donate_argnums=(0,))
@@ -271,6 +301,9 @@ class Engine:
         degrade_floor: int = 64,
         restore_free_frac: float = 0.5,
         obs: Observability | None = None,
+        offload_blocks: int = 0,
+        prefix_ttl: float | None = None,
+        recall_cost: float = 1.0,
         **build_kwargs,
     ) -> "Engine":
         """Build bundle + engine with the serving defaults: when ``policy``
@@ -319,7 +352,8 @@ class Engine:
         return cls(
             bundle, n_slots=n_slots, capacity=capacity, sampling=sampling,
             degrade_floor=degrade_floor, restore_free_frac=restore_free_frac,
-            obs=obs,
+            obs=obs, offload_blocks=offload_blocks, prefix_ttl=prefix_ttl,
+            recall_cost=recall_cost,
         )
 
     # ------------------------------------------------------------ lifecycle
@@ -331,7 +365,17 @@ class Engine:
             # the pool restarts empty: reset the allocator and drop the
             # prompt caches (their contents describe the old pool / the
             # params used with it)
-            self.allocator = BlockAllocator(self.pool_blocks, self.block_size)
+            self.allocator = BlockAllocator(
+                self.pool_blocks, self.block_size, park_ttl=self.prefix_ttl
+            )
+            if self.offload is not None:
+                # the host tier restarts empty too: sessions must not see
+                # KV produced under another session's params/budget
+                self.offload = HostOffloadTier(self.offload.capacity_blocks)
+            self.allocator.record_evictions = self.offload is not None
+            if self._pool_clock is not None:
+                self.set_pool_clock(self._pool_clock)
+            self._recall_units = 0.0
             self._seq = {}
             self._prompt_logits = OrderedDict()
         return self.bundle.init_cache(self.n_slots, self.capacity, length)
@@ -443,6 +487,131 @@ class Engine:
             rest=jax.tree.map(z, cache["rest"]),
         )
 
+    def _read_block_impl(self, cache, bid):
+        """Slice one block's rows out of every pool leaf (K/V and the FIER
+        side-car) — the D2H half of an offload save."""
+
+        def rd(pool):
+            return pool[:, bid]
+
+        return {
+            "front": jax.tree.map(rd, cache["front"]),
+            "rest": jax.tree.map(rd, cache["rest"]),
+        }
+
+    def _write_block_impl(self, cache, payload, bid):
+        """Commit a recalled block payload into pool row ``bid`` — the H2D
+        half of a recall.  Payload layout is exactly ``_read_block``'s
+        output, so an offload round trip is bit-identical."""
+
+        def wr(pool, blk):
+            return pool.at[:, bid].set(blk.astype(pool.dtype))
+
+        out = jax.tree.map(
+            wr,
+            {"front": cache["front"], "rest": cache["rest"]},
+            {"front": payload["front"], "rest": payload["rest"]},
+        )
+        return dict(cache, front=out["front"], rest=out["rest"])
+
+    # ----------------------------------------------------- host offload tier
+    def _drain_evictions(self, cache):
+        """Snapshot just-evicted prefix blocks into the host tier.  Must
+        run after the allocator operation that evicted and *before* any
+        device write to the reclaimed rows — at this point the pool rows
+        still hold the evicted contents."""
+        if self.offload is None:
+            return cache
+        for ev in self.allocator.take_evicted():
+            payload = to_host(self._read_block(cache, jnp.int32(ev.bid)))
+            self.offload.save(ev.key, ev.parent_key, payload, reason=ev.reason)
+            if self.obs.enabled:
+                self.obs.metrics.counter(
+                    "offload_saves_total",
+                    "blocks demoted to the host tier").inc()
+        return cache
+
+    def sweep_parked(self, cache):
+        """TTL sweep of tier-1 parked blocks — the scheduler calls this
+        once per step on its virtual clock.  Expired blocks demote to the
+        host tier (when attached) before their rows become reusable.
+        Returns (n_expired, cache)."""
+        if not self.paged or self.allocator.park_ttl is None:
+            return 0, cache
+        n = self.allocator.expire_parked()
+        if n:
+            cache = self._drain_evictions(cache)
+        return n, cache
+
+    def _recall_extension(self, cache, keys, blocks, L):
+        """Extend a device prefix match through the host tier: allocate a
+        fresh device block per resident host key (capped so the final
+        chunk still computes ≥ 1 token), stream the payloads back with
+        double-buffered ``device_put``s, and re-register each block under
+        its original parent linkage — bit-identical to never having been
+        evicted.  Partial recall is fine: an alloc failure mid-walk keeps
+        what was recalled and recomputes the rest.  Mutates ``blocks`` in
+        place; returns the updated cache."""
+        if self.offload is None:
+            return cache
+        max_blocks = (L - 1) // self.block_size
+        ext = self.offload.match_extension(keys, len(blocks))
+        ext = ext[: max_blocks - len(blocks)]
+        if not ext:
+            return cache
+        fresh: list[int] = []
+        for _ in ext:
+            bid = self.allocator.alloc()
+            if bid is None:
+                break
+            fresh.append(bid)
+        # evictions caused by the recall allocations themselves demote
+        # before we overwrite the reclaimed rows with recalled payloads
+        cache = self._drain_evictions(cache)
+        if not fresh:
+            return cache
+        hbs = [self.offload.pop(k) for k in ext[: len(fresh)]]
+        t0 = time.monotonic()
+        n_done = 0
+        for i, (bid, payload) in enumerate(
+            double_buffered_puts((b, hb.payload) for b, hb in zip(fresh, hbs))
+        ):
+            cache = self._write_block(cache, payload, jnp.int32(bid))
+            self.allocator.register(
+                bid, hbs[i].key, parent_key=hbs[i].parent_key
+            )
+            blocks.append(bid)
+            n_done += 1
+        wall = time.monotonic() - t0
+        self.offload.recall_wall_s += wall
+        self.blocks_recalled += n_done
+        self.tokens_recalled += n_done * self.block_size
+        self._recall_units += self.recall_cost * n_done
+        if self.obs.enabled:
+            self.obs.tracer.instant(
+                "blocks_recalled", cat="offload", blocks=n_done)
+            self.obs.metrics.histogram(
+                "offload_recall_seconds",
+                "wall time of host-tier block recalls").observe(wall)
+        return cache
+
+    def set_pool_clock(self, clock) -> None:
+        """Point the allocator trie and host tier at an external monotone
+        clock (the scheduler's virtual token clock).  Remembered across
+        ``new_cache`` resets, which rebuild both tiers."""
+        self._pool_clock = clock
+        self.allocator.set_clock(clock)
+        if self.offload is not None:
+            self.offload.set_clock(clock)
+
+    def take_recall_units(self) -> float:
+        """Drain the virtual-clock cost of recalls since the last call.
+        The scheduler charges it to vtime: recalling a block costs
+        ``recall_cost`` units against the ``block_size`` prefill-token
+        units it saved."""
+        u, self._recall_units = self._recall_units, 0.0
+        return u
+
     def try_prefix_replay(self, cache, tokens, slot: int):
         """Full-prompt prefix hit: every block resident AND the first-token
         logits cached under the full-prompt key — place the slot with zero
@@ -505,11 +674,17 @@ class Engine:
                     "Engine.blocks_needed() <= Engine.free_blocks first"
                 )
             blocks.append(bid)
+        # demote evicted prefix blocks before the scatter overwrites them
+        cache = self._drain_evictions(cache)
         batch = {"tokens": tokens_1xS, "lengths": jnp.array([length], jnp.int32)}
         if extras:
             batch.update(extras)
         logits, single = self._prefill(params, batch)
         self.prefill_count += 1
+        # monolithic prefill recomputes the whole prompt (the scatter only
+        # skips *writes* for hit blocks) — chunked admission is the path
+        # that converts prefix/host hits into skipped FLOPs
+        self.tokens_recomputed += length
         row[:nb] = blocks
         wmask = np.zeros((self.n_btab,), bool)
         wmask[n_hit:nb] = True
@@ -519,7 +694,9 @@ class Engine:
             jnp.int32(length),
         )
         for i in range(n_hit, nb):
-            self.allocator.register(blocks[i], keys[i])
+            self.allocator.register(
+                blocks[i], keys[i], parent_key=keys[i - 1] if i else None
+            )
         if full_key is not None:
             self._prompt_logits[full_key] = np.asarray(logits)
             while len(self._prompt_logits) > MAX_CACHED_PROMPT_LOGITS:
@@ -566,7 +743,15 @@ class Engine:
         # at least one token to produce logits): drop tail hits
         while flags and len(flags) * self.block_size >= L:
             flags.pop()
-        end = min(len(flags) * self.block_size + chunk_tokens, L)
+        # host-tier extension: each recalled block needs a fresh device
+        # block (counted inside nb - len(flags) below, since the resume
+        # point moves past them)
+        n_host = 0
+        if self.offload is not None:
+            ext = self.offload.match_extension(keys, len(flags))
+            cap = (L - 1) // self.block_size - len(flags)
+            n_host = min(len(ext), max(0, cap))
+        end = min((len(flags) + n_host) * self.block_size + chunk_tokens, L)
         nb = -(-end // self.block_size)
         return (nb - len(flags)) + sum(flags)
 
@@ -605,7 +790,12 @@ class Engine:
             blocks.append(bid)
         while blocks and len(blocks) * self.block_size >= L:
             self.allocator.free(blocks.pop())
+        # where the device trie runs out, the host tier may extend the
+        # match: recalled blocks push the resume point further right
+        cache = self._recall_extension(cache, keys, blocks, L)
         resume = len(blocks) * self.block_size
+        if resume:
+            self.prefix_partial_hits += 1
         self._seq[slot] = SeqBlocks(blocks=blocks, length=resume)
         self._chunk_keys[slot] = keys
         return resume, cache
@@ -650,18 +840,29 @@ class Engine:
                     return False, None, cache
                 fresh.append(bid)
             seq.blocks.extend(fresh)
+            if fresh:
+                # demote evicted prefix blocks before this chunk's appends
+                # overwrite the reclaimed rows
+                cache = self._drain_evictions(cache)
             row = np.zeros((self.n_btab,), np.int32)
             row[: len(seq.blocks)] = seq.blocks
             batch["table_row"] = jnp.asarray(row)
         logits, cache = self._chunk_fn(final)(params, batch, cache)
         if self.paged:
             seq.length = end
+            self.tokens_recomputed += n
             keys = self._chunk_keys[slot]
             for j in range(end // self.block_size):
-                self.allocator.register(seq.blocks[j], keys[j])
+                self.allocator.register(
+                    seq.blocks[j], keys[j],
+                    parent_key=keys[j - 1] if j else None,
+                )
             if final:
                 if L % self.block_size:
-                    self.allocator.register(seq.blocks[-1], keys[-1])
+                    self.allocator.register(
+                        seq.blocks[-1], keys[-1],
+                        parent_key=keys[-2] if len(keys) > 1 else None,
+                    )
                 self.prefill_count += 1
                 self._prompt_logits[keys[-1]] = np.asarray(logits)
                 while len(self._prompt_logits) > MAX_CACHED_PROMPT_LOGITS:
@@ -698,6 +899,8 @@ class Engine:
                 return False, cache
             # recycled blocks carry stale K/V and group stats; the append-
             # time metadata update merges with what's resident, so scrub
+            # (demoting any evicted prefix block first — zeroing destroys it)
+            cache = self._drain_evictions(cache)
             cache = self._zero_block(cache, jnp.int32(bid))
             seq.blocks.append(bid)
             cache = self._set_table_entry(
@@ -709,6 +912,7 @@ class Engine:
                 bid = self.allocator.alloc()
                 if bid is None:
                     return False, cache
+                cache = self._drain_evictions(cache)
                 cache = self._copy_block(cache, jnp.int32(b), jnp.int32(bid))
                 self.allocator.free(b)
                 self.allocator.cow_copies += 1
@@ -747,7 +951,7 @@ class Engine:
     def engine_stats(self) -> dict:
         """Engine-level serving counters under their canonical (registry)
         names — the companion of ``BlockAllocator.stats()``."""
-        return dict(
+        out = dict(
             engine_prefills=self.prefill_count,
             engine_prefix_hits=self.prefix_hits,
             engine_budget_downshifts=self.downshifts,
@@ -755,6 +959,14 @@ class Engine:
             engine_blocks_shed=self.blocks_shed,
             engine_current_budget=self.current_budget,
         )
+        if self.paged:
+            out.update(
+                engine_prefix_partial_hits=self.prefix_partial_hits,
+                engine_blocks_recalled=self.blocks_recalled,
+                engine_tokens_recalled=self.tokens_recalled,
+                engine_tokens_recomputed=self.tokens_recomputed,
+            )
+        return out
 
     def pool_stats(self) -> dict:
         """Thin snapshot shim over the canonical accounting: legacy keys
@@ -769,6 +981,12 @@ class Engine:
             budget_downshifts=self.downshifts,
             budget_restores=self.restores,
             blocks_shed=self.blocks_shed,
+            # parked-block aging (trie clock units) — passed through under
+            # the canonical names; the legacy aliases predate the trie
+            pool_parked_age_p50=canon["pool_parked_age_p50"],
+            pool_parked_age_p90=canon["pool_parked_age_p90"],
+            pool_parked_age_max=canon["pool_parked_age_max"],
+            pool_ttl_evictions=canon["pool_ttl_evictions"],
         )
         return out
 
@@ -781,6 +999,8 @@ class Engine:
         m = self.obs.metrics
         if self.paged:
             m.set_gauges(self.allocator.stats())
+            if self.offload is not None:
+                m.set_gauges(self.offload.stats())
         m.set_gauges(self.engine_stats())
 
     # --------------------------------------------- graceful budget degradation
@@ -937,7 +1157,7 @@ class Engine:
             if (
                 b != NULL_BLOCK
                 and self.allocator.ref[b] == 1
-                and self.allocator._hash_of.get(b) is None
+                and self.allocator.key_of(b) is None
             ):
                 return True, self._corrupt_meta(cache, jnp.int32(b))
         return False, cache
@@ -961,6 +1181,8 @@ class Engine:
                 set_table_entry=self._set_table_entry,
                 copy_block=self._copy_block,
                 zero_block=self._zero_block,
+                read_block=self._read_block,
+                write_block=self._write_block,
             )
         return {name: int(fn._cache_size()) for name, fn in fns.items()}
 
@@ -977,7 +1199,15 @@ class Engine:
             for b in seq.blocks:
                 if b != NULL_BLOCK:
                     owners[b] += 1
-        self.allocator.audit(dict(owners))
+        host_keys = None
+        if self.offload is not None:
+            errs = self.offload.audit()
+            if errs:
+                raise AllocatorAuditError(
+                    "host tier audit failed: " + "; ".join(errs)
+                )
+            host_keys = self.offload.keys()
+        self.allocator.audit(dict(owners), host_keys=host_keys)
 
     def decode(self, params, tokens, cache, active=None, rng=None):
         """One decode step for all slots; inactive slots don't advance.

@@ -25,6 +25,12 @@ Fault classes (:data:`FAULT_KINDS`):
 ``cancel``
     The request is cancelled mid-flight (queued, mid-chunked-prefill, or
     decoding) through the ``cancel()`` API.
+``offload_drop``
+    ``count`` LRU entries of the engine's host-DRAM offload tier are lost
+    (models host memory reclaim / a failed D2H transfer).  Recalls that
+    would have hit now miss and fall back to recomputing the prefix —
+    outputs must stay bit-identical; a no-op on engines without an
+    offload tier.
 
 Injection points are either given explicitly as :class:`FaultSpec`s or
 drawn from a seeded rng (:meth:`ServingFaultInjector.random`), so every
@@ -36,7 +42,10 @@ import dataclasses
 
 import numpy as np
 
-FAULT_KINDS = ("alloc_fail", "poison_logits", "corrupt_metadata", "cancel")
+FAULT_KINDS = (
+    "alloc_fail", "poison_logits", "corrupt_metadata", "cancel",
+    "offload_drop",
+)
 
 
 @dataclasses.dataclass
@@ -131,6 +140,15 @@ class ServingFaultInjector:
                 if eng.paged:
                     eng.allocator.fail_next(spec.count)
                 self._mark(i, spec, sched)
+            elif spec.kind == "offload_drop":
+                off = getattr(eng, "offload", None)
+                if off is not None:
+                    n = off.drop_lru(spec.count)
+                    sched.health.record_event(
+                        "offload_drop", reason="fault-injected host loss",
+                        dropped=n,
+                    )
+                self._mark(i, spec, sched)  # no-op without a host tier
             elif spec.kind == "corrupt_metadata":
                 slot = sched.slot_of(spec.rid)
                 if slot is None:

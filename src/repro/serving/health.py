@@ -120,9 +120,20 @@ class HealthMonitor:
         self.events.append(ev)
         return ev
 
+    def event_counts(self) -> dict[str, int]:
+        """Events-by-kind histogram of the structured log — the quick
+        answer to "did the offload_drop / quarantine / prefill_abort
+        machinery actually fire in this run?"."""
+        out: dict[str, int] = {}
+        for ev in self.events:
+            out[ev["kind"]] = out.get(ev["kind"], 0) + 1
+        return out
+
     def maybe_audit(self, engine, step: int) -> bool:
         """Run the engine's allocator audit every ``audit_every`` decode
-        steps (no-op when disabled or the engine is not paged).  Raises
+        steps (no-op when disabled or the engine is not paged; for a
+        two-tier engine the audit covers the device pool AND the host
+        offload tier, including cross-tier key disjointness).  Raises
         ``AllocatorAuditError`` on an invariant violation."""
         if not self.audit_every or step == 0 or step % self.audit_every:
             return False

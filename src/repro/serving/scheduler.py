@@ -125,6 +125,11 @@ class ContinuousScheduler:
         # from (DESIGN.md §Observability).
         self.obs = engine.obs
         self.obs.tracer.set_clock(lambda: self.vtime)
+        if engine.paged:
+            # two-tier KV reuse rides the same virtual clock: parked-block
+            # TTL aging and host-tier timestamps become deterministic
+            # functions of the trace, not of wall time
+            engine.set_pool_clock(lambda: self.vtime)
         self._step_tokens: list[tuple[int, int]] = []   # (rid, token)
         self.outcomes: dict[int, RequestOutcome] = {}
         self._step_retired: list[RequestOutcome] = []
@@ -665,6 +670,15 @@ class ContinuousScheduler:
         # pressure cleared? step back up the degradation ladder
         if self.engine.paged and self.engine.maybe_restore_budget():
             progressed = True
+        if self.engine.paged and self._cache is not None:
+            # TTL sweep on the virtual clock *before* admission, so blocks
+            # freed by aging are available to this step's admission work
+            swept, self._cache = self.engine.sweep_parked(self._cache)
+            if swept and self.obs.enabled:
+                self.obs.tracer.instant("ttl_sweep", cat="pool", expired=swept)
+                self.obs.metrics.counter(
+                    "pool_ttl_evictions_total",
+                    "parked prefix blocks expired by TTL").inc(swept)
         if self.chunk_tokens is None:
             before = (len(self.running), len(self._queue), self.insert_retries)
             self._cache = self._admit(self._queue, self._cache, self._cur)
@@ -674,6 +688,16 @@ class ContinuousScheduler:
             )
         else:
             progressed |= self._chunk_admission_step()
+        if self.engine.paged:
+            # host-tier recalls performed by this step's admission work
+            # charge the virtual clock (far cheaper than the block_size
+            # prefill tokens each recalled block saved)
+            units = self.engine.take_recall_units()
+            if units:
+                self.vtime += units
+                if self.obs.enabled:
+                    self.obs.tracer.instant(
+                        "recall_charge", cat="offload", units=units)
         if self.running:
             if self.engine.paged:
                 self._cache = self._ensure_append_capacity(self._queue, self._cache)
@@ -756,9 +780,12 @@ class ContinuousScheduler:
                                  "queued": len(self._queue)})
         if self.engine.paged:
             a = self.engine.allocator
-            tr.counter("pool", {"in_use": a.n_in_use,
-                                "free": len(a._free),
-                                "cached": len(a._free_cached)})
+            track = {"in_use": a.n_in_use,
+                     "free": len(a._free),
+                     "cached": a.n_parked}
+            if self.engine.offload is not None:
+                track["host"] = len(self.engine.offload)
+            tr.counter("pool", track)
         self.engine.sample_pool_gauges()
         self.obs.metrics.set_gauges(dict(
             sched_steps=self.steps,

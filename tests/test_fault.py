@@ -131,15 +131,26 @@ def serve_setup():
     fresh session — cache, allocator, budget — on every call)."""
     cfg = reduced_config("olmo-1b")
     slab_bundle = build_model(cfg, _serving_policy("slab"))
+    paged_bundle = build_model(cfg, _serving_policy("paged", pool_blocks=40))
     params = slab_bundle.init(jax.random.PRNGKey(0))
     engines = {
         "slab": Engine(slab_bundle, n_slots=3, capacity=64),
-        "paged": Engine(
-            build_model(cfg, _serving_policy("paged", pool_blocks=40)),
-            n_slots=3, capacity=64,
+        "paged": Engine(paged_bundle, n_slots=3, capacity=64),
+        # two-tier engine: host offload attached + aggressive TTL so the
+        # chaos trace actually demotes blocks (and the offload_drop fault
+        # has something to lose); driven chunked so re-admissions recall
+        "offload": Engine(
+            paged_bundle, n_slots=3, capacity=64,
+            offload_blocks=16, prefix_ttl=25.0,
         ),
     }
     return cfg, params, engines
+
+
+def _sched_kwargs(layout):
+    # the offload row runs chunked: host-tier recall only happens on the
+    # begin_chunked resume path (monolithic prefill recomputes anyway)
+    return {"chunk_tokens": 4} if layout == "offload" else {}
 
 
 def _chaos_reqs():
@@ -154,14 +165,18 @@ _CHAOS_REF = {}  # layout → fault-free reference outputs (per-module cache)
 
 def _reference(engines, params, layout):
     if layout not in _CHAOS_REF:
-        sched = ContinuousScheduler(engines[layout], params, audit_every=4)
+        sched = ContinuousScheduler(
+            engines[layout], params, audit_every=4, **_sched_kwargs(layout)
+        )
         _CHAOS_REF[layout] = dict(sched.run(_chaos_reqs()))
     return _CHAOS_REF[layout]
 
 
-@pytest.mark.parametrize("layout", ["slab", "paged"])
+@pytest.mark.parametrize("layout", ["slab", "paged", "offload"])
 @pytest.mark.parametrize(
-    "kind", ["alloc_fail", "poison_logits", "corrupt_metadata", "cancel"]
+    "kind",
+    ["alloc_fail", "poison_logits", "corrupt_metadata", "cancel",
+     "offload_drop"],
 )
 def test_serving_chaos_matrix(serve_setup, layout, kind):
     """Every injector fault class, on both cache layouts: the scheduler
@@ -174,7 +189,9 @@ def test_serving_chaos_matrix(serve_setup, layout, kind):
 
     target = 1
     inj = ServingFaultInjector([FaultSpec(kind, step=3, rid=target, count=2)])
-    sched = ContinuousScheduler(eng, params, injector=inj, audit_every=4)
+    sched = ContinuousScheduler(
+        eng, params, injector=inj, audit_every=4, **_sched_kwargs(layout)
+    )
     with warnings.catch_warnings():
         warnings.simplefilter("ignore")
         res = sched.run(_chaos_reqs())
@@ -194,9 +211,12 @@ def test_serving_chaos_matrix(serve_setup, layout, kind):
         # the victim's tokens stop at the fault, the rest ran to max_new
         assert len(res[target]) < len(ref[target])
     else:
-        # alloc_fail / corrupt_metadata degrade, they don't kill
+        # alloc_fail / corrupt_metadata / offload_drop degrade, they
+        # don't kill
         assert res.outcomes[target].status == "finished"
     if eng.paged:
+        # cross-tier audit: zero leaked / double-owned blocks across the
+        # device pool AND the host tier after every chaos scenario
         eng.audit()
         assert eng.allocator.n_in_use == 0
 
@@ -207,12 +227,14 @@ def test_serving_chaos_seeded(serve_setup, seed):
     whatever the draw, the scheduler drains, every request retires with a
     structured outcome, and the allocator audits clean."""
     _, params, engines = serve_setup
-    for layout in ("slab", "paged"):
+    for layout in ("slab", "paged", "offload"):
         eng = engines[layout]
         inj = ServingFaultInjector.random(
             seed, rids=[0, 1, 2], n_faults=3, step_lo=1, step_hi=8
         )
-        sched = ContinuousScheduler(eng, params, injector=inj, audit_every=3)
+        sched = ContinuousScheduler(
+            eng, params, injector=inj, audit_every=3, **_sched_kwargs(layout)
+        )
         with warnings.catch_warnings():
             warnings.simplefilter("ignore")
             res = sched.run(_chaos_reqs())

@@ -1,0 +1,349 @@
+"""Two-tier KV reuse (DESIGN.md §KV reuse tiers): the radix-trie prefix
+cache, the host-DRAM offload tier, and their engine-level round trip.
+
+The trie's randomized/property suite lives in test_prefix_tree_prop.py
+(hypothesis, optional dependency); this module is the deterministic
+coverage — trie lifecycle/eviction semantics, host-tier accounting, and
+the acceptance-critical bit-identity checks: a block that is offloaded
+and recalled must read back byte-for-byte, and an offload-enabled engine
+must reproduce the plain paged engine's outputs while recomputing
+strictly fewer prompt tokens under pool pressure.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import reduced_config
+from repro.core.policy import PolicyConfig
+from repro.kvcache.offload import (
+    HostOffloadTier,
+    double_buffered_puts,
+    payload_nbytes,
+)
+from repro.kvcache.paged import BlockAllocator, block_hash_chain
+from repro.kvcache.prefix_tree import PrefixTree
+from repro.models import build_model
+from repro.serving import ContinuousScheduler, Engine, Request
+
+
+# ======================================================================
+# PrefixTree semantics
+# ======================================================================
+
+def _chain(tree, toks, bs=4, first_bid=1):
+    """Insert the full key chain of ``toks``; returns its keys."""
+    keys = block_hash_chain(toks, bs)
+    bid = first_bid
+    for j, key in enumerate(keys):
+        if key in tree:
+            continue
+        tree.insert(key, bid, parent_key=keys[j - 1] if j else None)
+        bid += 1
+    return keys
+
+
+def test_trie_longest_prefix_walk():
+    tree = PrefixTree()
+    ka = _chain(tree, list(range(12)), first_bid=1)        # 3 blocks
+    kb = _chain(tree, list(range(8)) + [99, 99, 99, 99], first_bid=10)
+    # shared first 2 blocks: chain B reused keys ka[0:2]
+    assert kb[:2] == ka[:2] and kb[2] != ka[2]
+    assert tree.match_longest(ka) == [1, 2, 3]
+    assert tree.match_longest(kb) == [1, 2, 10]
+    # a divergent third chain matches only the shared prefix
+    kc = block_hash_chain(list(range(8)) + [7, 7, 7, 7], 4)
+    assert tree.match_longest(kc) == [1, 2]
+    assert tree.audit() == []
+
+
+def test_trie_leaf_first_lru_eviction():
+    tree = PrefixTree()
+    t = [0.0]
+    tree.set_clock(lambda: t[0])
+    keys = _chain(tree, list(range(12)))                   # bids 1, 2, 3
+    # park in root-first order — LRU order would pick bid 1, but evicting
+    # an interior node strands its cached descendants: leaves win
+    for bid in (1, 2, 3):
+        tree.park(bid)
+        t[0] += 1.0
+    assert tree.pop_eviction()[0] == 3                     # the only leaf
+    assert tree.pop_eviction()[0] == 2                     # new leaf
+    bid, key, parent_key = tree.pop_eviction()
+    assert (bid, key, parent_key) == (1, keys[0], None)
+    assert tree.pop_eviction() is None
+    assert tree.leaf_evictions == 3 and tree.interior_evictions == 0
+    assert len(tree) == 0 and tree.audit() == []
+
+
+def test_trie_interior_fallback_and_reparent():
+    tree = PrefixTree()
+    keys = _chain(tree, list(range(12)))                   # 1 → 2 → 3
+    tree.park(2)                                           # park only bid 2
+    # bid 2 is interior (child bid 3 in use): fallback evicts it anyway
+    bid, key, parent_key = tree.pop_eviction()
+    assert (bid, key, parent_key) == (2, keys[1], keys[0])
+    assert tree.interior_evictions == 1
+    # the orphaned child re-hung on its grandparent
+    assert tree.reparented == 1
+    node3 = tree.node_of(3)
+    assert node3.parent_key == keys[0]
+    # the walk now stops at the removed key
+    assert tree.match_longest(keys) == [1]
+    assert tree.audit() == []
+
+
+def test_trie_ttl_expiry_deepest_first():
+    tree = PrefixTree()
+    t = [0.0]
+    tree.set_clock(lambda: t[0])
+    _chain(tree, list(range(12)))
+    for bid in (1, 2, 3):
+        tree.park(bid)
+    t[0] = 10.0
+    assert tree.expired(20.0) == []
+    # deepest-first: chains unwind leaf-to-root
+    assert tree.expired(5.0) == [3, 2, 1]
+    ages = sorted(tree.parked_ages())
+    assert ages == [10.0, 10.0, 10.0]
+
+
+def test_trie_park_revive_and_first_writer_wins():
+    tree = PrefixTree()
+    assert tree.insert(42, 1) is True
+    assert tree.insert(42, 2) is False                     # key taken
+    with pytest.raises(ValueError):
+        tree.insert(43, 1)                                 # bid taken
+    tree.park(1)
+    assert tree.n_parked == 1
+    tree.revive(1)
+    assert tree.n_parked == 0 and tree.get(42) == 1
+    assert tree.audit() == []
+
+
+# ======================================================================
+# Trie-backed allocator: equivalence with the old chained-hash matcher
+# ======================================================================
+
+def test_allocator_full_prompt_hit_equivalence():
+    """A full chain registered through the allocator behaves exactly like
+    the flat chained-hash map on full-prompt hits: peek reports every
+    block hit, lookup revives the same bids, blocks_needed charges only
+    the revivals."""
+    a = BlockAllocator(10, 8)
+    toks = list(range(28))                                 # 4 blocks (1 partial)
+    keys = block_hash_chain(toks, 8)
+    bids = [a.alloc() for _ in keys]
+    for j, (bid, key) in enumerate(zip(bids, keys)):
+        a.register(bid, key, parent_key=keys[j - 1] if j else None)
+    for bid in bids:
+        a.free(bid)                                        # all park
+    assert a.n_parked == len(keys)
+    assert a.peek(keys) == (len(keys), len(keys))
+    assert a.blocks_needed(len(toks), keys) == len(keys)   # revivals charged
+    assert [a.lookup(k) for k in keys] == bids             # same blocks back
+    assert a.n_in_use == len(keys)
+    for bid in bids:
+        a.free(bid)
+    a.audit()
+
+
+def test_allocator_ttl_sweep_and_age_percentiles():
+    t = [0.0]
+    a = BlockAllocator(10, 8, park_ttl=5.0)
+    a.set_clock(lambda: t[0])
+    a.record_evictions = True
+    keys = block_hash_chain(list(range(24)), 8)
+    bids = [a.alloc() for _ in keys]
+    for j, (bid, key) in enumerate(zip(bids, keys)):
+        a.register(bid, key, parent_key=keys[j - 1] if j else None)
+    for bid in bids:
+        a.free(bid)
+    t[0] = 3.0
+    st = a.stats()
+    assert st["pool_parked_age_p50"] == 3.0 == st["pool_parked_age_max"]
+    assert a.expire_parked() == 0                          # too young
+    t[0] = 6.0
+    assert a.expire_parked() == 3
+    evs = a.take_evicted()
+    assert [e.reason for e in evs] == ["ttl"] * 3
+    # deepest-first: parent linkage preserved in the log
+    assert [e.key for e in evs] == [keys[2], keys[1], keys[0]]
+    assert [e.parent_key for e in evs] == [keys[1], keys[0], None]
+    assert a.stats()["pool_ttl_evictions"] == 3
+    assert a.take_evicted() == []                          # drained
+    a.audit()
+
+
+def test_allocator_cross_tier_audit_rejects_double_ownership():
+    from repro.kvcache.paged import AllocatorAuditError
+
+    a = BlockAllocator(6, 8)
+    bid = a.alloc()
+    a.register(bid, 1234)
+    a.audit(host_keys={999})                               # disjoint: fine
+    with pytest.raises(AllocatorAuditError, match="both tiers"):
+        a.audit(host_keys={1234})
+    a.free(bid)
+
+
+# ======================================================================
+# Host offload tier
+# ======================================================================
+
+def _payload(seed, shape=(2, 4, 3)):
+    rng = np.random.default_rng(seed)
+    return {
+        "front": {"k": rng.standard_normal(shape, np.float32)},
+        "rest": {"v": rng.standard_normal(shape, np.float32)},
+    }
+
+
+def test_offload_tier_save_pop_lru():
+    tier = HostOffloadTier(capacity_blocks=2)
+    p = {k: _payload(k) for k in (1, 2, 3)}
+    assert tier.save(1, None, p[1]) is True
+    assert tier.save(1, None, p[1]) is False               # resident: refused
+    assert tier.save(2, 1, p[2]) is True
+    assert tier.nbytes == payload_nbytes(p[1]) + payload_nbytes(p[2])
+    tier.save(3, 2, p[3])                                  # over capacity
+    assert tier.lru_evictions == 1 and 1 not in tier       # key 1 was LRU
+    assert tier.match_extension([2, 3, 7], 0) == [2, 3]
+    hb = tier.pop(2)
+    assert hb.parent_key == 1
+    np.testing.assert_array_equal(hb.payload["rest"]["v"], p[2]["rest"]["v"])
+    assert tier.pop(2) is None                             # ownership moved
+    assert tier.drop_lru(5) == 1                           # only key 3 left
+    assert len(tier) == 0 and tier.nbytes == 0
+    assert tier.audit() == []
+
+
+def test_offload_tier_disabled_at_zero_capacity():
+    tier = HostOffloadTier(0)
+    assert tier.save(1, None, _payload(1)) is False
+    assert len(tier) == 0
+
+
+def test_double_buffered_puts_preserves_order_and_values():
+    entries = [(i, _payload(i)) for i in range(5)]
+    out = list(double_buffered_puts(iter(entries)))
+    assert [bid for bid, _ in out] == [0, 1, 2, 3, 4]
+    for (bid, dev), (_, host) in zip(out, entries):
+        for a, b in zip(jax.tree.leaves(dev), jax.tree.leaves(host)):
+            np.testing.assert_array_equal(np.asarray(a), b)
+    assert list(double_buffered_puts(iter([]))) == []
+
+
+# ======================================================================
+# Engine-level round trip: offload → recall must be bit-identical, and
+# the offload engine must beat the plain paged engine on recomputation
+# ======================================================================
+
+def _paged_policy(pool_blocks, **kw):
+    return PolicyConfig(
+        kind="fier", budget=16, group=8, skip_layers=1, sink=2, recent=4,
+        pipeline="reference", layout="paged", block_size=8,
+        pool_blocks=pool_blocks, **kw,
+    )
+
+
+@pytest.fixture(scope="module")
+def offload_setup():
+    cfg = reduced_config("olmo-1b")
+    bundle = build_model(cfg, _paged_policy(pool_blocks=14))
+    params = bundle.init(jax.random.PRNGKey(0))
+    return cfg, bundle, params
+
+
+def test_offload_roundtrip_bit_identical(offload_setup):
+    """Insert a prompt, park its blocks, age them onto the host tier via
+    TTL, recall them through begin_chunked — every recalled pool row must
+    equal its pre-eviction snapshot byte-for-byte."""
+    import jax.numpy as jnp
+
+    _, bundle, params = offload_setup
+    clock = [0.0]
+    eng = Engine(bundle, n_slots=2, capacity=64,
+                 offload_blocks=8, prefix_ttl=5.0)
+    eng.set_pool_clock(lambda: clock[0])
+    cache = eng.new_cache()
+    toks = np.arange(1, 21, dtype=np.int32)                # 20 toks, 3 blocks
+    keys = block_hash_chain([int(t) for t in toks], eng.block_size)
+    _, cache = eng.insert(params, cache, jnp.asarray(toks[None]),
+                          len(toks), slot=0)
+    bids = list(eng._seq[0].blocks)
+    snap = {
+        k: jax.device_get(eng._read_block(cache, jnp.int32(b)))
+        for k, b in zip(keys, bids)
+    }
+    cache = eng.release_slot(cache, 0)                     # all park
+    clock[0] = 10.0                                        # past the TTL
+    swept, cache = eng.sweep_parked(cache)
+    assert swept == len(keys)
+    assert eng.offload is not None and set(keys) <= eng.offload.keys()
+    # the host copy equals the pre-eviction device snapshot
+    for k in keys:
+        for a, b in zip(jax.tree.leaves(eng.offload._store[k].payload),
+                        jax.tree.leaves(snap[k])):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # recall: the chunked resume extends through the host tier
+    resume, cache = eng.begin_chunked(cache, 0, toks)
+    n_full = (len(toks) - 1) // eng.block_size             # final chunk computes
+    assert resume == n_full * eng.block_size
+    assert eng.blocks_recalled == n_full
+    assert eng.take_recall_units() == pytest.approx(eng.recall_cost * n_full)
+    for j, bid in enumerate(eng._seq[0].blocks):
+        got = jax.device_get(eng._read_block(cache, jnp.int32(bid)))
+        for a, b in zip(jax.tree.leaves(got), jax.tree.leaves(snap[keys[j]])):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # recalled keys moved back to the device tier — exactly one owner
+    assert not (eng.offload.keys() & set(keys[:n_full]))
+    eng.audit()
+    cache = eng.abort_chunked(cache, 0)
+    eng.audit()
+    assert eng.allocator.n_in_use == 0
+
+
+def test_offload_engine_matches_baseline_with_fewer_recomputed_tokens(
+    offload_setup,
+):
+    """Acceptance: on a shared-prefix trace under pool pressure the
+    two-tier engine produces bit-identical outputs to the plain paged
+    engine while recomputing strictly fewer prompt tokens."""
+    cfg, _, params = offload_setup
+    bundle = build_model(cfg, _paged_policy(pool_blocks=10))
+
+    def trace():
+        shared = list(range(7, 23))                        # 16-token prefix
+        reqs = [
+            Request(rid=i, tokens=shared + [40 + i] * 4, max_new=6)
+            for i in range(2)                              # warm the prefix
+        ]
+        for i in range(2, 6):                              # distinct fillers
+            base = 60 + 10 * i                             # age the prefix out
+            reqs.append(
+                Request(rid=i, tokens=list(range(base, base + 20)), max_new=6)
+            )
+        reqs += [
+            Request(rid=i, tokens=shared + [50 + i] * 4, max_new=6)
+            for i in (6, 7)                                # prefix returns
+        ]
+        return reqs
+
+    # both engines run the same TTL so parked blocks age out identically;
+    # only the offload engine can demote them to host instead of losing them
+    outs, recomputed = {}, {}
+    for name, kw in (
+        ("base", dict(prefix_ttl=8.0)),
+        ("offload", dict(prefix_ttl=8.0, offload_blocks=12)),
+    ):
+        eng = Engine(bundle, n_slots=2, capacity=64, **kw)
+        sched = ContinuousScheduler(eng, params, chunk_tokens=8)
+        outs[name] = dict(sched.run(trace()))
+        recomputed[name] = eng.tokens_recomputed
+        if name == "offload":
+            recalled = eng.blocks_recalled
+        eng.audit()
+        assert eng.allocator.n_in_use == 0
+    assert outs["offload"] == outs["base"]                 # equal fidelity
+    assert 0 < recomputed["offload"] < recomputed["base"]
+    assert recalled > 0                                    # via real recalls

@@ -1,0 +1,235 @@
+"""Property-based tests (hypothesis) for the radix-trie prefix cache and
+the trie-backed block allocator.
+
+Same convention as test_property.py: the module skips when hypothesis is
+absent (declared in pyproject.toml, installed in CI).  The deterministic
+trie/offload coverage lives in test_prefix_tree.py.
+"""
+from collections import Counter
+
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+from hypothesis.stateful import (  # noqa: E402
+    RuleBasedStateMachine,
+    initialize,
+    invariant,
+    precondition,
+    rule,
+)
+
+from repro.kvcache.paged import BlockAllocator, block_hash_chain  # noqa: E402
+from repro.kvcache.prefix_tree import PrefixTree  # noqa: E402
+
+BS = 8  # FIER side-car bit-packing requires block_size % 8 == 0
+# small alphabet + bounded length → real prefix collisions between prompts
+PROMPTS = st.lists(
+    st.lists(st.integers(0, 2), min_size=1, max_size=6 * BS),
+    min_size=1, max_size=8,
+)
+
+
+def _flat_insert(tree, flat, toks, next_bid):
+    """Insert ``toks``'s chain into both the trie and a reference flat
+    map (the pre-trie chained-hash matcher)."""
+    keys = block_hash_chain(toks, BS)
+    for j, key in enumerate(keys):
+        if key in flat:
+            continue
+        assert tree.insert(key, next_bid[0],
+                           parent_key=keys[j - 1] if j else None)
+        flat[key] = next_bid[0]
+        next_bid[0] += 1
+    return keys
+
+
+@settings(max_examples=60, deadline=None)
+@given(PROMPTS)
+def test_trie_walk_equals_flat_map(prompts):
+    """∀ prompt sets: match_longest equals the flat chained-hash walk
+    (first-miss semantics), point lookups agree, and the trie audits
+    clean — the trie is a drop-in for the old matcher."""
+    tree, flat, next_bid = PrefixTree(), {}, [1]
+    for toks in prompts:
+        _flat_insert(tree, flat, toks, next_bid)
+    for toks in prompts:
+        keys = block_hash_chain(toks, BS)
+        expect = []
+        for k in keys:
+            if k not in flat:
+                break
+            expect.append(flat[k])
+        assert tree.match_longest(keys) == expect == [
+            tree.get(k) for k in keys[: len(expect)]
+        ]
+    assert len(tree) == len(flat)
+    assert tree.audit() == []
+
+
+@settings(max_examples=40, deadline=None)
+@given(PROMPTS, st.integers(0, 2**31 - 1))
+def test_eviction_drains_whole_trie_and_leaves_never_strand(prompts, seed):
+    """Park everything, then evict to exhaustion: every pop removes
+    exactly one node, a *leaf whenever any parked leaf exists* (so no
+    cached descendant is stranded while an evictable leaf remained), and
+    the trie ends empty with a clean audit after every step."""
+    import random
+
+    tree, flat, next_bid = PrefixTree(), {}, [1]
+    for toks in prompts:
+        _flat_insert(tree, flat, toks, next_bid)
+    rng = random.Random(seed)
+    bids = list(range(1, next_bid[0]))
+    rng.shuffle(bids)
+    for bid in bids:
+        tree.park(bid)
+    n = len(tree)
+    for i in range(n):
+        had_leaf = any(
+            node.is_leaf() for node in tree._parked.values()
+        )
+        before_interior = tree.interior_evictions
+        assert tree.pop_eviction() is not None
+        if had_leaf:
+            assert tree.interior_evictions == before_interior
+        assert len(tree) == n - i - 1
+        assert tree.audit() == []
+    assert tree.pop_eviction() is None
+
+
+@settings(max_examples=40, deadline=None)
+@given(PROMPTS)
+def test_full_prompt_hits_equal_chained_hash_matcher(prompts):
+    """Register every prompt through the allocator, release all refs,
+    then look each full chain up again: every prompt is a full hit onto
+    the exact blocks it registered — trie-backed lookup reproduces the
+    old flat matcher on full-prompt hits."""
+    a = BlockAllocator(256, BS)
+    registered = {}
+    for toks in prompts:
+        keys = block_hash_chain(toks, BS)
+        held = []
+        for j, key in enumerate(keys):
+            bid = a.lookup(key)
+            if bid is None:
+                bid = a.alloc()
+                a.register(bid, key, parent_key=keys[j - 1] if j else None)
+                registered[key] = bid
+            held.append(bid)
+        for bid in held:
+            a.free(bid)
+    for toks in prompts:
+        keys = block_hash_chain(toks, BS)
+        assert a.peek(keys)[0] == len(keys)
+        got = [a.lookup(k) for k in keys]
+        assert got == [registered[k] for k in keys]
+        for bid in got:
+            a.free(bid)
+    a.audit()
+
+
+class AllocatorMachine(RuleBasedStateMachine):
+    """Random alloc/free/register/lookup/TTL walks: after every rule the
+    allocator audits clean against the exact refs this model holds, and
+    block conservation (in_use + free + parked == usable) holds."""
+
+    def __init__(self):
+        super().__init__()
+        self.t = 0.0
+        self.a = BlockAllocator(12, BS, park_ttl=6.0)
+        self.a.set_clock(lambda: self.t)
+        self.a.record_evictions = True
+        self.held: list[int] = []
+        self.next_key = 0
+
+    @initialize()
+    def setup(self):
+        pass
+
+    @rule()
+    def tick(self):
+        self.t += 1.0
+
+    @rule()
+    def alloc(self):
+        bid = self.a.alloc()
+        if bid is not None:
+            assert self.a.ref[bid] == 1
+            self.held.append(bid)
+
+    @precondition(lambda self: self.held)
+    @rule(data=st.data())
+    def free(self, data):
+        i = data.draw(st.integers(0, len(self.held) - 1), label="free idx")
+        self.a.free(self.held.pop(i))
+
+    @precondition(lambda self: self.held)
+    @rule(data=st.data())
+    def register(self, data):
+        i = data.draw(st.integers(0, len(self.held) - 1), label="reg idx")
+        self.next_key += 1
+        self.a.register(self.held[i], self.next_key)
+
+    @precondition(lambda self: self.held)
+    @rule(data=st.data())
+    def lookup_held(self, data):
+        """Ref-count safety: looking up a held block's key returns that
+        block and bumps its ref."""
+        i = data.draw(st.integers(0, len(self.held) - 1), label="lookup idx")
+        key = self.a.key_of(self.held[i])
+        if key is not None:
+            before = self.a.ref[self.held[i]]
+            assert self.a.lookup(key) == self.held[i]
+            assert self.a.ref[self.held[i]] == before + 1
+            self.held.append(self.held[i])
+
+    @rule()
+    def ttl_sweep(self):
+        self.a.expire_parked()
+        self.a.take_evicted()
+
+    @invariant()
+    def audits_clean_and_conserved(self):
+        self.a.audit(dict(Counter(self.held)))
+        assert (
+            self.a.n_in_use + len(self.a._free) + self.a.n_parked
+            == self.a.usable
+        )
+        # an in-use block is never evictable
+        for bid in self.held:
+            assert bid not in self.a.tree._parked
+
+
+TestAllocatorMachine = AllocatorMachine.TestCase
+TestAllocatorMachine.settings = settings(
+    max_examples=40, stateful_step_count=60, deadline=None
+)
+
+
+@settings(max_examples=30, deadline=None)
+@given(PROMPTS, st.integers(1, 10))
+def test_ttl_eviction_is_deterministic(prompts, ttl):
+    """Two allocators driven through the identical script on the same
+    virtual clock expire the identical blocks in the identical order."""
+    logs = []
+    for _ in range(2):
+        t = [0.0]
+        a = BlockAllocator(128, BS, park_ttl=float(ttl))
+        a.set_clock(lambda: t[0])
+        a.record_evictions = True
+        log = []
+        for toks in prompts:
+            keys = block_hash_chain(toks, BS)
+            held = []
+            for j, key in enumerate(keys):
+                bid = a.lookup(key) or a.alloc()
+                a.register(bid, key, parent_key=keys[j - 1] if j else None)
+                held.append(bid)
+            for bid in held:
+                a.free(bid)
+            t[0] += 3.0
+            a.expire_parked()
+            log.extend((e.bid, e.key, e.reason) for e in a.take_evicted())
+        logs.append(log)
+    assert logs[0] == logs[1]
