@@ -32,8 +32,14 @@ blocks to drain, while a monolithic admission pays its whole prefill
 the same trace on a degradation-enabled engine under a fixed
 ``ServingFaultInjector`` schedule (cancel, poison, alloc-fail burst) plus
 an already-expired deadline, and gates zero leaked blocks at drain.
-Results go to ``BENCH_serve_trace.json`` (see benchmarks/persist.py;
-baseline checked by tools/check_bench_regression.py).
+With ``--devices N`` (the multi-device CI lane) a fourth pass replays
+the chunked trace on a mesh-sharded engine (DESIGN.md §Sharded serving)
+and gates bit-identical outputs plus zero leaked blocks; shard count and
+per-shard occupancy are recorded in the bench doc, and
+tools/check_bench_regression.py treats differing shard counts as
+distinct baselines.  Results go to ``BENCH_serve_trace.json`` (see
+benchmarks/persist.py; baseline checked by
+tools/check_bench_regression.py).
 
 ``--prefix-mix`` replays a prefix-heavy trace (two thirds of the
 requests share one of two 128-token family prefixes, with a
@@ -152,19 +158,43 @@ def prefix_mix_trace(seed: int, vocab: int) -> list[tuple[float, dict]]:
 
 def build_serving(pipeline: str, *, capacity: int, n_slots: int,
                   pool_blocks: int, block_size: int = 32,
-                  prefix_ttl: float | None = None, offload_blocks: int = 0):
+                  prefix_ttl: float | None = None, offload_blocks: int = 0,
+                  mesh=None, metrics=None):
     cfg = reduced_config("olmo-1b")
     pol = PolicyConfig(
         kind="fier", budget=64, group=32, skip_layers=1, sink=4, recent=32,
         pipeline=pipeline, layout="paged", block_size=block_size,
         pool_blocks=pool_blocks,
     )
+    if mesh is not None:
+        # sharded pool (DESIGN.md §Sharded serving): Engine.build owns the
+        # ShardSpec/DistConfig threading; params init is deterministic from
+        # (cfg, key) so the sharded engine's weights match the unsharded one
+        eng = Engine.build(
+            cfg, n_slots=n_slots, capacity=capacity, policy=pol,
+            obs=Observability(metrics=metrics), prefix_ttl=prefix_ttl,
+            offload_blocks=offload_blocks, mesh=mesh,
+        )
+        params = eng.bundle.init(jax.random.PRNGKey(0))
+        return cfg, params, eng
     bundle = build_model(cfg, pol)
     params = bundle.init(jax.random.PRNGKey(0))
     eng = Engine(bundle, n_slots=n_slots, capacity=capacity,
-                 obs=Observability(), prefix_ttl=prefix_ttl,
+                 obs=Observability(metrics=metrics), prefix_ttl=prefix_ttl,
                  offload_blocks=offload_blocks)
     return cfg, params, eng
+
+
+def device_mesh(devices: int):
+    """The bench's mesh shapes: 1 → single-device (no mesh), 2 → DP=2,
+    4 → DP=2 × TP=2 (axis names are the Engine.build contract)."""
+    if devices == 1:
+        return None
+    if devices == 2:
+        return jax.make_mesh((2,), ("data",))
+    if devices == 4:
+        return jax.make_mesh((2, 2), ("data", "model"))
+    raise SystemExit(f"--devices must be 1, 2 or 4, got {devices}")
 
 
 def replay(eng, sched, trace, outputs: dict | None = None):
@@ -281,10 +311,14 @@ def faulted_replay(cfg, params, bundle, *, seed: int, chunk_tokens: int,
 
 
 def smoke(out_dir: str, *, seed: int = 0, chunk_tokens: int = 256,
-          pipeline: str = "reference") -> dict:
+          pipeline: str = "reference", devices: int = 1) -> dict:
     """CI gate: chunked vs monolithic on the bursty trace; writes
     BENCH_serve_trace.json, the per-mode Perfetto traces and the shared
-    metrics-registry snapshot, and asserts the tentpole's latency claim."""
+    metrics-registry snapshot, and asserts the tentpole's latency claim.
+    ``devices > 1`` adds a sharded pass: the trace replayed on a
+    mesh-sharded engine must produce bit-identical outputs to a
+    single-device oracle with zero leaked blocks (the multi-device CI
+    lane's gate)."""
     cfg, params, eng = build_serving(pipeline, **SMOKE_ENGINE)
     trace = bursty_trace(seed, cfg.vocab)
     results = {}
@@ -304,6 +338,58 @@ def smoke(out_dir: str, *, seed: int = 0, chunk_tokens: int = 256,
     print("-- faulted: " + " ".join(
         f"{k}={v:.1f}" for k, v in sorted(fr.items())
     ))
+    sharded_res = shard_stats = None
+    n_dp = n_tp = 1
+    if devices > 1:
+        mesh = device_mesh(devices)
+        # per-shard usable block count matches the single-device pool's
+        # (pool-1 usable blocks): each DP shard serves its slot share at
+        # the single-device engine's per-slot pressure
+        n_dp = dict(zip(mesh.axis_names, mesh.devices.shape)).get("data", 1)
+        n_tp = dict(zip(mesh.axis_names, mesh.devices.shape)).get("model", 1)
+        shard_engine = dict(
+            SMOKE_ENGINE,
+            pool_blocks=(SMOKE_ENGINE["pool_blocks"] - 1) * n_dp + n_dp,
+        )
+        # the sharded engine shares the run's metrics registry, so its
+        # per-shard pool_*{shard=i} gauges land in the snapshot (and in
+        # obs_report's across-shard rollup)
+        _, sparams, seng = build_serving(
+            pipeline, **shard_engine, mesh=mesh, metrics=eng.obs.metrics)
+        souts: dict = {}
+        sched = ContinuousScheduler(seng, sparams, chunk_tokens=chunk_tokens)
+        sharded_res = replay(seng, sched, trace, outputs=souts)
+        seng.audit()
+        shard_stats = seng.allocator.shard_stats()
+        print(f"-- sharded (devices={devices} dp={n_dp} tp={n_tp}): " + " ".join(
+            f"{k}={v:.1f}" for k, v in sorted(sharded_res.items())
+        ))
+        # identity oracle: a single-device engine with the sharded run's
+        # aggregate usable blocks.  Preemption legitimately changes
+        # tokens (a preempted request resumes via re-prefill, whose
+        # next-token logits attend over the FULL prefix, while
+        # uninterrupted decode attends over the FIER-budgeted
+        # selection), so the gate compares two preemption-free
+        # schedules — asserted below so a future trace change that
+        # reintroduces preemption fails loudly instead of flaking
+        ref_engine = dict(
+            SMOKE_ENGINE,
+            pool_blocks=(SMOKE_ENGINE["pool_blocks"] - 1) * n_dp + 1,
+        )
+        _, rparams, reng = build_serving(pipeline, **ref_engine)
+        ref_outs: dict = {}
+        ref_res = replay(
+            reng, ContinuousScheduler(reng, rparams, chunk_tokens=chunk_tokens),
+            trace, outputs=ref_outs,
+        )
+        assert ref_res["preemptions"] == 0, (
+            "oracle replay preempted — grow the oracle pool", ref_res)
+        assert sharded_res["preemptions"] == 0, (
+            "sharded replay preempted — grow the per-shard pool", sharded_res)
+        # the sharded serving claim, gated: sharding changes WHERE blocks
+        # and heads live, never what is generated
+        assert souts == ref_outs, "sharded replay changed outputs"
+        assert sharded_res["leaked_blocks"] == 0, sharded_res
     ch, mo = results["chunked"], results["mono"]
     ratio = ch["vt_ttft_p99"] / max(mo["vt_ttft_p99"], 1e-9)
     tput_ratio = ch["vt_tokens_per_kunit"] / max(mo["vt_tokens_per_kunit"], 1e-9)
@@ -352,6 +438,22 @@ def smoke(out_dir: str, *, seed: int = 0, chunk_tokens: int = 256,
     summary("faulted_blocks_shed", fr["blocks_shed"])
     summary("faulted_insert_retries", fr["insert_retries"])
     summary("faulted_total_tokens", fr["total_tokens"])
+    if sharded_res is not None:
+        # shard count + per-shard occupancy ride in the bench doc (info:
+        # the hard gates are the output-identity/leak asserts above, and
+        # differing shard counts are distinct baselines to the checker)
+        summary("sharded_devices", devices)
+        summary("sharded_n_dp", n_dp)
+        summary("sharded_n_tp", n_tp)
+        summary("sharded_leaked_blocks", sharded_res["leaked_blocks"],
+                unit="blocks", better="lower", gate=True)
+        summary("sharded_vt_ttft_p99", sharded_res["vt_ttft_p99"],
+                unit="unit")
+        summary("sharded_mean_occupancy", sharded_res["mean_occupancy"])
+        for i, st in enumerate(shard_stats):
+            summary(f"sharded_shard{i}_peak_blocks", st["pool_peak_in_use"])
+            summary(f"sharded_shard{i}_prefix_block_hits",
+                    st["pool_prefix_block_hits"])
 
     snap_doc = eng.obs.metrics.write_snapshot_json(
         os.path.join(out_dir, "METRICS_serve_trace.json"))
@@ -364,6 +466,7 @@ def smoke(out_dir: str, *, seed: int = 0, chunk_tokens: int = 256,
         out_dir, "serve_trace",
         dict(seed=seed, trace="bursty", chunk_tokens=chunk_tokens,
              pipeline=pipeline, decode_token_cost=DECODE_TOKEN_COST,
+             devices=devices, shard_dp=n_dp, shard_tp=n_tp,
              **SMOKE_ENGINE),
         metrics,
     )
@@ -531,12 +634,22 @@ def main():
     ap.add_argument("--pipeline", default="reference",
                     choices=("reference", "one_pass"))
     ap.add_argument("--n-requests", type=int, default=48)
+    ap.add_argument("--devices", type=int, default=1,
+                    help="mesh size for the sharded smoke pass (1 = "
+                         "single-device, 2 = DP, 4 = DP×TP; needs "
+                         "XLA_FLAGS=--xla_force_host_platform_device_count "
+                         "or real devices)")
     args = ap.parse_args()
+    if args.devices > 1 and jax.device_count() < args.devices:
+        raise SystemExit(
+            f"--devices {args.devices} needs >= {args.devices} jax devices, "
+            f"found {jax.device_count()} (set XLA_FLAGS="
+            f"--xla_force_host_platform_device_count={args.devices})")
     if args.smoke or args.prefix_mix:
         os.makedirs(args.out, exist_ok=True)
         if args.smoke:
             smoke(args.out, seed=args.seed, chunk_tokens=args.chunk_tokens,
-                  pipeline=args.pipeline)
+                  pipeline=args.pipeline, devices=args.devices)
         if args.prefix_mix:
             prefix_mix(args.out, seed=args.seed, pipeline=args.pipeline)
     else:

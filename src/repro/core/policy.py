@@ -247,6 +247,12 @@ class AttentionBackend:
     build_metadata: Callable[[jax.Array, PolicyConfig], Any]
     update_metadata: Callable[[Any, jax.Array, jax.Array, PolicyConfig], Any]
     decode: Callable[[jax.Array, CacheView, "DecodePlan"], jax.Array]
+    # selection modes the backend supports when the plan carries a mesh
+    # sharding spec (kvcache/sharded.py); empty = single-device only.
+    # "exact" promises bit-identity to the single-device oracle on the
+    # TP×DP paged layout, "local" admits per-shard approximate selection
+    # (the sequence-sharded slab path)
+    supports_sharding: frozenset = frozenset()
     # a backend whose selection needs side-car metadata falls back to
     # dense attention when the view carries none (e.g. the skip-layer
     # front caches); metadata-less backends (slm, or third parties whose
@@ -260,6 +266,11 @@ class AttentionBackend:
     def supports_str(self) -> str:
         return ", ".join(f"{lo}×{pi}" for lo, pi in sorted(self.supports))
 
+    def sharding_str(self) -> str:
+        """The ``supports_sharding`` entry, rendered like the capability
+        matrix ('-' when the backend is single-device only)."""
+        return ", ".join(sorted(self.supports_sharding)) or "-"
+
 
 _REGISTRY: dict[str, AttentionBackend] = {}
 
@@ -271,6 +282,11 @@ def register_backend(backend: AttentionBackend, *, overwrite: bool = False) -> N
     bad = {c for c in backend.supports if c[0] not in LAYOUTS or c[1] not in PIPELINES}
     if bad:
         raise ValueError(f"backend {backend.name!r}: invalid capabilities {bad}")
+    bad_modes = set(backend.supports_sharding) - {"local", "exact"}
+    if bad_modes:
+        raise ValueError(
+            f"backend {backend.name!r}: invalid sharding modes {sorted(bad_modes)}"
+        )
     _REGISTRY[backend.name] = backend
     POLICIES = tuple(_REGISTRY)
 
@@ -303,6 +319,10 @@ class DecodePlan:
     policy: PolicyConfig
     layout: str = "slab"
     pipeline: str = "reference"
+    # mesh sharding spec (kvcache.sharded.ShardSpec) — None = single
+    # device.  Carried on the plan so decode_attention(q, view, plan)
+    # composes TP×DP with every backend without new entrypoints
+    shard: Any = None
 
     @property
     def backend(self) -> AttentionBackend:
@@ -316,6 +336,7 @@ class DecodePlan:
         layout: str | None = None,
         pipeline: str | None = None,
         capacity: int | None = None,
+        shard: Any = None,
     ) -> "DecodePlan":
         """Resolve and validate a plan.
 
@@ -345,7 +366,23 @@ class DecodePlan:
             check_block_size(
                 policy.block_size, policy.group if policy.kind == "fier" else 0
             )
-        plan = cls(policy, layout, pipeline)
+        if shard is not None:
+            # duck-typed (mesh/tp_axes/dp_axes/mode) so policy.py never
+            # imports kvcache.sharded — paged.py imports this module
+            axes = tuple(shard.tp_axes) + tuple(shard.dp_axes)
+            if layout != "paged":
+                raise UnsupportedPlanError(
+                    f"policy {policy.kind!r}: mesh-sharded decode over axes "
+                    f"{axes!r} requires layout='paged', got layout={layout!r}"
+                )
+            if shard.mode not in backend.supports_sharding:
+                raise UnsupportedPlanError(
+                    f"policy {policy.kind!r} does not support sharded decode "
+                    f"in mode={shard.mode!r} over mesh axes {axes!r}; backend "
+                    f"sharding modes: {backend.sharding_str()}; supported "
+                    f"layouts: {backend.supports_str()}"
+                )
+        plan = cls(policy, layout, pipeline, shard)
         if capacity is not None:
             plan.validate_capacity(capacity)
         return plan
@@ -372,7 +409,9 @@ class DecodePlan:
 
     def with_pipeline(self, pipeline: str) -> "DecodePlan":
         """Re-resolve (and re-validate) this plan with another pipeline."""
-        return DecodePlan.build(self.policy, layout=self.layout, pipeline=pipeline)
+        return DecodePlan.build(
+            self.policy, layout=self.layout, pipeline=pipeline, shard=self.shard
+        )
 
 
 # --------------------------------------------------------- metadata dispatch
@@ -554,6 +593,7 @@ register_backend(AttentionBackend(
     decode=lambda q, view, plan: _dense_decode(q, view),
     needs_metadata=False,
     skip_layers_fallback=False,  # decode *is* dense attention
+    supports_sharding=frozenset({"local", "exact"}),
 ))
 
 register_backend(AttentionBackend(
@@ -565,6 +605,7 @@ register_backend(AttentionBackend(
     build_metadata=_fier_build_metadata,
     update_metadata=_fier_update_metadata,
     decode=_fier_decode,
+    supports_sharding=frozenset({"local", "exact"}),
 ))
 
 register_backend(AttentionBackend(

@@ -11,6 +11,12 @@ from .paged import (
     paged_append_token_metadata,
 )
 from .prefix_tree import PrefixTree, TrieNode
+from .sharded import (
+    ShardSpec,
+    ShardedBlockAllocator,
+    shard_cache,
+    sharded_paged_decode_step,
+)
 
 __all__ = [
     "AllocatorAuditError",
@@ -19,6 +25,8 @@ __all__ = [
     "HostBlock",
     "HostOffloadTier",
     "PrefixTree",
+    "ShardSpec",
+    "ShardedBlockAllocator",
     "TrieNode",
     "append_kv",
     "append_token_metadata",
@@ -29,4 +37,6 @@ __all__ = [
     "init_paged_pool",
     "paged_append_kv",
     "paged_append_token_metadata",
+    "shard_cache",
+    "sharded_paged_decode_step",
 ]

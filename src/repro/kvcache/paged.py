@@ -328,6 +328,15 @@ class BlockAllocator:
         unregistered) — the trie-era spelling of the old ``_hash_of``."""
         return self.tree.key_of(bid)
 
+    def key_resident(self, key: int) -> bool:
+        """Whether ``key`` is registered in the device-tier prefix cache
+        (in use or parked).  The engine's eviction drain asks this before
+        offloading: under a sharded pool the same content key can be
+        registered on several shards, and a key still resident anywhere
+        on device must not be handed to the host tier (cross-tier
+        single-ownership)."""
+        return key in self.tree
+
     @property
     def usable(self) -> int:
         return self.n_blocks - 1

@@ -23,6 +23,7 @@ from repro.core import policy as core_policy
 from repro.core.policy import CacheView, DecodePlan, PolicyConfig
 from repro.kvcache import cache as kvcache
 from repro.kvcache import paged as kvcache_paged
+from repro.kvcache import sharded as kvcache_sharded
 
 from .layers import apply_rope, flash_attention, init_linear, wuse
 
@@ -44,6 +45,10 @@ class DistConfig:
     batch_axes: tuple[str, ...] = ()
     ep_axis: str | None = None
     fsdp_axes: tuple[str, ...] = ()
+    # mesh sharding spec for the *paged* pool (kvcache.sharded.ShardSpec):
+    # TP over KV heads × DP over slots.  Threaded into DecodePlan.build so
+    # the plan carries it into decode_attention; None = single device
+    shard: Any = None
 
 
 def seq_shard_constraint(h: jax.Array, dcfg: "DistConfig | None") -> jax.Array:
@@ -180,21 +185,29 @@ def decode_self_attention(
     if block_table is not None:
         if dcfg is not None and dcfg.seq_axes:
             raise ValueError(
-                "paged KV cache + sequence-sharded decode is not supported "
-                "yet (sharded pools are a planned follow-up)"
+                "paged KV cache + sequence-sharded decode is not supported; "
+                "shard the paged pool over the mesh instead "
+                "(Engine.build(mesh=...) → kvcache.sharded)"
             )
-        k_pool, v_pool = kvcache_paged.paged_append_kv(
-            layer_cache["k"], layer_cache["v"], k_new, v_new,
-            block_table, length,
-        )
-        if meta is not None and update_meta:
-            meta = kvcache_paged.paged_append_token_metadata(
-                meta, k_pool, block_table, length, pol
+        spec = getattr(plan, "shard", None)
+        if spec is not None:
+            out, k_pool, v_pool, meta = kvcache_sharded.sharded_paged_decode_step(
+                qh, k_new, v_new, layer_cache["k"], layer_cache["v"], meta,
+                block_table, length, pol, plan, spec, update_meta=update_meta,
             )
-        view = CacheView.paged(k_pool, v_pool, meta, block_table, length + 1)
-        out = core_policy.decode_attention(
-            qh, view, plan, layer=pol.skip_layers
-        )
+        else:
+            k_pool, v_pool = kvcache_paged.paged_append_kv(
+                layer_cache["k"], layer_cache["v"], k_new, v_new,
+                block_table, length,
+            )
+            if meta is not None and update_meta:
+                meta = kvcache_paged.paged_append_token_metadata(
+                    meta, k_pool, block_table, length, pol
+                )
+            view = CacheView.paged(k_pool, v_pool, meta, block_table, length + 1)
+            out = core_policy.decode_attention(
+                qh, view, plan, layer=pol.skip_layers
+            )
         new_cache = dict(layer_cache, k=k_pool, v=v_pool)
         if meta is not None:
             new_cache["meta"] = meta

@@ -69,14 +69,17 @@ def build(
 ) -> ModelBundle:
     pol = pol or PolicyConfig(kind="full")
     # resolve + validate the decode plan once (capability matrix, paged
-    # block-size rules); capacity-dependent checks re-run in init_cache
-    plan = DecodePlan.build(pol)
+    # block-size rules); capacity-dependent checks re-run in init_cache.
+    # A mesh sharding spec (dcfg.shard) rides on the plan — the front-scan
+    # full layers share the same sharded pool, so plan_full carries it too
+    shard = dcfg.shard if dcfg is not None and pol.layout == "paged" else None
+    plan = DecodePlan.build(pol, shard=shard)
     pol_full = PolicyConfig(
         kind="full", skip_layers=0,
         layout=pol.layout, block_size=pol.block_size,
         pool_blocks=pol.pool_blocks,
     )
-    plan_full = DecodePlan.build(pol_full)
+    plan_full = DecodePlan.build(pol_full, shard=shard)
     Vp = padded_vocab(cfg)
     cdt = _dtype(cfg.compute_dtype)
     pdt = _dtype(cfg.param_dtype)
@@ -294,6 +297,15 @@ def build(
                 lcv = lc["v"].at[phys, offs].set(vc[0])
                 Kl = kvcache_paged.gather_block_rows(lck, table_row[None])
                 Vl = kvcache_paged.gather_block_rows(lcv, table_row[None])
+                if shard is not None:
+                    # gathered from a mesh-sharded pool: replicate before
+                    # attention so the wo contraction reduces in the same
+                    # order as the single-device prefill (bit-identity)
+                    rep = jax.sharding.NamedSharding(
+                        shard.mesh, jax.sharding.PartitionSpec()
+                    )
+                    Kl = jax.lax.with_sharding_constraint(Kl, rep)
+                    Vl = jax.lax.with_sharding_constraint(Vl, rep)
             else:
                 lck = jax.lax.dynamic_update_slice(lc["k"], kc, (slot, start, 0, 0))
                 lcv = jax.lax.dynamic_update_slice(lc["v"], vc, (slot, start, 0, 0))

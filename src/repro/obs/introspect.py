@@ -184,10 +184,15 @@ class RetrievalIntrospector:
             )
             out.append(rec)
             self.records.append(rec)
-            self._h_overlap.observe(rec.oracle_overlap, slot=str(slot))
-            self._h_mass.observe(rec.recaptured_mass, slot=str(slot))
-            self._h_util.observe(rec.budget_utilization, slot=str(slot))
-            self._g_tau.set(rec.tau, slot=str(slot))
+            labels = {"slot": str(slot)}
+            if getattr(engine, "_n_dp", 1) > 1:
+                # mesh-sharded pool: stamp the slot's home DP shard so
+                # retrieval quality can be sliced per shard
+                labels["shard"] = str(engine.slot_shard(slot))
+            self._h_overlap.observe(rec.oracle_overlap, **labels)
+            self._h_mass.observe(rec.recaptured_mass, **labels)
+            self._h_util.observe(rec.budget_utilization, **labels)
+            self._g_tau.set(rec.tau, **labels)
             self._c_probes.inc()
             self.tracer.counter(
                 f"introspect/slot{slot}",

@@ -150,6 +150,8 @@ class Engine:
         offload_blocks: int = 0,
         prefix_ttl: float | None = None,
         recall_cost: float = 1.0,
+        shard: Any = None,
+        dcfg: Any = None,
     ):
         self.bundle = bundle
         # observability bundle (DESIGN.md §Observability): shared metrics
@@ -165,6 +167,19 @@ class Engine:
         self._rng = jax.random.PRNGKey(seed)
         pol = bundle.policy
         self.paged = bool(pol is not None and pol.layout == "paged")
+        # mesh sharding (DESIGN.md §Sharded serving): `shard` is the
+        # kvcache.sharded.ShardSpec the bundle's plan carries; `dcfg` is
+        # kept so budget-ladder bundle rebuilds preserve the sharding
+        self.shard = shard
+        self._dcfg = dcfg
+        self._n_dp = shard.n_dp if shard is not None else 1
+        if shard is not None and not self.paged:
+            raise ValueError("mesh-sharded serving requires layout='paged'")
+        if self._n_dp > 1 and n_slots % self._n_dp:
+            raise ValueError(
+                f"n_slots {n_slots} not divisible by {self._n_dp} DP shards"
+            )
+        self._slots_per_shard = n_slots // max(1, self._n_dp)
         if bundle.plan is not None:
             # fail fast at engine construction instead of deep inside the
             # first decode kernel (budget/sink/recent vs capacity)
@@ -210,8 +225,16 @@ class Engine:
                     f"block_size {self.block_size}"
                 )
             self.n_btab = capacity // self.block_size
-            self.pool_blocks = pol.pool_blocks or (n_slots * self.n_btab + 1)
-            if self.pool_blocks - 1 < self.n_btab:
+            # sharded pools reserve one null block per DP shard
+            self.pool_blocks = pol.pool_blocks or (
+                n_slots * self.n_btab + max(1, self._n_dp)
+            )
+            if self._n_dp > 1 and self.pool_blocks % self._n_dp:
+                raise ValueError(
+                    f"pool_blocks {self.pool_blocks} not divisible by "
+                    f"{self._n_dp} DP shards"
+                )
+            if self.pool_blocks // max(1, self._n_dp) - 1 < self.n_btab:
                 # undersized pool: a request can outgrow the pool before
                 # reaching capacity.  Previously a hard error ("a lone
                 # request could deadlock the scheduler") — the scheduler
@@ -233,9 +256,7 @@ class Engine:
             # them bit-identically at admission time
             self.prefix_ttl = prefix_ttl
             self.recall_cost = float(recall_cost)
-            self.allocator = BlockAllocator(
-                self.pool_blocks, self.block_size, park_ttl=prefix_ttl
-            )
+            self.allocator = self._make_allocator()
             self.offload: HostOffloadTier | None = (
                 HostOffloadTier(offload_blocks) if offload_blocks > 0 else None
             )
@@ -286,6 +307,43 @@ class Engine:
 
         return dec, jax.jit(_decode_active_impl, donate_argnums=self._donate)
 
+    # ------------------------------------------------------- shard routing
+    def _make_allocator(self):
+        """The host-side allocator for the current layout: one pool, or
+        one pool per DP shard behind the global-id wrapper."""
+        if self._n_dp > 1:
+            from repro.kvcache.sharded import ShardedBlockAllocator
+
+            return ShardedBlockAllocator(
+                self.pool_blocks, self.block_size, self._n_dp,
+                park_ttl=self.prefix_ttl,
+            )
+        return BlockAllocator(
+            self.pool_blocks, self.block_size, park_ttl=self.prefix_ttl
+        )
+
+    def slot_shard(self, slot: int) -> int:
+        """Home DP shard of ``slot`` (0 on unsharded engines).  Slots
+        split into contiguous per-shard ranges matching the DP partition
+        of the cache's slot axis, so a slot's blocks always come from —
+        and its decode reads always stay on — one device group."""
+        return slot // self._slots_per_shard if self._n_dp > 1 else 0
+
+    def _alloc_block(self, slot: int) -> int | None:
+        if self._n_dp > 1:
+            return self.allocator.alloc(self.slot_shard(slot))
+        return self.allocator.alloc()
+
+    def _lookup_block(self, key: int, slot: int) -> int | None:
+        if self._n_dp > 1:
+            return self.allocator.lookup(key, self.slot_shard(slot))
+        return self.allocator.lookup(key)
+
+    def _peek_blocks(self, keys, slot: int) -> tuple[int, int]:
+        if self._n_dp > 1:
+            return self.allocator.peek(keys, self.slot_shard(slot))
+        return self.allocator.peek(keys)
+
     @classmethod
     def build(
         cls,
@@ -304,12 +362,21 @@ class Engine:
         offload_blocks: int = 0,
         prefix_ttl: float | None = None,
         recall_cost: float = 1.0,
+        mesh=None,
+        shard_mode: str = "exact",
         **build_kwargs,
     ) -> "Engine":
         """Build bundle + engine with the serving defaults: when ``policy``
         is None the one-pass FIER fast path (``serving_policy()``) is
         used, with the budget clamped to ``capacity`` (a budget larger
         than the cache would otherwise fail plan validation).
+
+        ``mesh=`` (DESIGN.md §Sharded serving) shards the paged pool over
+        the mesh: axes named ``'model'`` run KV-head tensor parallelism,
+        axes named ``'data'`` run slot/batch data parallelism.  The spec
+        rides on the ``DecodePlan`` (validated against each backend's
+        ``supports_sharding``) and the engine's allocator becomes
+        per-shard (``kvcache.sharded.ShardedBlockAllocator``).
 
         ``layout='paged'`` switches the cache to the block-pool layout
         (``pool_blocks`` physical blocks of ``block_size`` tokens, prefix
@@ -348,12 +415,48 @@ class Engine:
                 pol, layout=layout, block_size=block_size,
                 pool_blocks=pool_blocks,
             )
+        spec = None
+        if mesh is not None:
+            from repro.kvcache.sharded import ShardSpec
+            from repro.models.attention import DistConfig
+
+            if pol.layout != "paged":
+                raise ValueError(
+                    "Engine.build(mesh=...) shards the paged pool; pass "
+                    "layout='paged'"
+                )
+            names = tuple(mesh.axis_names)
+            unknown = [a for a in names if a not in ("model", "data")]
+            if unknown:
+                raise ValueError(
+                    f"mesh axes must be named 'model' (TP over KV heads) "
+                    f"or 'data' (DP over slots); got {unknown}"
+                )
+            spec = ShardSpec(
+                mesh=mesh,
+                tp_axes=tuple(a for a in names if a == "model"),
+                dp_axes=tuple(a for a in names if a == "data"),
+                mode=shard_mode,
+            )
+            if cfg.n_kv_heads % spec.n_tp:
+                raise ValueError(
+                    f"n_kv_heads {cfg.n_kv_heads} not divisible by TP "
+                    f"degree {spec.n_tp} (mesh axes "
+                    f"{spec.tp_axes!r})"
+                )
+            # mesh=None on the DistConfig: the paged shard path carries
+            # its mesh on the spec; DistConfig.mesh would additionally
+            # arm the slab sequence-sharding machinery (activation
+            # constraints over the 'model' axis), whose partitioned
+            # prefill reductions are not bit-identical to the oracle
+            build_kwargs["dcfg"] = DistConfig(shard=spec)
         bundle = build_model(cfg, pol, **build_kwargs)
         return cls(
             bundle, n_slots=n_slots, capacity=capacity, sampling=sampling,
             degrade_floor=degrade_floor, restore_free_frac=restore_free_frac,
             obs=obs, offload_blocks=offload_blocks, prefix_ttl=prefix_ttl,
-            recall_cost=recall_cost,
+            recall_cost=recall_cost, shard=spec,
+            dcfg=build_kwargs.get("dcfg"),
         )
 
     # ------------------------------------------------------------ lifecycle
@@ -365,9 +468,7 @@ class Engine:
             # the pool restarts empty: reset the allocator and drop the
             # prompt caches (their contents describe the old pool / the
             # params used with it)
-            self.allocator = BlockAllocator(
-                self.pool_blocks, self.block_size, park_ttl=self.prefix_ttl
-            )
+            self.allocator = self._make_allocator()
             if self.offload is not None:
                 # the host tier restarts empty too: sessions must not see
                 # KV produced under another session's params/budget
@@ -378,7 +479,12 @@ class Engine:
             self._recall_units = 0.0
             self._seq = {}
             self._prompt_logits = OrderedDict()
-        return self.bundle.init_cache(self.n_slots, self.capacity, length)
+        cache = self.bundle.init_cache(self.n_slots, self.capacity, length)
+        if self.shard is not None:
+            from repro.kvcache.sharded import shard_cache
+
+            cache = shard_cache(cache, self.shard)
+        return cache
 
     def prefill_batch(self, params, batch):
         """Whole-batch prefill (offline / static batching path)."""
@@ -428,6 +534,11 @@ class Engine:
         def put(pool, slab):
             # pool [L, N, pb, ...]; slab [L, 1, n_btab·pb, ...]
             L, _, pb = pool.shape[:3]
+            if L == 0:
+                # zero-layer stack (e.g. the "front" pool under
+                # kind="full", where every layer is a rest layer) — the
+                # -1 reshape below would divide by zero
+                return pool
             blocks = slab.reshape(L, -1, pb, *pool.shape[3:])
             return pool.at[:, ids].set(blocks.astype(pool.dtype))
 
@@ -523,6 +634,13 @@ class Engine:
         if self.offload is None:
             return cache
         for ev in self.allocator.take_evicted():
+            if self.allocator.key_resident(ev.key):
+                # sharded pools can register the same content key on
+                # several DP shards; a key still resident on *any* shard
+                # must not move to the host tier (cross-tier
+                # single-ownership — audit checks host ∩ device = ∅).
+                # Conservative: the other shard's copy serves future hits
+                continue
             payload = to_host(self._read_block(cache, jnp.int32(ev.bid)))
             self.offload.save(ev.key, ev.parent_key, payload, reason=ev.reason)
             if self.obs.enabled:
@@ -543,7 +661,7 @@ class Engine:
             cache = self._drain_evictions(cache)
         return n, cache
 
-    def _recall_extension(self, cache, keys, blocks, L):
+    def _recall_extension(self, cache, keys, blocks, L, slot):
         """Extend a device prefix match through the host tier: allocate a
         fresh device block per resident host key (capped so the final
         chunk still computes ≥ 1 token), stream the payloads back with
@@ -561,7 +679,7 @@ class Engine:
             return cache
         fresh: list[int] = []
         for _ in ext:
-            bid = self.allocator.alloc()
+            bid = self._alloc_block(slot)
             if bid is None:
                 break
             fresh.append(bid)
@@ -626,10 +744,10 @@ class Engine:
         # empty prompt: no blocks, no hash chain — nothing to replay
         if not keys or keys[-1] not in self._prompt_logits:
             return None, cache
-        n_hit, _ = self.allocator.peek(keys)
+        n_hit, _ = self._peek_blocks(keys, slot)
         if n_hit < nb:
             return None, cache
-        blocks = [self.allocator.lookup(key) for key in keys]
+        blocks = [self._lookup_block(key, slot) for key in keys]
         self.prefix_hits += 1
         self._prompt_logits.move_to_end(keys[-1])
         row = np.zeros((self.n_btab,), np.int32)
@@ -656,7 +774,7 @@ class Engine:
         # longest shared prefix: take a reference on every hit block
         blocks: list[int] = []
         for key in keys:
-            bid = self.allocator.lookup(key)
+            bid = self._lookup_block(key, slot)
             if bid is None:
                 break
             blocks.append(bid)
@@ -665,7 +783,7 @@ class Engine:
         row = np.zeros((self.n_btab,), np.int32)
 
         for _ in range(n_hit, nb):
-            bid = self.allocator.alloc()
+            bid = self._alloc_block(slot)
             if bid is None:
                 for b in blocks:
                     self.allocator.free(b)
@@ -784,7 +902,7 @@ class Engine:
         L = len(toks)
         blocks: list[int] = []
         for key in keys:
-            bid = self.allocator.lookup(key)
+            bid = self._lookup_block(key, slot)
             if bid is None:
                 break
             blocks.append(bid)
@@ -792,7 +910,7 @@ class Engine:
             self.allocator.free(blocks.pop())
         # where the device trie runs out, the host tier may extend the
         # match: recalled blocks push the resume point further right
-        cache = self._recall_extension(cache, keys, blocks, L)
+        cache = self._recall_extension(cache, keys, blocks, L, slot)
         resume = len(blocks) * self.block_size
         if resume:
             self.prefix_partial_hits += 1
@@ -833,7 +951,7 @@ class Engine:
             nb_needed = -(-end // self.block_size)
             fresh: list[int] = []
             while len(seq.blocks) + len(fresh) < nb_needed:
-                bid = self.allocator.alloc()
+                bid = self._alloc_block(slot)
                 if bid is None:
                     for b in fresh:
                         self.allocator.free(b)
@@ -894,7 +1012,7 @@ class Engine:
             return True, cache
         j, off = divmod(pos, self.block_size)
         if off == 0:
-            bid = self.allocator.alloc()
+            bid = self._alloc_block(slot)
             if bid is None:
                 return False, cache
             # recycled blocks carry stale K/V and group stats; the append-
@@ -909,7 +1027,7 @@ class Engine:
         else:
             b = seq.blocks[j]
             if self.allocator.ref[b] > 1:
-                bid = self.allocator.alloc()
+                bid = self._alloc_block(slot)
                 if bid is None:
                     return False, cache
                 cache = self._drain_evictions(cache)
@@ -999,6 +1117,11 @@ class Engine:
         m = self.obs.metrics
         if self.paged:
             m.set_gauges(self.allocator.stats())
+            if self._n_dp > 1:
+                # per-shard series ride alongside the unlabeled aggregate
+                # (existing consumers keep reading the label-free series)
+                for i, st in enumerate(self.allocator.shard_stats()):
+                    m.set_gauges(st, shard=str(i))
             if self.offload is not None:
                 m.set_gauges(self.offload.stats())
         m.set_gauges(self.engine_stats())
@@ -1025,8 +1148,14 @@ class Engine:
             from repro.models import build_model
 
             pol2 = dataclasses.replace(self.bundle.policy, budget=budget)
-            DecodePlan.build(pol2, capacity=self.capacity)
-            bundle2 = build_model(self.bundle.cfg, pol2)
+            DecodePlan.build(
+                pol2, capacity=self.capacity,
+                shard=self.shard if pol2.layout == "paged" else None,
+            )
+            # dcfg rides along so a degraded bundle keeps the mesh
+            # sharding (dropping it would silently fall back to the
+            # single-device paged path on a sharded cache)
+            bundle2 = build_model(self.bundle.cfg, pol2, self._dcfg)
             fns = self._budget_fns[budget] = self._make_decode_fns(bundle2)
         self._decode, self._decode_active = fns
         self.current_budget = budget

@@ -177,7 +177,19 @@ def main() -> int:
                   f"run with --update-baseline to create it", file=sys.stderr)
             regressions.append(f"{name}: missing baseline")
             continue
-        regressions += compare(load(base_path), load(p), name)
+        base_doc, new_doc = load(base_path), load(p)
+        b_dev = (base_doc.get("config") or {}).get("devices")
+        n_dev = (new_doc.get("config") or {}).get("devices")
+        if b_dev != n_dev and None not in (b_dev, n_dev):
+            # a sharded run is a different workload, not a regression of
+            # the single-device one: shard counts are distinct baselines
+            # (metrics snapshots carry no config and never hit this)
+            print(f"\n== {name}: baseline ran with devices={b_dev}, new "
+                  f"with devices={n_dev} — distinct baselines, gating "
+                  f"skipped (bless a matching baseline with "
+                  f"--update-baseline)")
+            continue
+        regressions += compare(base_doc, new_doc, name)
 
     print()
     if regressions:

@@ -69,6 +69,25 @@ def report_trace(path: str, doc: dict) -> None:
             print(f"   t={_fmt(e.ts):>10s} {e.name:16s} {args}")
 
 
+def _shard_rollup(snap: Snapshot) -> list[tuple[str, str, list[float]]]:
+    """Group ``shard``-labeled series by (name, remaining labels): the
+    per-shard ``pool_*`` gauges and introspection histograms a mesh-
+    sharded engine emits.  Returns (display name, unit, shard values)."""
+    groups: dict[tuple, list[float]] = {}
+    units: dict[tuple, str] = {}
+    for s in snap.series:
+        labels = dict(s.labels)
+        if labels.pop("shard", None) is None:
+            continue
+        rest = "" if not labels else (
+            "{" + ",".join(f'{k}="{v}"' for k, v in sorted(labels.items()))
+            + "}")
+        key = (s.name + rest,)
+        groups.setdefault(key, []).append(s.value)
+        units[key] = s.unit
+    return [(k[0], units[k], vs) for k, vs in sorted(groups.items())]
+
+
 def report_snapshot(path: str, doc: dict) -> None:
     snap = Snapshot.from_json(doc)
     print(f"\n== {path} ({len(snap.series)} series)")
@@ -77,6 +96,17 @@ def report_snapshot(path: str, doc: dict) -> None:
         flag = "  [gated]" if s.gate else ""
         print(f"   {s.full_name:44s} {s.kind:10s} {_fmt(s.value):>14s} "
               f"{s.unit}{flag}")
+    rollup = _shard_rollup(snap)
+    if rollup:
+        # cluster-wide view of the per-shard series: sum is the global
+        # level (e.g. total blocks in use), max flags the hottest shard
+        print("-- across-shard rollup")
+        print(f"   {'series':44s} {'shards':>6s} {'sum':>12s} "
+              f"{'max':>12s} {'mean':>12s}")
+        for name, unit, vs in rollup:
+            print(f"   {name:44s} {len(vs):>6d} {_fmt(sum(vs)):>12s} "
+                  f"{_fmt(max(vs)):>12s} "
+                  f"{_fmt(sum(vs) / len(vs)):>12s}  {unit}")
 
 
 def main() -> int:
